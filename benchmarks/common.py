@@ -1,0 +1,49 @@
+"""Shared benchmark helpers: workload replay with strategy overrides and
+CSV row plumbing (``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def cdf_points(values, qs=(5, 10, 25, 50, 75, 90, 95)) -> Dict[int, float]:
+    return {q: float(np.percentile(values, q)) for q in qs}
+
+
+def replay(bridge, workload, service_type, params=None, queries=None):
+    """Replay queries through a bridge; returns per-query records."""
+    from repro.core import ProxyRequest
+    recs = []
+    queries = queries if queries is not None else workload.queries
+    for q in queries:
+        r = bridge.request(ProxyRequest(prompt=q.text, conversation=q.conversation,
+                                        service_type=service_type, query=q,
+                                        params=params or {}))
+        u = r.metadata.usage
+        recs.append({
+            "qid": q.qid, "quality": r.true_quality,
+            "cost": u.cost, "latency": u.latency,
+            "in_tokens": u.input_tokens, "out_tokens": u.output_tokens,
+            "extra_in": u.extra_llm_input_tokens,
+            "model": r.metadata.model_used,
+            "models": r.metadata.models_consulted,
+            "cache_hit": r.metadata.cache_hit,
+            "context_k": r.metadata.context_k,
+            "decision_latency": r.metadata.context_decision_latency,
+        })
+    return recs
+
+
+def agg(recs, field):
+    vals = [r[field] for r in recs if r[field] is not None]
+    return float(np.sum(vals)) if field in ("cost", "in_tokens") else float(np.mean(vals))

@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle — correctness
+margin + CPU call time.  (TPU wall-clock is out of scope on this host; the
+roofline table covers the production performance story.)"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels.cache_topk import ops as topk_ops
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.flash_attention import ops as fa_ops
+
+
+def _time(fn, n=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    db = jnp.asarray(rng.normal(size=(2048, 64)), jnp.float32)
+    s_ref, i_ref = topk_ops.similarity_topk(q, db, 8, use_pallas=False)
+    s_pl, i_pl = topk_ops.similarity_topk(q, db, 8, use_pallas=True)
+    us = _time(lambda: topk_ops.similarity_topk(q, db, 8, use_pallas=False))
+    rows.append(("kernel.cache_topk.64x2048xd64k8", us,
+                 f"maxerr={np.abs(s_ref - s_pl).max():.1e} idx_match={np.array_equal(i_ref, i_pl)}"))
+
+    qa = jax.random.normal(jax.random.PRNGKey(0), (2, 256, 8, 64))
+    ka = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 2, 64))
+    va = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 2, 64))
+    o_ref = fa_ops.flash_attention(qa, ka, va, use_pallas=False)
+    o_pl = fa_ops.flash_attention(qa, ka, va, use_pallas=True)
+    us = _time(lambda: fa_ops.flash_attention(qa, ka, va, use_pallas=False))
+    rows.append(("kernel.flash_attention.B2S256H8", us,
+                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e}"))
+
+    qd = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 64))
+    kd = jax.random.normal(jax.random.PRNGKey(4), (4, 2048, 2, 64))
+    vd = jax.random.normal(jax.random.PRNGKey(5), (4, 2048, 2, 64))
+    pos = jnp.asarray([100, 500, 1000, 2000], jnp.int32)
+    o_ref = da_ops.decode_attention(qd, kd, vd, pos, use_pallas=False)
+    o_pl = da_ops.decode_attention(qd, kd, vd, pos, use_pallas=True)
+    us = _time(lambda: da_ops.decode_attention(qd, kd, vd, pos, use_pallas=False))
+    rows.append(("kernel.decode_attention.B4T2048", us,
+                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e}"))
+    return rows

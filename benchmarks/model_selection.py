@@ -1,0 +1,118 @@
+"""Paper Fig 4a/4b (quality) + Fig 5a/5b (cost/time): verification-based
+model selection vs M1-only / M2-only / random routing.
+
+Claims validated:
+* old-generation models: verification routes >60% of prompts to M2, beats
+  M1-only quality, costs ~40% less than M2-only (Fig 5a), sits between
+  M1-only and M2-only in time (~5x M1, Fig 5b);
+* new-generation models: only ~25% routed to M2 (cheap models got better),
+  quality gap nearly closed (Fig 4b);
+* random routing at the matched probability is comparable, but the right p
+  isn't knowable a priori (p=0.1 is worse).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import (ProxyRequest, ServiceType, Workload, WorkloadConfig,
+                        build_bridge)
+
+M1, M2 = "qwen2-1.5b", "grok-1-314b"
+
+
+def _replay_selector(bridge, wl, threshold=8.0):
+    recs = []
+    for q in wl.queries:
+        r = bridge.request(ProxyRequest(
+            prompt=q.text, conversation=q.conversation, query=q,
+            service_type=ServiceType.MODEL_SELECTOR,
+            params={"m1": M1, "m2": M2, "verifier": "xlstm-350m",
+                    "threshold": threshold, "context_k": 5}))
+        recs.append(r)
+    return recs
+
+
+def _replay_fixed(bridge, wl, model, p_big=None, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for q in wl.queries:
+        m = model
+        if p_big is not None:
+            m = M2 if rng.random() < p_big else M1
+        r = bridge.request(ProxyRequest(
+            prompt=q.text, conversation=q.conversation, query=q,
+            service_type=ServiceType.FIXED,
+            params={"model": m, "context_k": 5}))
+        recs.append(r)
+    return recs
+
+
+def _stats(recs):
+    qual = [r.true_quality for r in recs if r.true_quality is not None]
+    cost = sum(r.metadata.usage.cost for r in recs)
+    lat = sum(r.metadata.usage.latency for r in recs)
+    return np.mean(qual), np.percentile(qual, 10), cost, lat
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    wl = Workload(WorkloadConfig(n_conversations=10, turns_per_conversation=25,
+                                 seed=5))
+    for gen in ("old", "new"):
+        bridge = build_bridge(workload=wl, seed=0, generation=gen)
+        if gen == "old":
+            # GPT-3.5-era cheap model: degrade M1 and the verifier
+            bridge.pool.get(M1).generation_bonus = -0.30
+            bridge.pool.get("xlstm-350m").generation_bonus = -0.30
+
+        sel, us = timed(_replay_selector, bridge, wl)
+        routed_m2 = np.mean([M2 in r.metadata.models_consulted for r in sel])
+        sq, sq10, sc, sl = _stats(sel)
+
+        b1 = build_bridge(workload=wl, seed=0, generation=gen)
+        if gen == "old":
+            b1.pool.get(M1).generation_bonus = -0.30
+        m1 = _replay_fixed(b1, wl, M1)
+        m1q, m1q10, m1c, m1l = _stats(m1)
+        b2 = build_bridge(workload=wl, seed=0, generation=gen)
+        m2 = _replay_fixed(b2, wl, M2)
+        m2q, m2q10, m2c, m2l = _stats(m2)
+
+        p_match = float(routed_m2)
+        br = build_bridge(workload=wl, seed=0, generation=gen)
+        if gen == "old":
+            br.pool.get(M1).generation_bonus = -0.30
+        rnd = _replay_fixed(br, wl, None, p_big=p_match)
+        rq, rq10, rc, rl = _stats(rnd)
+        br2 = build_bridge(workload=wl, seed=0, generation=gen)
+        if gen == "old":
+            br2.pool.get(M1).generation_bonus = -0.30
+        rnd10 = _replay_fixed(br2, wl, None, p_big=0.1)
+        r10q, r10q10, r10c, _ = _stats(rnd10)
+
+        tag = f"fig4{'a' if gen == 'old' else 'b'}.{gen}"
+        rows += [
+            (f"{tag}.verification.quality", us / len(wl.queries),
+             f"mean={sq:.2f} p10={sq10:.2f} routed_m2={routed_m2:.0%}"),
+            (f"{tag}.m1_only.quality", 0.0, f"mean={m1q:.2f} p10={m1q10:.2f}"),
+            (f"{tag}.m2_only.quality", 0.0, f"mean={m2q:.2f} p10={m2q10:.2f}"),
+            (f"{tag}.random_p{p_match:.2f}.quality", 0.0, f"mean={rq:.2f}"),
+            (f"{tag}.random_p0.1.quality", 0.0, f"mean={r10q:.2f} p10={r10q10:.2f}"),
+        ]
+        if gen == "old":
+            rows += [
+                ("fig5a.cost_vs_m2_only", 0.0,
+                 f"{sc / m2c:.2f} (paper ~0.60: 40% cheaper)"),
+                ("fig5b.time_vs_m1_only", 0.0,
+                 f"{sl / m1l:.1f}x (paper ~5x)"),
+                ("fig5b.time_vs_m2_only", 0.0,
+                 f"{sl / m2l:.2f} (<1 means faster than M2-only)"),
+            ]
+        else:
+            rows.append(("fig4b.routed_fraction_new", 0.0,
+                         f"{routed_m2:.0%} (paper ~25%)"))
+    return rows

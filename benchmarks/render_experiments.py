@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run JSON
+records.  Usage: PYTHONPATH=src python -m benchmarks.render_experiments
+(prints markdown to stdout)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["llava-next-mistral-7b", "gemma-2b", "llama4-maverick-400b-a17b",
+         "gemma3-27b", "grok-1-314b", "qwen2-1.5b", "zamba2-7b",
+         "granite-3-2b", "xlstm-350m", "whisper-base"]
+
+
+def load():
+    recs = {}
+    for p in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | compile | args GiB/dev | temp GiB/dev | "
+          "flops/dev | bytes/dev | coll bytes/dev | top collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                print(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | skip | | | | | | "
+                      f"{r['reason'][:40]}… |")
+                continue
+            if "error" in r:
+                print(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            chips = r["chips"]
+            coll = sorted(r["collective_by_op"].items(), key=lambda kv: -kv[1])
+            tops = "; ".join(f"{k}={v/2**30:.1f}GiB" for k, v in coll[:2])
+            print(f"| {arch} | {shape} | {r['compile_seconds']:.0f}s "
+                  f"| {fmt_bytes(r['mem_args'])} | {fmt_bytes(r['mem_temp'])} "
+                  f"| {r['flops_global']/chips:.2e} "
+                  f"| {r['bytes_global']/chips:.2e} "
+                  f"| {r['collective_bytes_global']/chips:.2e} | {tops} |")
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    print(f"\n### Roofline terms (single pod, {mesh}, per step, seconds)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS | useful | MFU@roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None or r.get("skipped") or "error" in r:
+                continue
+            print(f"| {arch} | {shape} | {r['t_compute']*1e3:.1f}ms "
+                  f"| {r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms "
+                  f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+                  f"| {r['useful_ratio']:.2f} | {r['mfu']*100:.2f}% |")
+
+
+def main():
+    recs = load()
+    n = len(recs)
+    ok = sum(1 for r in recs.values() if not r.get("skipped") and "error" not in r)
+    sk = sum(1 for r in recs.values() if r.get("skipped"))
+    er = sum(1 for r in recs.values() if "error" in r)
+    print(f"records: {n} (ok={ok} skipped={sk} errors={er})")
+    print("\n## §Dry-run")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        dryrun_table(recs, mesh)
+    print("\n## §Roofline")
+    roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

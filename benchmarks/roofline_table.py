@@ -1,0 +1,49 @@
+"""§Roofline summary: read the dry-run JSON records and emit the per-
+(arch x shape x mesh) three-term table rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records()
+    if not recs:
+        return [("roofline.missing", 0.0,
+                 f"no dry-run records in {DRYRUN_DIR}; run "
+                 "python -m repro.launch.dryrun --all --both-meshes")]
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        tag = f"{r.get('arch')}.{r.get('shape')}.{r.get('mesh')}"
+        if r.get("skipped"):
+            n_skip += 1
+            rows.append((f"roofline.skip.{tag}", 0.0, "documented skip"))
+            continue
+        if "error" in r:
+            n_err += 1
+            rows.append((f"roofline.ERROR.{tag}", 0.0, r["error"].splitlines()[-1][:80]))
+            continue
+        n_ok += 1
+        rows.append((
+            f"roofline.{tag}", r.get("compile_seconds", 0) * 1e6,
+            f"compute={r['t_compute']*1e3:.2f}ms memory={r['t_memory']*1e3:.2f}ms "
+            f"collective={r['t_collective']*1e3:.2f}ms dominant={r['dominant']} "
+            f"useful={r['useful_ratio']:.2f} mfu={r['mfu']:.3f}"))
+    rows.append(("roofline.summary", 0.0,
+                 f"ok={n_ok} skipped={n_skip} errors={n_err}"))
+    return rows

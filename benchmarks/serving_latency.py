@@ -1,0 +1,54 @@
+"""Paper §5.1 latency table: big vs small model response latencies.
+
+Two layers, reported separately (DESIGN.md §9):
+* modelled production latency per pool model (roofline-derived per-token
+  time on the serving slice + lognormal tail) — mean and p99.9, matching the
+  paper's 3.8s (78s) big / 1.2s (15s) small observation;
+* measured CPU smoke-scale microbenchmarks of the real engine decode step
+  (reduced configs) — real code path, not the production numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import build_bridge, Workload, WorkloadConfig
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    wl = Workload(WorkloadConfig(n_conversations=2, turns_per_conversation=5))
+    bridge = build_bridge(workload=wl, seed=0)
+    rng = np.random.default_rng(0)
+    for m in sorted(bridge.pool.list(), key=lambda m: m.active_params):
+        lats = [m.usage_for(40, 90, rng=rng).latency for _ in range(4000)]
+        rows.append((f"latency.model.{m.name}", 0.0,
+                     f"mean={np.mean(lats):.2f}s p99.9={np.percentile(lats, 99.9):.1f}s "
+                     f"(active={m.active_params/1e9:.1f}B)"))
+
+    # real engine decode-step microbench (reduced configs, CPU)
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models import init_model
+    from repro.serving.engine import Engine
+    for arch in ("qwen2-1.5b", "gemma3-27b", "zamba2-7b", "xlstm-350m"):
+        cfg = configs.get_reduced(arch)
+        eng = Engine(cfg, init_model(cfg, jax.random.PRNGKey(0)), max_len=64)
+        cache = eng.new_cache(2, 64)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        pos = jnp.zeros((2, 1), jnp.int32)
+        logits, cache = eng.decode(tok, pos, cache)     # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        n = 20
+        for i in range(n):
+            logits, cache = eng.decode(tok, pos + i + 1, cache)
+        jax.block_until_ready(logits)
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((f"latency.cpu_smoke.decode_step.{arch}", us,
+                     "reduced-config real engine step"))
+    return rows

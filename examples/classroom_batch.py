@@ -1,0 +1,70 @@
+"""Classroom deployment (paper §5.2): usage-based service types.
+
+    PYTHONPATH=src python examples/classroom_batch.py
+
+* pool restricted to a curated cheap-model subset (the paper's GPT4o-mini /
+  Phi-3 / Haiku / LLaMA-3 analogue) via pool filters;
+* per-student token quotas enforced at the proxy;
+* RAG-style workflow: course documents delegated-PUT into the semantic
+  cache (chunking + typed keys by the cache-LLM), then answered via
+  smart_cache;
+* a batch-mode sweep comparing models on the same prompts (§5.2's
+  "benchmarking" usage pattern).
+"""
+import numpy as np
+
+from repro.core import (CachedType, ProxyRequest, ServiceType, Workload,
+                        WorkloadConfig, build_bridge)
+
+wl = Workload(WorkloadConfig(n_conversations=3, turns_per_conversation=8, seed=42))
+bridge = build_bridge(workload=wl)
+
+# --- curated cheap pool (course policy) -------------------------------------
+allowed = [m.name for m in bridge.pool.filter(max_price_in=0.05)]
+print("course-approved models:", allowed)
+
+# --- upload course material (delegated PUT: cache-LLM chunks + keys) --------
+syllabus = (
+    "Week 1 covers distributed systems basics. Consistency models matter.\n\n"
+    "Week 2 covers consensus. Paxos and Raft are the core algorithms; "
+    "leader election and log replication are the key mechanisms.\n\n"
+    "Week 3 covers MapReduce and dataflow engines. Stragglers are mitigated "
+    "with speculative execution."
+)
+ids = bridge.cache.delegated_put(syllabus, meta={"doc": "syllabus"})
+types = {e.key_type.value for e in bridge.cache._entries}
+print(f"syllabus -> {len(ids)} cache entries, key types: {sorted(types)}")
+
+# --- per-student quotas -------------------------------------------------------
+QUOTA = 5_000
+spent = {f"student{i}": 0 for i in range(3)}
+for i, q in enumerate(wl.queries[:12]):
+    user = f"student{i % 3}"
+    if spent[user] > QUOTA:
+        print(f"[{user}] quota exhausted — request rejected")
+        continue
+    r = bridge.request(ProxyRequest(
+        prompt=q.text, user=user, conversation=user, query=q,
+        service_type=ServiceType.FIXED,
+        params={"model": allowed[0], "context_k": 1}))
+    u = r.metadata.usage
+    spent[user] += u.input_tokens + u.output_tokens
+print("token spend:", spent)
+
+# --- RAG query through smart_cache -------------------------------------------
+r = bridge.request(ProxyRequest(prompt="what is raft", user="student0",
+                                conversation="student0",
+                                service_type=ServiceType.SMART_CACHE))
+print(f"RAG answer (cache_hit={r.metadata.cache_hit}, "
+      f"types={r.metadata.cache_types}): {r.text[:64]}")
+
+# --- batch-mode model comparison (the future interface §5.2 motivates) ------
+prompt_q = wl.queries[0]
+print("\nbatch-mode sweep:")
+for name in allowed[:3] + ["gemma3-27b"]:
+    r = bridge.request(ProxyRequest(
+        prompt=prompt_q.text, user="student1", conversation="bench",
+        query=prompt_q, update_context=False,
+        service_type=ServiceType.FIXED, params={"model": name, "context_k": 0}))
+    print(f"  {name:26s} cost={r.metadata.usage.cost:.4f} "
+          f"quality={r.true_quality and round(r.true_quality, 1)}")

@@ -1,0 +1,47 @@
+"""Quickstart: the LLMBridge public API in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the default bridge (model pool over the assigned architectures,
+semantic cache, context manager, judge), sends a few prompts under different
+service types, inspects the transparency metadata, and regenerates.
+"""
+from repro.core import ProxyRequest, ServiceType, Workload, WorkloadConfig, build_bridge
+
+# a small planted workload (stands in for live WhatsApp traffic — DESIGN.md §2)
+workload = Workload(WorkloadConfig(n_conversations=1, turns_per_conversation=6))
+bridge = build_bridge(workload=workload)
+
+q0, q1 = workload.queries[0], workload.queries[1]
+
+# 1) delegate everything: verification-based model selection (paper §3.3)
+resp = bridge.request(ProxyRequest(
+    prompt=q0.text, user="alice", conversation="demo",
+    service_type=ServiceType.MODEL_SELECTOR, query=q0))
+md = resp.metadata
+print(f"Q: {q0.text}")
+print(f"A: {resp.text[:70]}")
+print(f"   model={md.model_used} consulted={md.models_consulted}")
+print(f"   verifier_score={md.verifier_score} context_k={md.context_k}")
+print(f"   cost={md.usage.cost:.4f} latency~{md.usage.latency:.2f}s")
+
+# 2) not satisfied? iterate — same service type escalates quality (§3.2)
+better = bridge.regenerate(resp)
+print(f"regenerated with {better.metadata.model_used} "
+      f"(cost={better.metadata.usage.cost:.4f})")
+
+# 3) smart context: a low-cost model decides whether history is needed (§3.4)
+resp2 = bridge.request(ProxyRequest(
+    prompt=q1.text, user="alice", conversation="demo",
+    service_type=ServiceType.SMART_CONTEXT, query=q1))
+print(f"smart_context kept k={resp2.metadata.context_k} messages "
+      f"({resp2.metadata.context_strategy})")
+
+# 4) populate the semantic cache and answer from it (§3.5)
+bridge.cache.put("Use data structures like B-trees & Tries",
+                 [("prompt", "How do I speed up my cache?"),
+                  ("response", "Use data structures like B-trees & Tries")])
+hits = bridge.cache.get("Give me examples of popular data structures?",
+                        filters=[("response", 0.0, 2)])
+print(f"cache GET by response-key similarity: {len(hits)} hit(s), "
+      f"top score={hits[0].score:.2f}" if hits else "cache miss")

@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned architectures as selectable configs.
+
+``get(arch_id)`` / ``get_reduced(arch_id)`` resolve an architecture id (as in
+``--arch <id>``) to a ModelConfig.  ``LONG_CONTEXT`` records which archs run
+the long_500k shape (sub-quadratic families + sliding-window dense); the rest
+skip it per DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "grok-1-314b": "repro.configs.grok_1",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "whisper-base": "repro.configs.whisper_base",
+}
+
+ARCH_IDS: List[str] = list(_MODULES.keys())
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get(arch_id: str, dtype: str = "bfloat16") -> ModelConfig:
+    return _mod(arch_id).config(dtype=dtype)
+
+
+def get_reduced(arch_id: str, dtype: str = "float32") -> ModelConfig:
+    return _mod(arch_id).reduced(dtype=dtype)
+
+
+def supports_long_context(arch_id: str) -> bool:
+    return bool(_mod(arch_id).LONG_CONTEXT)
+
+
+def all_configs(dtype: str = "bfloat16") -> Dict[str, ModelConfig]:
+    return {a: get(a, dtype) for a in ARCH_IDS}

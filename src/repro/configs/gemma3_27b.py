@@ -1,0 +1,33 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context, qk-norm.
+
+[hf:google/gemma-3-1b-pt family]; head_dim=128 per the gemma-3 model card.
+Runs long_500k: local layers have a 1024-token sliding window; the 1-in-6
+global layers decode against the full 512k KV, sequence-sharded over `data`.
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "gemma3-27b"
+LONG_CONTEXT = True
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21_504, vocab=262_144,
+        act="geglu", qk_norm=True, scale_embed=True, tie_embeddings=True,
+        sliding_window=1024, global_interval=6,
+        rope_theta=1_000_000.0, dtype=dtype,
+        source="hf:google/gemma-3-27b model card",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512,
+        act="geglu", qk_norm=True, scale_embed=True, tie_embeddings=True,
+        sliding_window=8, global_interval=2, dtype=dtype,
+        source="hf:google/gemma-3-27b model card",
+    ).validate()

@@ -1,0 +1,26 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1). [arXiv:2403.08295]"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "gemma-2b"
+LONG_CONTEXT = False  # pure full attention -> long_500k skipped (DESIGN.md §5)
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+        d_ff=16384, vocab=256_000,
+        act="geglu", scale_embed=True, tie_embeddings=True,
+        rope_theta=10_000.0, dtype=dtype,
+        source="arXiv:2403.08295 (Gemma)",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+        d_ff=256, vocab=512,
+        act="geglu", scale_embed=True, tie_embeddings=True, dtype=dtype,
+        source="arXiv:2403.08295 (Gemma)",
+    ).validate()

@@ -1,0 +1,26 @@
+"""granite-3-2b [dense] — GQA (kv=8). [hf:ibm-granite/granite-3.0-2b-base]"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "granite-3-2b"
+LONG_CONTEXT = False
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab=49_155,
+        act="silu", tie_embeddings=True,
+        rope_theta=10_000.0, dtype=dtype,
+        source="hf:ibm-granite/granite-3.0-2b-base",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        act="silu", tie_embeddings=True, dtype=dtype,
+        source="hf:ibm-granite/granite-3.0-2b-base",
+    ).validate()

@@ -1,0 +1,32 @@
+"""grok-1-314b [moe] — 8 experts top-2 on every layer, attention/output logit
+softcap 30. [hf:xai-org/grok-1]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "grok-1-314b"
+LONG_CONTEXT = False
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=32_768, vocab=131_072,
+        act="silu", tie_embeddings=False,
+        n_experts=8, moe_top_k=2, moe_d_ff=32_768, moe_interleave=1,
+        logit_softcap=30.0, final_softcap=30.0,
+        rope_theta=10_000.0, dtype=dtype,
+        source="hf:xai-org/grok-1",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        act="silu", tie_embeddings=False,
+        n_experts=4, moe_top_k=2, moe_d_ff=256, moe_interleave=1,
+        logit_softcap=30.0, final_softcap=30.0, dtype=dtype,
+        source="hf:xai-org/grok-1",
+    ).validate()

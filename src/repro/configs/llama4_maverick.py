@@ -1,0 +1,32 @@
+"""llama4-maverick-400b-a17b [moe] — 128 routed experts top-1 + shared expert,
+MoE interleaved every other layer, early fusion. [hf:meta-llama/Llama-4 cards]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llama4-maverick-400b-a17b"
+LONG_CONTEXT = False
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+        d_ff=8192, vocab=202_048,
+        act="silu", tie_embeddings=False,
+        n_experts=128, moe_top_k=1, moe_d_ff=8192, moe_interleave=2,
+        n_shared_experts=1,
+        rope_theta=500_000.0, dtype=dtype,
+        source="hf:meta-llama/Llama-4-Maverick-17B-128E (interleave_moe_layer_step=2)",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        act="silu", tie_embeddings=False,
+        n_experts=4, moe_top_k=1, moe_d_ff=256, moe_interleave=2,
+        n_shared_experts=1, dtype=dtype,
+        source="hf:meta-llama/Llama-4-Maverick-17B-128E",
+    ).validate()

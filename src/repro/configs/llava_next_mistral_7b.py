@@ -1,0 +1,29 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres tiling (stub
+vision frontend: 5 tiles x 576 patches = 2880 pre-projected patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llava-next-mistral-7b"
+LONG_CONTEXT = False
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="vlm",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14_336, vocab=32_000,
+        act="silu", tie_embeddings=False,
+        rope_theta=10_000.0, n_img_patches=2880, dtype=dtype,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="vlm",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        act="silu", tie_embeddings=False, n_img_patches=16, dtype=dtype,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    ).validate()

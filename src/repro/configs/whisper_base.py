@@ -1,0 +1,32 @@
+"""whisper-base [audio] — encoder-decoder, 6L per stack, LayerNorm, GELU MLP;
+conv/mel frontend is a STUB (input_specs supplies (B, 1500, 512) frame
+embeddings). [arXiv:2212.04356]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "whisper-base"
+LONG_CONTEXT = False  # full attention; 512k tokens also >> any audio context
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="audio",
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+        d_ff=2048, vocab=51_865,
+        act="gelu", norm="layer", norm_eps=1e-5, tie_embeddings=True,
+        n_enc_layers=6, n_frames=1500,
+        dtype=dtype,
+        source="arXiv:2212.04356 (Whisper)",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="audio",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=512,
+        act="gelu", norm="layer", norm_eps=1e-5, tie_embeddings=True,
+        n_enc_layers=2, n_frames=64,
+        dtype=dtype,
+        source="arXiv:2212.04356 (Whisper)",
+    ).validate()

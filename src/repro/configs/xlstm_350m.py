@@ -1,0 +1,32 @@
+"""xlstm-350m [ssm] — mLSTM (matrix memory, chunked-parallel) blocks with one
+sLSTM (sequential scalar memory) block every 6 layers; d_ff=0 (projection
+factor lives inside the blocks). [arXiv:2405.04517]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "xlstm-350m"
+LONG_CONTEXT = True  # recurrent state is O(1) in sequence length
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="ssm",
+        n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=50_304,
+        tie_embeddings=True,
+        slstm_interval=6, ssm_conv=4, ssm_chunk=128,
+        dtype=dtype,
+        source="arXiv:2405.04517 (xLSTM)",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="ssm",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=512,
+        tie_embeddings=True,
+        slstm_interval=2, ssm_conv=4, ssm_chunk=32,
+        dtype=dtype,
+        source="arXiv:2405.04517 (xLSTM)",
+    ).validate()

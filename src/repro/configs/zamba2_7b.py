@@ -1,0 +1,34 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone (state=64) + two alternating SHARED
+attention blocks inserted every 5 mamba blocks; per-insertion unshared
+projection. Structure: 13 x (5 mamba + 1 shared attn) + 3 mamba = 81 blocks.
+[arXiv:2411.15242]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "zamba2-7b"
+LONG_CONTEXT = True  # SSM state is O(1) in sequence length
+
+
+def config(dtype: str = "bfloat16") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14_336, vocab=32_000,
+        act="silu", tie_embeddings=True,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+        hybrid_group=5, n_shared_attn=2,
+        rope_theta=10_000.0, dtype=dtype,
+        source="arXiv:2411.15242 (Zamba2)",
+    ).validate()
+
+
+def reduced(dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="hybrid",
+        n_layers=3, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=512,
+        act="silu", tie_embeddings=True,
+        ssm_state=16, ssm_head_dim=32, ssm_expand=2, ssm_conv=4, ssm_chunk=32,
+        hybrid_group=2, n_shared_attn=2, dtype=dtype,
+        source="arXiv:2411.15242 (Zamba2)",
+    ).validate()

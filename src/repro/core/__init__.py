@@ -1,0 +1,75 @@
+"""LLMBridge core: the paper's contribution as a composable module.
+
+Convenience builder ``build_bridge`` wires the standard stack: a model pool
+drawn from the assigned architectures, planted workload, embedder, semantic
+cache, context manager and judge.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.api import (Metadata, ProxyRequest, ProxyResponse, ServiceType,
+                            Usage)
+from repro.core.cache import CachedType, SemanticCache
+from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
+                                        SmartContext, Summarize, apply_filters)
+from repro.core.judge import Judge
+from repro.core.model_adapter import (ModelAdapter, ModelPool, PoolModel,
+                                      Resolution, pool_model_from_config)
+from repro.core.proxy import LLMBridge, ProxyConfig
+from repro.core.embeddings import ModelEmbedder, WorkloadEmbedder
+from repro.core.vector_store import VectorStore
+from repro.core.workload import (Query, Workload, WorkloadConfig,
+                                 capability_from_params)
+
+__all__ = [
+    "Metadata", "ProxyRequest", "ProxyResponse", "ServiceType", "Usage",
+    "CachedType", "SemanticCache", "ContextManager", "LastK", "Message",
+    "Similar", "SmartContext", "Summarize", "apply_filters", "Judge",
+    "ModelAdapter", "ModelPool", "PoolModel", "Resolution",
+    "pool_model_from_config", "LLMBridge", "ProxyConfig", "ModelEmbedder",
+    "WorkloadEmbedder", "VectorStore", "Query", "Workload", "WorkloadConfig",
+    "capability_from_params", "build_bridge", "default_pool",
+]
+
+
+def default_pool(generation: str = "new") -> ModelPool:
+    """Model pool over the assigned architectures (DESIGN.md §3).
+
+    generation="old" mimics the paper's GPT-3.5/GPT-4/Opus era (larger gap
+    between cheap and expensive); "new" adds a generation bonus to the cheap
+    models, reproducing the paper's §5.1 observation that newer cheap models
+    close the quality gap.
+    """
+    from repro import configs
+    bonus = 0.18 if generation == "new" else 0.0
+    pool = ModelPool()
+    # cheap tier
+    pool.add(pool_model_from_config(configs.get("xlstm-350m"), generation_bonus=bonus))
+    pool.add(pool_model_from_config(configs.get("qwen2-1.5b"), generation_bonus=bonus))
+    pool.add(pool_model_from_config(configs.get("gemma-2b"), generation_bonus=bonus))
+    pool.add(pool_model_from_config(configs.get("granite-3-2b"), generation_bonus=bonus))
+    # mid tier
+    pool.add(pool_model_from_config(configs.get("llava-next-mistral-7b")))
+    pool.add(pool_model_from_config(configs.get("zamba2-7b")))
+    # expensive tier
+    pool.add(pool_model_from_config(configs.get("gemma3-27b")))
+    pool.add(pool_model_from_config(configs.get("llama4-maverick-400b-a17b")))
+    pool.add(pool_model_from_config(configs.get("grok-1-314b")))
+    return pool
+
+
+def build_bridge(workload: Optional[Workload] = None, seed: int = 0,
+                 generation: str = "new", use_pallas_cache: bool = False,
+                 pool: Optional[ModelPool] = None) -> LLMBridge:
+    workload = workload or Workload()
+    pool = pool or default_pool(generation)
+    embedder = WorkloadEmbedder(dim=workload.wc.embed_dim)
+    for q in workload.queries:
+        embedder.register(q.text, q.embedding)
+    cache = SemanticCache(embedder, dim=workload.wc.embed_dim,
+                          small_model=pool.cheapest(),
+                          use_pallas=use_pallas_cache, seed=seed)
+    judge = Judge(mode="planted", seed=seed)
+    ctx = ContextManager()
+    return LLMBridge(pool, ctx, cache, judge, workload=workload, seed=seed)

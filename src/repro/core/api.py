@@ -1,0 +1,83 @@
+"""LLMBridge API types (paper §3.2, Table 2).
+
+The bidirectional contract: applications *delegate* via ``service_type`` (+
+key-value params), the proxy answers with ``ProxyResponse`` whose
+``Metadata`` discloses every low-level choice (model(s), context size, cache
+hit — the X-Cache analogue), and applications may *iterate* via
+``proxy.regenerate`` with the same or a different service type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Optional
+
+
+class ServiceType(str, enum.Enum):
+    FIXED = "fixed"
+    QUALITY = "quality"
+    COST = "cost"
+    MODEL_SELECTOR = "model_selector"
+    SMART_CONTEXT = "smart_context"
+    SMART_CACHE = "smart_cache"
+    # latency-centric (paper §5.1): answer immediately with the fastest
+    # cheap model while prefetching a high-quality answer into the cache;
+    # the "Get Better Answer" button (regenerate) serves it with zero wait.
+    FAST_THEN_BETTER = "fast_then_better"
+
+
+@dataclasses.dataclass
+class ProxyRequest:
+    prompt: str
+    user: str = "anon"
+    conversation: str = "default"
+    service_type: ServiceType = ServiceType.MODEL_SELECTOR
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    update_context: bool = True      # §3.4: some calls read but don't insert
+    # benchmark plumbing: the planted workload query this prompt came from
+    query: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class Usage:
+    input_tokens: int = 0
+    output_tokens: int = 0
+    extra_llm_input_tokens: int = 0   # verifier / smart-context / cache-LLM
+    extra_llm_output_tokens: int = 0
+    cost: float = 0.0                 # cost units (active-param-weighted)
+    latency: float = 0.0              # seconds (modelled)
+
+    def add(self, other: "Usage") -> "Usage":
+        return Usage(
+            self.input_tokens + other.input_tokens,
+            self.output_tokens + other.output_tokens,
+            self.extra_llm_input_tokens + other.extra_llm_input_tokens,
+            self.extra_llm_output_tokens + other.extra_llm_output_tokens,
+            self.cost + other.cost,
+            self.latency + other.latency,
+        )
+
+
+@dataclasses.dataclass
+class Metadata:
+    """Transparency payload (paper §3.2 'Transparency')."""
+    service_type: str = ""
+    model_used: str = ""
+    models_consulted: List[str] = dataclasses.field(default_factory=list)
+    verifier_score: Optional[float] = None
+    context_k: int = 0
+    context_strategy: str = "none"
+    context_decision_latency: float = 0.0
+    cache_hit: bool = False
+    cache_types: List[str] = dataclasses.field(default_factory=list)
+    usage: Usage = dataclasses.field(default_factory=Usage)
+    regeneration: int = 0
+
+
+@dataclasses.dataclass
+class ProxyResponse:
+    text: str
+    metadata: Metadata
+    request: ProxyRequest
+    # ground-truth quality (planted workloads only; never shown to "users")
+    true_quality: Optional[float] = None

@@ -1,0 +1,213 @@
+"""Semantic Cache (paper §3.5): typed keys, delegated PUT, SmartCache GET.
+
+PUT path: objects (LLM interactions, documents) are stored once; each object
+may expose several *cached types* as vector keys (Prompt, Response, Chunk,
+hypothetical Question, Keywords, Summary, Facts).  Delegated PUT uses the
+cache-LLM to break complex objects into chunks and synthesise keys — the
+template-driven SimCacheLLM stands in for Phi-3-style keygen (chunking,
+hypothetical questions, keyword extraction, summaries, fact lists) and an
+optional real reduced model can replace it.
+
+GET path: low-level filtered similarity lookup, plus SmartCache — retrieve
+top-k across all types, decide relevance with the cache-LLM, and answer from
+the cached content with the small local model (paper Fig 7: grounding a
+hallucination-prone small model with cached facts).
+
+Exact-match GET serves the WhatsApp prefetch buttons (paper §5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.api import Usage
+from repro.core.model_adapter import PoolModel, _count_tokens
+from repro.core.vector_store import SearchHit, VectorStore
+
+
+class CachedType(str, enum.Enum):
+    PROMPT = "prompt"
+    RESPONSE = "response"
+    CHUNK = "chunk"
+    QUESTION = "question"
+    KEYWORDS = "keywords"
+    SUMMARY = "summary"
+    FACTS = "facts"
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    eid: int
+    obj: str                      # the cached object (response text / chunk)
+    meta: Dict[str, Any]
+    key_type: CachedType
+    key_text: str
+
+
+_STOP = set("the a an of to in on for and or is are was were be with about what how why "
+            "tell me give my your this that it".split())
+
+
+class SimCacheLLM:
+    """Deterministic template 'small model' for delegated-PUT key generation."""
+
+    def chunk(self, text: str, max_words: int = 80) -> List[str]:
+        paras = [p.strip() for p in re.split(r"\n\n+", text) if p.strip()]
+        chunks: List[str] = []
+        for p in paras:
+            words = p.split()
+            for i in range(0, len(words), max_words):
+                chunks.append(" ".join(words[i:i + max_words]))
+        return chunks or [text]
+
+    def keywords(self, chunk: str, n: int = 6) -> str:
+        words = [w.strip(".,!?()").lower() for w in chunk.split()]
+        uniq: List[str] = []
+        for w in words:
+            if w and w not in _STOP and w not in uniq:
+                uniq.append(w)
+        uniq.sort(key=len, reverse=True)   # longer words ~ rarer/meatier
+        return " ".join(sorted(uniq[:n]))
+
+    def hypothetical_questions(self, chunk: str) -> List[str]:
+        kws = self.keywords(chunk, 3).split()
+        qs = [f"what is {k}" for k in kws[:2]]
+        if len(kws) >= 2:
+            qs.append(f"how does {kws[0]} relate to {kws[1]}")
+        return qs
+
+    def summary(self, chunk: str) -> str:
+        first = re.split(r"(?<=[.!?])\s", chunk)[0]
+        return " ".join(first.split()[:20])
+
+    def facts(self, chunk: str) -> List[str]:
+        sents = [s.strip() for s in re.split(r"(?<=[.!?])\s", chunk) if s.strip()]
+        return sents[:5]
+
+
+class SemanticCache:
+    def __init__(self, embedder, dim: int, small_model: Optional[PoolModel] = None,
+                 use_pallas: bool = False, seed: int = 0):
+        self.embedder = embedder
+        self.store = VectorStore(dim, use_pallas=use_pallas)
+        self.small_model = small_model            # the cache-local LLM (Phi-3 analogue)
+        self.keygen = SimCacheLLM()
+        self._entries: List[CacheEntry] = []
+        self._exact: Dict[str, str] = {}
+        self.rng = np.random.default_rng(seed)
+        self.last_usage = Usage()
+
+    # -- PUT -------------------------------------------------------------------
+    def put(self, obj: str, keys: Optional[Sequence[Tuple[CachedType, str]]] = None,
+            meta: Optional[Dict[str, Any]] = None) -> List[int]:
+        """Explicit-key PUT; with keys=None runs the delegated PUT."""
+        if keys is None:
+            return self.delegated_put(obj, meta)
+        keys = [(CachedType(kt), kx) for kt, kx in keys]
+        return self._insert(obj, keys, meta or {})
+
+    def delegated_put(self, obj: str, meta: Optional[Dict[str, Any]] = None
+                      ) -> List[int]:
+        meta = meta or {}
+        ids: List[int] = []
+        kg = self.keygen
+        for chunk in kg.chunk(obj):
+            keys: List[Tuple[CachedType, str]] = [(CachedType.CHUNK, chunk)]
+            keys += [(CachedType.QUESTION, q) for q in kg.hypothetical_questions(chunk)]
+            keys.append((CachedType.KEYWORDS, kg.keywords(chunk)))
+            keys.append((CachedType.SUMMARY, kg.summary(chunk)))
+            for fact in kg.facts(chunk):
+                keys.append((CachedType.FACTS, fact))
+            ids += self._insert(chunk, keys, meta)
+        return ids
+
+    def _insert(self, obj: str, keys: List[Tuple[CachedType, str]],
+                meta: Dict[str, Any]) -> List[int]:
+        texts = [k for _, k in keys]
+        vecs = self.embedder.embed(texts)
+        entries = []
+        for (ktype, ktext), _v in zip(keys, vecs):
+            e = CacheEntry(eid=len(self._entries), obj=obj, meta=dict(meta),
+                           key_type=ktype, key_text=ktext)
+            self._entries.append(e)
+            entries.append(e)
+        self.store.add(vecs, entries)
+        return [e.eid for e in entries]
+
+    def put_exact(self, prompt: str, response: str) -> None:
+        """Prefetch-button path: exact-match retrieval (paper §5.1)."""
+        self._exact[prompt] = response
+
+    def get_exact(self, prompt: str) -> Optional[str]:
+        return self._exact.get(prompt)
+
+    # -- GET -------------------------------------------------------------------
+    def get(self, key_text: str,
+            filters: Optional[Sequence[Tuple[CachedType, float, int]]] = None
+            ) -> List[SearchHit]:
+        """filters: [(type, min_similarity, max_items)]; None = top-4 any type."""
+        q = self.embedder.embed([key_text])[0]
+        if not filters:
+            return self.store.search(q, top_k=4)[0]
+        out: List[SearchHit] = []
+        for ktype, thresh, k in filters:
+            hits = self.store.search(
+                q, top_k=k, threshold=thresh,
+                predicate=lambda e, kt=ktype: e.key_type == kt)[0]
+            out.extend(hits)
+        out.sort(key=lambda h: -h.score)
+        return out
+
+    # -- SmartCache (delegated GET) ---------------------------------------------
+    def smart_get(self, prompt: str, *, query=None, workload=None,
+                  relevance_threshold: float = 0.60, top_k: int = 4
+                  ) -> Tuple[bool, Optional[str], List[str], Optional[float]]:
+        """Returns (hit, response_text, cached_types_used, true_quality).
+
+        Retrieves top-k across all types, asks the cache-LLM whether the
+        material is relevant, then answers WITH the cached content using the
+        small local model.
+        """
+        self.last_usage = Usage()
+        exact = self.get_exact(prompt)
+        if exact is not None:
+            return True, exact, ["exact"], None
+
+        q = self.embedder.embed([prompt])[0]
+        hits = self.store.search(q, top_k=top_k)[0]
+        if not hits:
+            return False, None, [], None
+        best = hits[0]
+        # cache-LLM relevance decision (one small-model call)
+        if self.small_model is not None:
+            u = self.small_model.usage_for(
+                _count_tokens(prompt) + _count_tokens(best.payload.obj), 2)
+            self.last_usage = self.last_usage.add(Usage(
+                extra_llm_input_tokens=u.input_tokens,
+                extra_llm_output_tokens=u.output_tokens,
+                cost=u.cost, latency=u.latency))
+        if best.score < relevance_threshold:
+            return False, None, [], None
+
+        types = sorted({h.payload.key_type.value for h in hits
+                        if h.score >= relevance_threshold})
+        material = " | ".join(dict.fromkeys(
+            h.payload.obj for h in hits if h.score >= relevance_threshold))
+        # small local model generates grounded by cached material
+        out_tokens = query.output_tokens if query is not None else 64
+        if self.small_model is not None:
+            u = self.small_model.usage_for(
+                _count_tokens(prompt) + _count_tokens(material), out_tokens)
+            self.last_usage = self.last_usage.add(u)
+        text = f"[{self.small_model.name if self.small_model else 'cache'}+cache] " \
+               f"{material[:96]}"
+        tq = None
+        if query is not None and workload is not None:
+            cap = (self.small_model.effective_capability()
+                   if self.small_model else 0.3)
+            tq = workload.quality(query, cap, cached_facts=True, rng=self.rng)
+        return True, text, types, tq

@@ -1,0 +1,193 @@
+"""Context Manager (paper §3.4): proxy-held history + composable filter API.
+
+``Filter([Message], prompt) -> [Message]``.  Composition semantics (Table 3):
+
+* a flat list is a *pipeline* — each filter narrows the previous output
+  (``[LastK(5), SmartContext]`` = last-5 then the all-or-nothing gate);
+* a list containing sub-lists is a *union* of branch results
+  (``[[LastK(4), SmartContext], LastK(1)]`` = smart-gated last-4 plus an
+  always-included most-recent message), deduplicated, recency-ordered.
+
+SmartContext calls its low-cost decider at most twice and only drops context
+when BOTH calls deem the prompt standalone (the paper's false-positive
+suppression).  The decider is pluggable: planted mode reads the workload's
+``needs_context`` bit through a configurable-accuracy channel; real mode
+prompts a small pool model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.api import Usage
+from repro.core.model_adapter import PoolModel, _count_tokens
+
+
+@dataclasses.dataclass
+class Message:
+    prompt: str
+    response: str
+    turn: int
+    embedding: Optional[np.ndarray] = None
+    token_override: Optional[int] = None   # planted I+O when known (workloads)
+
+    @property
+    def tokens(self) -> int:
+        if self.token_override is not None:
+            return self.token_override
+        return _count_tokens(self.prompt) + _count_tokens(self.response)
+
+
+FilterFn = Callable[[List[Message], str], List[Message]]
+FilterSpec = Union[FilterFn, Sequence["FilterSpec"]]
+
+
+class LastK:
+    def __init__(self, k: int):
+        self.k = k
+
+    def __call__(self, messages: List[Message], prompt: str) -> List[Message]:
+        return messages[-self.k:] if self.k > 0 else []
+
+
+class SmartContext:
+    """All-or-nothing gate decided by a low-cost model (<=2 calls, both must
+    agree the prompt is standalone to drop context)."""
+
+    # the decider is co-located with the proxy (no API queueing): small fixed
+    # overhead + per-token time, deterministic (paper Fig 6c: <20% of request
+    # time for ~80% of messages)
+    DECIDER_BASE_LATENCY = 0.08
+
+    def __init__(self, decider: Callable[[str, List[Message]], bool],
+                 model: Optional[PoolModel] = None, max_calls: int = 2):
+        self.decider = decider
+        self.model = model
+        self.max_calls = max_calls
+        self.last_usage = Usage()
+
+    def _charge(self, prompt: str) -> None:
+        if self.model is None:
+            return
+        in_toks = _count_tokens(prompt) + 16
+        u = self.model.usage_for(in_toks, 2)
+        lat = self.DECIDER_BASE_LATENCY + (in_toks + 2) * self.model.per_token_latency
+        self.last_usage = self.last_usage.add(Usage(
+            extra_llm_input_tokens=u.input_tokens,
+            extra_llm_output_tokens=u.output_tokens,
+            cost=u.cost, latency=lat))
+
+    def __call__(self, messages: List[Message], prompt: str) -> List[Message]:
+        self.last_usage = Usage()
+        if not messages:
+            return []
+        votes_standalone = 0
+        calls = 0
+        for _ in range(self.max_calls):
+            calls += 1
+            needs = self.decider(prompt, messages)
+            self._charge(prompt)
+            if needs:
+                return messages          # any "needs context" vote keeps it
+            votes_standalone += 1
+        return [] if votes_standalone == calls else messages
+
+
+class Similar:
+    """Messages ordered by embedding similarity to the prompt (>= theta);
+    uses the same vector machinery as the cache (paper: shared benefit)."""
+
+    def __init__(self, theta: float, embedder, top_k: int = 5):
+        self.theta = theta
+        self.embedder = embedder
+        self.top_k = top_k
+
+    def __call__(self, messages: List[Message], prompt: str) -> List[Message]:
+        if not messages:
+            return []
+        q = self.embedder.embed([prompt])[0]
+        scored = []
+        for m in messages:
+            if m.embedding is None:
+                m.embedding = self.embedder.embed([m.prompt])[0]
+            s = float(np.dot(q, m.embedding))
+            if s >= self.theta:
+                scored.append((s, m))
+        scored.sort(key=lambda t: -t[0])
+        return [m for _, m in scored[: self.top_k]]
+
+
+class Summarize:
+    """Collapse history into one synthetic message via the context-LLM."""
+
+    def __init__(self, model: Optional[PoolModel] = None, max_words: int = 40):
+        self.model = model
+        self.max_words = max_words
+        self.last_usage = Usage()
+
+    def __call__(self, messages: List[Message], prompt: str) -> List[Message]:
+        self.last_usage = Usage()
+        if not messages:
+            return []
+        words: List[str] = []
+        for m in messages:
+            words.extend(m.prompt.split()[:4])
+        summary = "summary: " + " ".join(words[: self.max_words])
+        if self.model is not None:
+            total_in = sum(m.tokens for m in messages)
+            u = self.model.usage_for(total_in, self.max_words)
+            self.last_usage = Usage(extra_llm_input_tokens=u.input_tokens,
+                                    extra_llm_output_tokens=u.output_tokens,
+                                    cost=u.cost, latency=u.latency)
+        return [Message(prompt=summary, response="", turn=messages[-1].turn)]
+
+
+def apply_filters(spec: FilterSpec, messages: List[Message], prompt: str
+                  ) -> List[Message]:
+    if callable(spec):
+        return spec(messages, prompt)
+    spec = list(spec)
+    if any(isinstance(s, (list, tuple)) for s in spec):
+        # union of branches
+        seen, out = set(), []
+        for branch in spec:
+            for m in apply_filters(branch, messages, prompt):
+                if id(m) not in seen:
+                    seen.add(id(m))
+                    out.append(m)
+        out.sort(key=lambda m: m.turn)
+        return out
+    cur = messages
+    for f in spec:
+        cur = f(cur, prompt)
+    return cur
+
+
+class ContextManager:
+    def __init__(self):
+        self._store: Dict[str, List[Message]] = {}
+
+    def history(self, conversation: str) -> List[Message]:
+        return self._store.setdefault(conversation, [])
+
+    def append(self, conversation: str, prompt: str, response: str,
+               tokens: Optional[int] = None) -> None:
+        h = self.history(conversation)
+        h.append(Message(prompt=prompt, response=response, turn=len(h),
+                         token_override=tokens))
+
+    def pop_last(self, conversation: str) -> None:
+        """Regeneration: the initial response leaves the context (§5.1)."""
+        h = self.history(conversation)
+        if h:
+            h.pop()
+
+    def select(self, conversation: str, prompt: str, spec: FilterSpec
+               ) -> List[Message]:
+        return apply_filters(spec, self.history(conversation), prompt)
+
+    @staticmethod
+    def token_count(messages: List[Message]) -> int:
+        return sum(m.tokens for m in messages)

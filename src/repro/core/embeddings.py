@@ -1,0 +1,88 @@
+"""Embedding providers for the semantic cache and Similar() context filter.
+
+* ModelEmbedder — a real JAX forward pass: mean-pooled final hidden states of
+  a (small) pool model, L2-normalised.  The production path (paper §4 uses
+  OpenAI embeddings; we self-host ours, DESIGN.md §3).
+* WorkloadEmbedder — returns the planted ground-truth embedding for workload
+  queries and a deterministic hashed bag-of-words vector for other text, so
+  cache geometry is meaningful at benchmark scale with zero forward passes.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer, pad_batch
+from repro.models import apply_model
+from repro.models.config import ModelConfig
+
+
+class ModelEmbedder:
+    def __init__(self, cfg: ModelConfig, params, dim: Optional[int] = None,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.tok = ByteTokenizer()
+        self.max_len = max_len
+        self.dim = dim or cfg.d_model
+
+        from repro.models import transformer as T
+
+        def _embed(tokens, mask):
+            # mean-pooled final-norm hidden states + fixed seeded projection
+            h, _, _ = T.forward(params, tokens, cfg, return_hidden=True)
+            key = jax.random.PRNGKey(0)
+            proj = jax.random.normal(key, (h.shape[-1], self.dim), jnp.float32) * 0.05
+            z = jnp.einsum("bsd,de->bse", h.astype(jnp.float32), proj)
+            m = mask[..., None].astype(jnp.float32)
+            pooled = (z * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+            return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+
+        self._embed = jax.jit(_embed)
+
+    def embed(self, texts: List[str]) -> np.ndarray:
+        ids = [self.tok.encode(t)[: self.max_len] for t in texts]
+        toks = pad_batch(ids, self.max_len)
+        mask = (toks != self.tok.pad_id).astype(np.float32)
+        return np.asarray(self._embed(jnp.asarray(toks), jnp.asarray(mask)))
+
+
+class WorkloadEmbedder:
+    """Planted embeddings for workload queries; hashed BoW elsewhere."""
+
+    def __init__(self, dim: int = 64):
+        self.dim = dim
+        self._planted: dict[str, np.ndarray] = {}
+
+    def register(self, text: str, embedding: np.ndarray) -> None:
+        self._planted[text] = embedding / max(np.linalg.norm(embedding), 1e-9)
+
+    def _bow(self, text: str) -> np.ndarray:
+        v = np.zeros(self.dim, np.float32)
+        for w in text.lower().split():
+            h = hashlib.blake2b(w.encode(), digest_size=8).digest()
+            idx = int.from_bytes(h[:4], "little") % self.dim
+            sgn = 1.0 if h[4] % 2 else -1.0
+            v[idx] += sgn
+        n = np.linalg.norm(v)
+        return v / n if n > 0 else v
+
+    def embed(self, texts: List[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            if t in self._planted:
+                out[i] = self._planted[t]
+            else:
+                # blend planted vectors of any registered substrings (chunk
+                # keys derived from a registered text inherit its geometry)
+                hits = [v for k, v in self._planted.items() if k and (k in t or t in k)]
+                if hits:
+                    v = np.mean(hits, axis=0) + 0.15 * self._bow(t)
+                    out[i] = v / max(np.linalg.norm(v), 1e-9)
+                else:
+                    out[i] = self._bow(t)
+        return out

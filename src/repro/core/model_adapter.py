@@ -1,0 +1,215 @@
+"""Model Adapter (paper §3.3): unified pool + filters + verification routing.
+
+The pool maps onto this framework's own model zoo: every pool entry is one of
+the assigned architectures with cost-per-token proportional to *active*
+parameters (self-hosted economics, DESIGN.md §3) and a latency model whose
+constants derive from the roofline terms.  Entries can carry a real Engine
+(reduced configs; real generation) or run in SIM mode against the planted
+workload (benchmarks at paper scale).
+
+``verification_select`` is the paper's strategy: M1 answers every prompt, a
+verifier scores it 1-10, M2 is consulted only below threshold t.  The
+adapter's heuristic picks verifier/M1/M2 so that
+cost(verifier) <= cost(M1) <= cost(M2) (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.api import Usage
+from repro.core.workload import Query, Workload, capability_from_params
+
+PRICE_IN_PER_1K_PER_BPARAM = 0.01     # cost units; relative scale is what matters
+OUTPUT_PRICE_MULT = 5.0               # output tokens ~5x input (paper §2.2)
+
+
+@dataclasses.dataclass
+class PoolModel:
+    name: str
+    active_params: int
+    capability: float                  # [0,1] planted quality anchor
+    context_window: int = 8192
+    generation_bonus: float = 0.0      # "newer generation" shift (paper §5.1)
+    engine: Optional[Any] = None       # serving.Engine for REAL mode
+    tokenizer: Optional[Any] = None
+    base_latency: float = 0.5          # s, queueing + prefill floor
+    serving_chips: int = 8             # v5e chips the pool serves this model on
+    latency_jitter: float = 0.9        # lognormal sigma (paper's heavy p99.9 tail)
+
+    @property
+    def price_in(self) -> float:       # per 1k input tokens
+        return PRICE_IN_PER_1K_PER_BPARAM * self.active_params / 1e9
+
+    @property
+    def price_out(self) -> float:
+        return OUTPUT_PRICE_MULT * self.price_in
+
+    @property
+    def per_token_latency(self) -> float:
+        # memory-bound decode: time/token ~ bytes(active params)/(HBM_bw x
+        # chips in the serving slice). bf16 params, 819 GB/s v5e per chip.
+        return max(2 * self.active_params / (819e9 * self.serving_chips), 2e-4)
+
+    def effective_capability(self) -> float:
+        return float(np.clip(self.capability + self.generation_bonus, 0.0, 0.99))
+
+    def usage_for(self, in_tokens: int, out_tokens: int,
+                  rng: Optional[np.random.Generator] = None) -> Usage:
+        lat = self.base_latency + out_tokens * self.per_token_latency
+        if rng is not None:
+            lat *= float(rng.lognormal(0.0, self.latency_jitter))
+        cost = in_tokens / 1e3 * self.price_in + out_tokens / 1e3 * self.price_out
+        return Usage(input_tokens=in_tokens, output_tokens=out_tokens,
+                     cost=cost, latency=lat)
+
+
+def pool_model_from_config(cfg, generation_bonus: float = 0.0, **kw) -> PoolModel:
+    n = cfg.active_params()
+    return PoolModel(name=cfg.name, active_params=n,
+                     capability=capability_from_params(n),
+                     generation_bonus=generation_bonus, **kw)
+
+
+@dataclasses.dataclass
+class Resolution:
+    text: str
+    model: str
+    usage: Usage
+    true_quality: Optional[float] = None
+    models_consulted: List[str] = dataclasses.field(default_factory=list)
+    verifier_score: Optional[float] = None
+
+
+class ModelPool:
+    def __init__(self, models: Optional[List[PoolModel]] = None):
+        self._models: Dict[str, PoolModel] = {}
+        for m in models or []:
+            self.add(m)
+
+    def add(self, m: PoolModel) -> None:
+        self._models[m.name] = m
+
+    def get(self, name: str) -> PoolModel:
+        return self._models[name]
+
+    def list(self) -> List[PoolModel]:
+        return list(self._models.values())
+
+    # filter interface (paper Fig 2: attribute filters over the pool)
+    def filter(self, *, max_price_in: Optional[float] = None,
+               min_capability: Optional[float] = None,
+               min_context: Optional[int] = None,
+               names: Optional[List[str]] = None) -> List[PoolModel]:
+        out = []
+        for m in self._models.values():
+            if max_price_in is not None and m.price_in > max_price_in:
+                continue
+            if min_capability is not None and m.effective_capability() < min_capability:
+                continue
+            if min_context is not None and m.context_window < min_context:
+                continue
+            if names is not None and m.name not in names:
+                continue
+            out.append(m)
+        return out
+
+    def cheapest(self, candidates: Optional[List[PoolModel]] = None) -> PoolModel:
+        return min(candidates or self.list(), key=lambda m: m.price_in)
+
+    def best(self, candidates: Optional[List[PoolModel]] = None) -> PoolModel:
+        return max(candidates or self.list(), key=lambda m: m.effective_capability())
+
+    def pick_triple(self) -> Tuple[PoolModel, PoolModel, PoolModel]:
+        """(verifier, M1, M2) with price(verifier) <= price(M1) <= price(M2)."""
+        ms = sorted(self.list(), key=lambda m: m.price_in)
+        assert len(ms) >= 2, "need at least two models for verification routing"
+        verifier = ms[0]
+        m1 = ms[min(1, len(ms) - 2)]
+        m2 = ms[-1]
+        return verifier, m1, m2
+
+
+class ModelAdapter:
+    def __init__(self, pool: ModelPool, workload: Optional[Workload] = None,
+                 seed: int = 0):
+        self.pool = pool
+        self.workload = workload
+        self.rng = np.random.default_rng(seed)
+
+    # -- answering ------------------------------------------------------------
+    def answer(self, model: PoolModel, prompt: str, *,
+               context_tokens: int = 0,
+               query: Optional[Query] = None,
+               has_context: bool = True,
+               cached_facts: bool = False,
+               out_tokens: Optional[int] = None) -> Resolution:
+        prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
+        in_tokens = prompt_tokens + context_tokens
+        if query is not None:
+            out_tokens = out_tokens or query.output_tokens
+        out_tokens = out_tokens or int(prompt_tokens * 3)
+
+        if model.engine is not None and model.tokenizer is not None:
+            text = self._real_generate(model, prompt, out_tokens)
+        else:
+            text = f"[{model.name}] response({_count_tokens(prompt)}t prompt): {prompt[:64]}"
+
+        tq = None
+        if query is not None and self.workload is not None:
+            tq = self.workload.quality(
+                query, model.effective_capability(),
+                has_context=has_context, cached_facts=cached_facts, rng=self.rng)
+        usage = model.usage_for(in_tokens, out_tokens, rng=self.rng)
+        return Resolution(text=text, model=model.name, usage=usage,
+                          true_quality=tq, models_consulted=[model.name])
+
+    def _real_generate(self, model: PoolModel, prompt: str, out_tokens: int) -> str:
+        import jax.numpy as jnp
+        ids = model.tokenizer.encode(prompt)[-64:]
+        toks = jnp.asarray([ids], jnp.int32)
+        gen = model.engine.generate(toks, max_new=min(out_tokens, 32))
+        return model.tokenizer.decode(list(np.asarray(gen[0])))
+
+    # -- verification-based selection (paper §3.3) -----------------------------
+    def verification_select(self, prompt: str, *, threshold: float = 8.0,
+                            judge=None,
+                            m1: Optional[PoolModel] = None,
+                            m2: Optional[PoolModel] = None,
+                            verifier: Optional[PoolModel] = None,
+                            context_tokens: int = 0,
+                            query: Optional[Query] = None,
+                            has_context: bool = True) -> Resolution:
+        v, d1, d2 = self.pool.pick_triple()
+        m1, m2, verifier = m1 or d1, m2 or d2, verifier or v
+
+        r1 = self.answer(m1, prompt, context_tokens=context_tokens,
+                         query=query, has_context=has_context)
+        score = judge.score(r1, query=query) if judge is not None else 10.0
+        # verifier call: reads prompt+answer, emits a 1-10 token
+        vin = r1.usage.input_tokens + r1.usage.output_tokens
+        vusage = verifier.usage_for(vin, 4, rng=self.rng)
+        vusage = Usage(extra_llm_input_tokens=vin, extra_llm_output_tokens=4,
+                       cost=vusage.cost, latency=vusage.latency)
+
+        if score >= threshold:
+            out = dataclasses.replace(r1, usage=r1.usage.add(vusage),
+                                      verifier_score=score)
+            out.models_consulted = [m1.name, f"verifier:{verifier.name}"]
+            return out
+
+        r2 = self.answer(m2, prompt, context_tokens=context_tokens,
+                         query=query, has_context=has_context)
+        usage = r1.usage.add(vusage).add(r2.usage)
+        return Resolution(text=r2.text, model=m2.name, usage=usage,
+                          true_quality=r2.true_quality,
+                          models_consulted=[m1.name, f"verifier:{verifier.name}", m2.name],
+                          verifier_score=score)
+
+
+def _count_tokens(text: str) -> int:
+    # ~1.3 tokens per word (paper §2.2)
+    return max(1, int(round(len(text.split()) * 1.3)))

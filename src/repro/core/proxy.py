@@ -1,0 +1,287 @@
+"""LLMBridge proxy orchestrator (paper Fig 2).
+
+Pipeline order for every service type in the paper: ② cache -> ③ context ->
+④ model adapter.  The response carries full transparency metadata and
+``regenerate`` implements the iterative path (same service type = nudge
+quality over cost; §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.api import Metadata, ProxyRequest, ProxyResponse, ServiceType, Usage
+from repro.core.cache import SemanticCache
+from repro.core.context_manager import (ContextManager, LastK, SmartContext,
+                                        apply_filters)
+from repro.core.model_adapter import ModelAdapter, ModelPool, PoolModel, _count_tokens
+from repro.core.judge import Judge
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class ProxyConfig:
+    verify_threshold: float = 8.0
+    default_context_k: int = 5          # model_selector uses 5 previous msgs (§3.2)
+    smart_context_k: int = 5
+    cache_relevance: float = 0.60
+    smart_context_accuracy: float = 0.90  # planted decider channel accuracy
+
+
+class LLMBridge:
+    def __init__(self, pool: ModelPool, context: ContextManager,
+                 cache: SemanticCache, judge: Judge,
+                 workload: Optional[Workload] = None,
+                 config: ProxyConfig = ProxyConfig(), seed: int = 0):
+        self.pool = pool
+        self.adapter = ModelAdapter(pool, workload=workload, seed=seed)
+        self.context = context
+        self.cache = cache
+        self.judge = judge
+        self.workload = workload
+        self.config = config
+        self.rng = np.random.default_rng(seed + 1)
+
+    # -- the SmartContext decider (planted channel or real small model) -------
+    def _context_decider(self) -> Callable:
+        acc = self.config.smart_context_accuracy
+
+        def decide(prompt: str, messages, query=None) -> bool:
+            if query is not None:
+                truth = bool(query.needs_context)
+                return truth if self.rng.random() < acc else not truth
+            # fallback heuristic: pronouns/ellipsis suggest context need
+            p = prompt.lower()
+            return any(w in p.split() for w in ("it", "that", "they", "more", "why"))
+        return decide
+
+    # -- main entry ------------------------------------------------------------
+    def request(self, req: ProxyRequest) -> ProxyResponse:
+        st = req.service_type
+        handler = {
+            ServiceType.FIXED: self._handle_fixed,
+            ServiceType.QUALITY: self._handle_quality,
+            ServiceType.COST: self._handle_cost,
+            ServiceType.MODEL_SELECTOR: self._handle_model_selector,
+            ServiceType.SMART_CONTEXT: self._handle_smart_context,
+            ServiceType.SMART_CACHE: self._handle_smart_cache,
+            ServiceType.FAST_THEN_BETTER: self._handle_fast_then_better,
+        }[st]
+        resp = handler(req)
+        resp.metadata.service_type = st.value
+        if req.update_context:
+            toks = None
+            if req.query is not None:
+                toks = req.query.input_tokens + req.query.output_tokens
+            self.context.append(req.conversation, req.prompt, resp.text, tokens=toks)
+        return resp
+
+    # -- service types -----------------------------------------------------------
+    def _select_context(self, req: ProxyRequest, k: int, smart: bool):
+        """Returns (messages, strategy_name, gate_usage, decision_latency)."""
+        gate_usage = Usage()
+        if k <= 0:
+            return [], "none", gate_usage, 0.0
+        if smart:
+            decider_raw = self._context_decider()
+            decider = lambda p, m: decider_raw(p, m, query=req.query)
+            small = self.pool.cheapest()
+            sc = SmartContext(decider, model=small)
+            msgs = apply_filters([LastK(k), sc], self.context.history(req.conversation),
+                                 req.prompt)
+            return msgs, f"smart_context(k={k})", sc.last_usage, sc.last_usage.latency
+        msgs = apply_filters(LastK(k), self.context.history(req.conversation), req.prompt)
+        return msgs, f"last_k(k={k})", gate_usage, 0.0
+
+    def _resolve(self, req: ProxyRequest, model: PoolModel, msgs,
+                 strategy: str, gate_usage: Usage, decision_latency: float,
+                 *, verification: bool = False) -> ProxyResponse:
+        ctx_tokens = ContextManager.token_count(msgs)
+        has_ctx = len(msgs) > 0 or not (req.query is not None and req.query.needs_context)
+        if verification:
+            res = self.adapter.verification_select(
+                req.prompt, threshold=float(req.params.get(
+                    "threshold", self.config.verify_threshold)),
+                judge=self.judge, context_tokens=ctx_tokens,
+                query=req.query, has_context=has_ctx,
+                m1=self._param_model(req, "m1"), m2=self._param_model(req, "m2"),
+                verifier=self._param_model(req, "verifier"))
+        else:
+            res = self.adapter.answer(model, req.prompt, context_tokens=ctx_tokens,
+                                      query=req.query, has_context=has_ctx)
+        usage = res.usage.add(gate_usage)
+        md = Metadata(model_used=res.model, models_consulted=res.models_consulted,
+                      verifier_score=res.verifier_score,
+                      context_k=len(msgs), context_strategy=strategy,
+                      context_decision_latency=decision_latency, usage=usage)
+        return ProxyResponse(text=res.text, metadata=md, request=req,
+                             true_quality=res.true_quality)
+
+    def _param_model(self, req: ProxyRequest, key: str) -> Optional[PoolModel]:
+        name = req.params.get(key)
+        return self.pool.get(name) if name else None
+
+    def _handle_fixed(self, req: ProxyRequest) -> ProxyResponse:
+        model = self.pool.get(req.params["model"])
+        k = int(req.params.get("context_k", 0))
+        if req.params.get("cache", "skip") != "skip":
+            resp = self._try_cache(req)
+            if resp is not None:
+                return resp
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_quality(self, req: ProxyRequest) -> ProxyResponse:
+        model = self.pool.best()
+        k = int(req.params.get("context_k", 50))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_cost(self, req: ProxyRequest) -> ProxyResponse:
+        model = self.pool.cheapest()
+        return self._resolve(req, model, [], "none", Usage(), 0.0)
+
+    def _handle_model_selector(self, req: ProxyRequest) -> ProxyResponse:
+        k = int(req.params.get("context_k", self.config.default_context_k))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, None, msgs, strat, gate, dlat, verification=True)
+
+    def _handle_smart_context(self, req: ProxyRequest) -> ProxyResponse:
+        k = int(req.params.get("context_k", self.config.smart_context_k))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=True)
+        model = self._param_model(req, "model") or self.pool.best()
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_smart_cache(self, req: ProxyRequest) -> ProxyResponse:
+        resp = self._try_cache(req)
+        if resp is not None:
+            return resp
+        # miss: small model, light context
+        model = self._param_model(req, "model") or self.pool.cheapest()
+        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
+        out = self._resolve(req, model, msgs, strat, gate, dlat)
+        out.metadata.cache_hit = False
+        return out
+
+    def _handle_fast_then_better(self, req: ProxyRequest) -> ProxyResponse:
+        """Latency-centric service type (paper §5.1): the fastest cheap model
+        answers NOW (short output via a suitable prompt); a high-quality
+        answer is prefetched into the exact-match cache asynchronously (its
+        cost is charged, its latency is hidden from the user-facing path)."""
+        fast = self.pool.cheapest()
+        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
+        quick = self._resolve(req, fast, msgs, strat, gate, dlat)
+
+        best = self.pool.best()
+        ctx_tokens = ContextManager.token_count(msgs)
+        better = self.adapter.answer(best, req.prompt, context_tokens=ctx_tokens,
+                                     query=req.query)
+        self.cache.put_exact(self._better_key(req), better.text)
+        # cost is accounted; latency is off the critical path (async prefetch)
+        quick.metadata.usage = quick.metadata.usage.add(
+            Usage(input_tokens=better.usage.input_tokens,
+                  output_tokens=better.usage.output_tokens,
+                  cost=better.usage.cost, latency=0.0))
+        quick.metadata.models_consulted = (
+            quick.metadata.models_consulted + [f"prefetch:{best.name}"])
+        self._better_quality[self._better_key(req)] = better.true_quality
+        return quick
+
+    _better_quality: Dict[str, Any] = {}
+
+    @staticmethod
+    def _better_key(req: ProxyRequest) -> str:
+        return f"__better__:{req.conversation}:{req.prompt}"
+
+    def batch_request(self, prompts, models, *, user: str = "batch",
+                      queries=None) -> Dict[str, List[ProxyResponse]]:
+        """Batch-mode interface (paper §5.2, motivated future work): submit a
+        batch of prompts to several pool models at once and compare."""
+        out: Dict[str, List[ProxyResponse]] = {}
+        queries = queries or [None] * len(prompts)
+        for name in models:
+            rows = []
+            for prompt, q in zip(prompts, queries):
+                rows.append(self.request(ProxyRequest(
+                    prompt=prompt, user=user, conversation=f"batch:{name}",
+                    service_type=ServiceType.FIXED, update_context=False,
+                    query=q, params={"model": name, "context_k": 0})))
+            out[name] = rows
+        return out
+
+    def _try_cache(self, req: ProxyRequest) -> Optional[ProxyResponse]:
+        hit, text, types, tq = self.cache.smart_get(
+            req.prompt, query=req.query, workload=self.workload,
+            relevance_threshold=float(req.params.get(
+                "cache_threshold", self.config.cache_relevance)))
+        usage = self.cache.last_usage
+        if not hit:
+            return None
+        md = Metadata(model_used=(self.cache.small_model.name
+                                  if self.cache.small_model else "cache"),
+                      cache_hit=True, cache_types=types, usage=usage,
+                      context_strategy="cache")
+        return ProxyResponse(text=text or "", metadata=md, request=req,
+                             true_quality=tq)
+
+    # -- iterative refinement -----------------------------------------------------
+    def regenerate(self, resp: ProxyResponse,
+                   service_type: Optional[ServiceType] = None) -> ProxyResponse:
+        """Same service type => escalate quality (paper §3.2); a different
+        service type re-runs the request under the new policy."""
+        req = resp.request
+        self.context.pop_last(req.conversation)   # initial answer leaves context (§5.1)
+        if service_type is not None and service_type != req.service_type:
+            new_req = dataclasses.replace(req, service_type=service_type)
+            out = self.request(new_req)
+        else:
+            out = self._escalate(resp)
+            if req.update_context:
+                self.context.append(req.conversation, req.prompt, out.text)
+        out.metadata.regeneration = resp.metadata.regeneration + 1
+        return out
+
+    def _escalate(self, resp: ProxyResponse) -> ProxyResponse:
+        req = resp.request
+        st = req.service_type
+        if st == ServiceType.FAST_THEN_BETTER:
+            # "Get Better Answer": the prefetched high-quality response is
+            # already in the cache — zero extra model cost, zero wait
+            key = self._better_key(req)
+            text = self.cache.get_exact(key)
+            if text is not None:
+                md = Metadata(model_used="cache:prefetched", cache_hit=True,
+                              cache_types=["exact"], usage=Usage())
+                md.service_type = st.value
+                return ProxyResponse(text=text, metadata=md, request=req,
+                                     true_quality=self._better_quality.get(key))
+        if st == ServiceType.MODEL_SELECTOR:
+            # route straight to the expensive model (§3.3)
+            model = self._param_model(req, "m2") or self.pool.best()
+            k = int(req.params.get("context_k", self.config.default_context_k))
+            msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+            out = self._resolve(req, model, msgs, strat, gate, dlat)
+        elif st == ServiceType.SMART_CONTEXT:
+            # more context, no gate (§3.2: regenerating uses more context)
+            k = 2 * int(req.params.get("context_k", self.config.smart_context_k))
+            msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+            model = self._param_model(req, "model") or self.pool.best()
+            out = self._resolve(req, model, msgs, strat + "+regen", gate, dlat)
+        elif st == ServiceType.SMART_CACHE:
+            # bypass cache entirely, consult a capable model
+            model = self.pool.best()
+            msgs, strat, gate, dlat = self._select_context(
+                req, self.config.default_context_k, smart=False)
+            out = self._resolve(req, model, msgs, strat, gate, dlat)
+        elif st == ServiceType.COST:
+            mid = sorted(self.pool.list(), key=lambda m: m.price_in)
+            model = mid[len(mid) // 2]
+            out = self._resolve(req, model, [], "none", Usage(), 0.0)
+        else:  # fixed / quality -> best model, generous context
+            model = self.pool.best()
+            msgs, strat, gate, dlat = self._select_context(req, 50, smart=False)
+            out = self._resolve(req, model, msgs, strat, gate, dlat)
+        out.metadata.service_type = st.value
+        return out

@@ -1,0 +1,75 @@
+"""In-JAX vector store: the RDS-with-vector-search analogue (paper §4).
+
+Append-only matrix of unit vectors + parallel payload list.  Search is
+batched cosine similarity -> top-k, dispatched to the Pallas ``cache_topk``
+kernel when enabled (TPU target) or its jnp oracle otherwise — this is the
+semantic-cache GET hot path the paper's cost model cares about.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.cache_topk import ops as topk_ops
+
+
+@dataclasses.dataclass
+class SearchHit:
+    index: int
+    score: float
+    payload: Any
+
+
+class VectorStore:
+    def __init__(self, dim: int, capacity: int = 1024, use_pallas: bool = False):
+        self.dim = dim
+        self._vecs = np.zeros((capacity, dim), np.float32)
+        self._payloads: List[Any] = []
+        self.use_pallas = use_pallas
+
+    def __len__(self) -> int:
+        return len(self._payloads)
+
+    def add(self, vecs: np.ndarray, payloads: Sequence[Any]) -> None:
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        assert vecs.shape[0] == len(payloads) and vecs.shape[1] == self.dim
+        n = len(self._payloads)
+        need = n + vecs.shape[0]
+        if need > self._vecs.shape[0]:
+            cap = max(need, 2 * self._vecs.shape[0])
+            grown = np.zeros((cap, self.dim), np.float32)
+            grown[:n] = self._vecs[:n]
+            self._vecs = grown
+        norms = np.linalg.norm(vecs, axis=1, keepdims=True)
+        self._vecs[n:need] = vecs / np.maximum(norms, 1e-9)
+        self._payloads.extend(payloads)
+
+    def search(self, queries: np.ndarray, top_k: int = 4,
+               threshold: float = -1.0,
+               predicate=None) -> List[List[SearchHit]]:
+        """queries: (Q, dim) or (dim,). Returns per-query hits sorted by score."""
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        n = len(self._payloads)
+        if n == 0:
+            return [[] for _ in range(queries.shape[0])]
+        qn = queries / np.maximum(np.linalg.norm(queries, axis=1, keepdims=True), 1e-9)
+        k = min(top_k if predicate is None else min(4 * top_k, n), n)
+        scores, idx = topk_ops.similarity_topk(
+            qn, self._vecs[:n], k, use_pallas=self.use_pallas)
+        out: List[List[SearchHit]] = []
+        for qi in range(queries.shape[0]):
+            hits = []
+            for j in range(k):
+                s, i = float(scores[qi, j]), int(idx[qi, j])
+                if s < threshold:
+                    continue
+                payload = self._payloads[i]
+                if predicate is not None and not predicate(payload):
+                    continue
+                hits.append(SearchHit(index=i, score=s, payload=payload))
+                if len(hits) >= top_k:
+                    break
+            out.append(hits)
+        return out

@@ -1,0 +1,148 @@
+"""Planted-semantics workload generator (DESIGN.md §2).
+
+The paper's evaluation judges live WhatsApp conversations with GPT-4o.  With
+no trained weights or network, we reproduce the evaluation *semantics* with a
+generative model of the workload whose parameters are calibrated to the
+paper's observations:
+
+* topics span health / culture / sports / politics / religion (§5.1);
+* ~30% of queries are factual (§5.3 cache experiment);
+* difficulty is bimodal — most queries are easy for any modern model, a
+  ~20% tail needs capability (matches "difference is most evident only in
+  the tail 20% of messages", Fig 1b);
+* ~20% of conversation messages require context (tail of Fig 6b);
+* quality of model m on query q:  S = 10·σ(a·(c_m − d_q) + b) + ε, clipped
+  to [0,10]; c_m derives from log-active-params so "newer cheap models close
+  the gap" is reproducible by moving c_m (§5.1 observation);
+* answering a context-dependent query without its context costs ~4 pts;
+* small models hallucinate on hard factual queries (floor ~1pt); cached
+  facts lift the floor to ~4pts (Fig 7b's 4x worst-case claim).
+
+Every query carries a ground-truth embedding (topic centroid + jitter) so the
+semantic cache's vector search operates on *real* geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TOPICS = [
+    "health", "nutrition", "religion", "history", "sports", "cricket",
+    "politics", "education", "technology", "finance", "travel", "weather",
+    "cooking", "culture", "language", "science", "medicine", "agriculture",
+    "jobs", "entertainment",
+]
+
+_TEMPLATES = [
+    "tell me about {}", "what is {}", "how does {} work", "why is {} important",
+    "give me advice on {}", "explain {} simply", "what are the benefits of {}",
+    "history of {}", "latest news about {}", "how to improve {}",
+]
+
+
+@dataclasses.dataclass
+class Query:
+    qid: int
+    conversation: str
+    turn: int
+    text: str
+    topic: int
+    difficulty: float          # [0,1]
+    factual: bool
+    needs_context: bool
+    embedding: np.ndarray      # ground-truth semantic location (unit norm)
+    input_tokens: int
+    output_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    n_conversations: int = 10
+    turns_per_conversation: int = 25
+    seed: int = 0
+    embed_dim: int = 64
+    frac_factual: float = 0.30
+    frac_needs_context: float = 0.20
+    frac_hard: float = 0.20
+    mean_input_tokens: float = 30.0
+    output_multiplier: float = 3.0
+
+
+class Workload:
+    def __init__(self, wc: WorkloadConfig = WorkloadConfig()):
+        self.wc = wc
+        self.rng = np.random.default_rng(wc.seed)
+        d = wc.embed_dim
+        self.topic_centroids = self.rng.normal(size=(len(TOPICS), d))
+        self.topic_centroids /= np.linalg.norm(self.topic_centroids, axis=1, keepdims=True)
+        self.queries: List[Query] = []
+        self._generate()
+
+    def _generate(self) -> None:
+        wc, rng = self.wc, self.rng
+        qid = 0
+        for c in range(wc.n_conversations):
+            conv = f"conv{c}"
+            topic = int(rng.integers(len(TOPICS)))
+            for t in range(wc.turns_per_conversation):
+                if rng.random() < 0.15:  # topic drift within a conversation
+                    topic = int(rng.integers(len(TOPICS)))
+                hard = rng.random() < wc.frac_hard
+                difficulty = float(rng.beta(5, 2) if hard else rng.beta(2, 6))
+                # jitter norm ~0.35 relative to the unit centroid, so same-topic
+                # queries land at cosine ~0.9 and cross-topic near 0
+                jit = rng.normal(size=wc.embed_dim) * (0.35 / np.sqrt(wc.embed_dim))
+                emb = self.topic_centroids[topic] + jit
+                emb /= np.linalg.norm(emb)
+                tmpl = _TEMPLATES[int(rng.integers(len(_TEMPLATES)))]
+                text = tmpl.format(TOPICS[topic]) + f" ({conv} turn {t})"
+                itoks = max(8, int(rng.lognormal(math.log(wc.mean_input_tokens), 0.5)))
+                self.queries.append(Query(
+                    qid=qid, conversation=conv, turn=t, text=text, topic=topic,
+                    difficulty=difficulty,
+                    factual=bool(rng.random() < wc.frac_factual),
+                    needs_context=bool(t > 0 and rng.random() < wc.frac_needs_context),
+                    embedding=emb.astype(np.float32),
+                    input_tokens=itoks,
+                    output_tokens=int(itoks * wc.output_multiplier),
+                ))
+                qid += 1
+
+    # -- quality model -------------------------------------------------------
+    def quality(self, q: Query, capability: float, *,
+                has_context: bool = True,
+                cached_facts: bool = False,
+                rng: Optional[np.random.Generator] = None) -> float:
+        """True response quality S in [0, 10]."""
+        rng = rng or self.rng
+        a, b = 6.0, 2.2
+        s = 10.0 / (1.0 + math.exp(-(a * (capability - q.difficulty) + b)))
+        if q.needs_context and not has_context:
+            s -= 4.0
+        if q.factual and capability < 0.45:
+            # small models hallucinate on factual content
+            s = min(s, 1.0 + 4.0 * max(capability - q.difficulty, 0.0))
+            if cached_facts:
+                s = max(s, 4.0 + 2.0 * capability)   # grounded by the cache
+        s += float(rng.normal(0.0, 0.5))
+        return float(np.clip(s, 0.0, 10.0))
+
+    def conversations(self) -> Dict[str, List[Query]]:
+        out: Dict[str, List[Query]] = {}
+        for q in self.queries:
+            out.setdefault(q.conversation, []).append(q)
+        return out
+
+
+def capability_from_params(active_params: int) -> float:
+    """Map active-parameter count -> capability c_m in [0,1].
+
+    Anchors: 350M -> ~0.30, 2B -> ~0.48, 7B -> ~0.62, 27B -> ~0.76,
+    100B+ active -> ~0.9.  "Newer generation" models can be simulated by
+    adding a generation bonus (cf. paper §5.1: 4o-mini ≈ old GPT-4 quality).
+    """
+    lg = math.log10(max(active_params, 1))
+    return float(np.clip((lg - 7.5) / 4.5, 0.05, 0.97))

@@ -1,0 +1,68 @@
+"""Tokenizers for the proxy + training pipeline.
+
+* ByteTokenizer  — reversible UTF-8 byte-level tokenizer (+ special ids);
+  used for real text flowing through pool models at smoke scale.
+* HashWordTokenizer — deterministic word-hash tokenizer into an arbitrary
+  vocab; used when a pool model has a big vocab and we only need structure,
+  not reversibility.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+_N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    vocab_size = 256 + _N_SPECIAL
+    pad_id, bos_id, eos_id = PAD_ID, BOS_ID, EOS_ID
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = [b + _N_SPECIAL for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids) -> str:
+        # ids >= 259 (models with vocab > 259 sampling out of byte range,
+        # e.g. random-weight smoke models) fold back into byte space
+        bs = bytes((int(i) - _N_SPECIAL) % 256 for i in ids
+                   if int(i) >= _N_SPECIAL)
+        return bs.decode("utf-8", errors="replace")
+
+
+class HashWordTokenizer:
+    def __init__(self, vocab_size: int):
+        assert vocab_size > _N_SPECIAL + 1
+        self.vocab_size = vocab_size
+        self.pad_id, self.bos_id, self.eos_id = PAD_ID, BOS_ID, EOS_ID
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = []
+        for w in text.lower().split():
+            h = int.from_bytes(hashlib.blake2b(w.encode(), digest_size=4).digest(), "little")
+            ids.append(_N_SPECIAL + h % (self.vocab_size - _N_SPECIAL))
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids) -> str:  # non-reversible
+        return " ".join(f"<{int(i)}>" for i in ids)
+
+
+def pad_batch(seqs: List[List[int]], length: int, pad_id: int = PAD_ID) -> np.ndarray:
+    out = np.full((len(seqs), length), pad_id, np.int32)
+    for i, s in enumerate(seqs):
+        s = s[:length]
+        out[i, :len(s)] = s
+    return out

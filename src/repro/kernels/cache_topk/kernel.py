@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused embedding-similarity + running top-k.
+
+The semantic cache GET hot path (paper §3.5): score a tile of queries against
+the whole vector DB and keep the best k, without materialising the full
+(Q, N) similarity matrix in HBM.
+
+Tiling: grid = (Q/TQ, N/TN), N minor (sequential); VMEM scratch carries a
+running (TQ, K) score/index accumulator across N tiles.  Per tile the MXU
+does a (TQ, D) x (D, TN) matmul; top-k extraction is K unrolled
+max-extract-mask passes (K is small), then a merge of the 2K candidates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38  # python float so the kernel doesn't capture a traced constant
+
+
+def _extract_topk(scores: jax.Array, idx: jax.Array, k: int):
+    """scores: (TQ, M) fp32; idx: (TQ, M) int32 -> ((TQ,k), (TQ,k)) best-first."""
+    outs_s, outs_i = [], []
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    for _ in range(k):
+        m = jnp.max(scores, axis=1)
+        am = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        picked = cols == am[:, None]
+        gi = jnp.sum(jnp.where(picked, idx, 0), axis=1)
+        outs_s.append(m)
+        outs_i.append(gi)
+        scores = jnp.where(picked, NEG, scores)
+    return jnp.stack(outs_s, axis=1), jnp.stack(outs_i, axis=1)
+
+
+def _kernel(q_ref, db_ref, out_s_ref, out_i_ref, acc_s, acc_i, *, k: int,
+            tile_n: int, n_valid: int):
+    ni = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_s[...] = jnp.full_like(acc_s, NEG)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    q = q_ref[...].astype(jnp.float32)           # (TQ, D)
+    db = db_ref[...].astype(jnp.float32)         # (TN, D)
+    scores = jax.lax.dot_general(q, db, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (TQ, TN)
+    base = ni * tile_n
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(gidx < n_valid, scores, NEG)   # mask padded DB rows
+
+    tile_s, tile_i = _extract_topk(scores, gidx, k)
+
+    comb_s = jnp.concatenate([acc_s[...], tile_s], axis=1)
+    comb_i = jnp.concatenate([acc_i[...], tile_i], axis=1)
+    new_s, new_i = _extract_topk(comb_s, comb_i, k)
+    acc_s[...] = new_s
+    acc_i[...] = new_i
+
+    @pl.when(ni == n_tiles - 1)
+    def _write():
+        out_s_ref[...] = acc_s[...]
+        out_i_ref[...] = acc_i[...]
+
+
+def similarity_topk_pallas(q: jax.Array, db: jax.Array, k: int,
+                           tile_q: int = 128, tile_n: int = 512,
+                           interpret: bool = True):
+    """q: (Q, D); db: (N, D). Returns (scores (Q,k), idx (Q,k))."""
+    Q, D = q.shape
+    N = db.shape[0]
+    tile_q = min(tile_q, max(8, Q))
+    tile_n = min(tile_n, max(128, 1 << (N - 1).bit_length()))
+    padq = (-Q) % tile_q
+    padn = (-N) % tile_n
+    qp = jnp.pad(q, ((0, padq), (0, 0)))
+    dbp = jnp.pad(db, ((0, padn), (0, 0)))
+    grid = (qp.shape[0] // tile_q, dbp.shape[0] // tile_n)
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, tile_n=tile_n, n_valid=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, D), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((tile_n, D), lambda qi, ni: (ni, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((tile_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, k), jnp.float32),
+            pltpu.VMEM((tile_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, dbp)
+    return out_s[:Q], out_i[:Q]

@@ -1,0 +1,25 @@
+"""Jit'd dispatch wrapper for fused similarity+top-k (kernel <-> oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels.cache_topk.kernel import similarity_topk_pallas
+from repro.kernels.cache_topk.ref import similarity_topk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_jit(q, db, k):
+    return similarity_topk_ref(q, db, k)
+
+
+def similarity_topk(q, db, k: int, use_pallas: bool = False, interpret: bool = True):
+    """q: (Q, D); db: (N, D) -> (scores (Q,k), idx (Q,k)) as numpy arrays."""
+    if use_pallas:
+        s, i = similarity_topk_pallas(jax.numpy.asarray(q), jax.numpy.asarray(db),
+                                      k, interpret=interpret)
+    else:
+        s, i = _ref_jit(jax.numpy.asarray(q), jax.numpy.asarray(db), k)
+    return np.asarray(s), np.asarray(i)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused similarity + top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_topk_ref(q: jax.Array, db: jax.Array, k: int):
+    """q: (Q, D) unit rows; db: (N, D) unit rows. Returns (scores (Q,k), idx (Q,k))."""
+    scores = jnp.einsum("qd,nd->qn", q.astype(jnp.float32), db.astype(jnp.float32))
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a deep KV cache.
+
+Decode is memory-bound: the whole KV cache streams HBM -> VMEM once.  The
+grid is (B * Hkv, T/TT), KV-time minor, carrying online-softmax state in
+VMEM.  All G query heads of a KV group ride along in one (G, D) block so the
+cache is read once per KV head, not once per Q head — this is the GQA
+arithmetic-intensity win (G MACs per loaded KV element).
+
+Masking uses the per-request position (scalar-prefetched), so continuous-
+batching slots with different lengths share one kernel launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            tile_t: int, window: int, scale: float, n_kv_heads: int):
+    bk = pl.program_id(0)
+    ti = pl.program_id(1)
+    n_t = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = bk // n_kv_heads
+    pos = pos_ref[b]
+
+    q = q_ref[0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0].astype(jnp.float32)            # (TT, D)
+    v = v_ref[0].astype(jnp.float32)            # (TT, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, TT)
+    kpos = ti * tile_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos <= pos
+    if window > 0:
+        mask = mask & (pos - kpos < window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...][:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_cur = l_scr[...][:, 0] * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_cur[:, None]
+    l_scr[...] = l_cur[:, None]
+    acc_scr[...] = acc
+
+    @pl.when(ti == n_t - 1)
+    def _write():
+        denom = jnp.maximum(l_scr[...][:, 0], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                            pos: jax.Array, window: int = 0,
+                            tile_t: int = 512, interpret: bool = True):
+    """q: (B, Hq, D); caches: (B, T, Hkv, D); pos: (B,). Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    tile_t = min(tile_t, T)
+    padt = (-T) % tile_t
+    kp = jnp.pad(k_cache, ((0, 0), (0, padt), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, padt), (0, 0), (0, 0)))
+    Tp = kp.shape[1]
+    # (B, T, Hkv, D) -> (B*Hkv, T, D);  q -> (B*Hkv, G, D)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * Hkv, Tp, D)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * Hkv, Tp, D)
+    qf = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    grid = (B * Hkv, Tp // tile_t)
+    scale = 1.0 / (D ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, tile_t=tile_t, window=window, scale=scale,
+                          n_kv_heads=Hkv),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, D), lambda bk, ti, pos_ref: (bk, 0, 0)),
+                pl.BlockSpec((1, tile_t, D), lambda bk, ti, pos_ref: (bk, ti, 0)),
+                pl.BlockSpec((1, tile_t, D), lambda bk, ti, pos_ref: (bk, ti, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, D), lambda bk, ti, pos_ref: (bk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,22 @@
+"""Jit'd dispatch wrapper for GQA decode attention (kernel <-> oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def _ref_jit(q, k_cache, v_cache, pos, window):
+    return decode_attention_ref(q, k_cache, v_cache, pos, window)
+
+
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0,
+                     use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return decode_attention_pallas(q, k_cache, v_cache, pos,
+                                       window=window, interpret=interpret)
+    return _ref_jit(q, k_cache, v_cache, pos, window)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         pos: jax.Array, window: int = 0) -> jax.Array:
+    """q: (B, Hq, D); caches: (B, T, Hkv, D); pos: (B,) index of the query
+    token (attends to kv positions <= pos). Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= pos[:, None]
+    if window > 0:
+        mask = mask & (pos[:, None] - kpos < window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

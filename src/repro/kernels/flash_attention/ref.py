@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for blocked causal (sliding-window) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        window: int = 0) -> jax.Array:
+    """q,k,v: (BH, S, D). Causal; window>0 limits lookback. Returns (BH, S, D)."""
+    S = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+MUST be the first import in the process (jax locks device count on first
+init) — hence the XLA_FLAGS lines above everything else.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Per case: jit(step).lower(...).compile() under the production mesh, print
+memory_analysis + cost_analysis, parse collectives from the HLO, and write
+the roofline record (§Roofline) to JSON.
+"""
+
+import argparse
+import gc
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import meshctx
+from repro.launch.mesh import make_context, make_production_mesh
+from repro.launch.specs import build_case, skip_reason
+from repro.models.config import INPUT_SHAPES
+from repro.roofline import analysis
+
+
+def _compile_case(case):
+    with meshctx.use_mesh(case.ctx):
+        jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                         donate_argnums=case.donate_argnums)
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _counts(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = analysis.collective_bytes(compiled.as_text())
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), coll
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             mesh=None, verbose: bool = True, calibrate: bool = True,
+             perf=()) -> dict:
+    from repro.launch.specs import build_calibration_case, calibration_points
+    from repro import configs as _configs
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if perf:
+        tag += "__perf-" + "-".join(perf)
+    reason = skip_reason(arch, shape_name)
+    rec: dict
+    if reason:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": True, "reason": reason}
+        _write(out_dir, tag, rec)
+        if verbose:
+            print(f"[skip] {tag}: {reason}")
+        return rec
+
+    # 1) full scanned compile: proves lowering/sharding + gives memory analysis
+    case = build_case(arch, shape_name, multi_pod=multi_pod, mesh=mesh, perf=perf)
+    t0 = time.time()
+    compiled = _compile_case(case)
+    dt = time.time() - t0
+    flops_dev, bytes_dev, coll = _counts(compiled)
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k, 0)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes")}
+    del compiled
+    gc.collect()
+
+    # 2) depth-calibration compiles (unrolled): XLA cost analysis counts scan
+    # bodies once; extrapolate per-unit costs linearly (exact for homogeneous
+    # stacks). See launch/specs.calibration_points.
+    calib_note = "scan-body-once (uncorrected)"
+    if calibrate:
+        cfg_full = case.cfg
+        pts, full_units, base = calibration_points(cfg_full)
+        cc = []
+        for u in pts:
+            ccase = build_calibration_case(arch, shape_name, u,
+                                           multi_pod=multi_pod, mesh=mesh,
+                                           perf=perf)
+            ccomp = _compile_case(ccase)
+            cc.append(_counts(ccomp))
+            del ccomp, ccase
+            gc.collect()
+        f0, b0, coll0 = cc[0]
+        flops_dev, bytes_dev = f0, b0
+        coll = dict(coll0)
+        for k, (fk, bk, collk) in enumerate(cc[1:]):
+            mult = full_units[k] - base[k]
+            flops_dev += mult * (fk - f0)
+            bytes_dev += mult * (bk - b0)
+            for op in set(coll) | set(collk):
+                coll[op] = coll.get(op, 0) + mult * (collk.get(op, 0) - coll0.get(op, 0))
+        coll = {op: max(0, int(v)) for op, v in coll.items()}
+        calib_note = f"depth-FD calibrated (units={full_units})"
+
+    shp = INPUT_SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    mf, tokens = analysis.model_flops(case.cfg, shp)
+    r = analysis.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_global=flops_dev * chips, bytes_global=bytes_dev * chips,
+        collective_bytes_global=float(sum(coll.values())) * chips,
+        collective_by_op=coll, model_flops=mf, tokens=tokens,
+        mem_args=mem["argument_size_in_bytes"], mem_out=mem["output_size_in_bytes"],
+        mem_temp=mem["temp_size_in_bytes"], compile_seconds=dt)
+    rec = r.to_json()
+    rec["skipped"] = False
+    rec["calibration"] = calib_note
+    rec["perf_variant"] = list(perf)
+    rec["mem_alias"] = mem["alias_size_in_bytes"]
+    _write(out_dir, tag, rec)
+    if verbose:
+        hbm_used = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                    + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"])
+        print(f"[ok] {tag}  compile={dt:.1f}s  ({calib_note})")
+        print(f"     memory/device: args={r.mem_args/2**30:.2f}GiB "
+              f"temp={r.mem_temp/2**30:.2f}GiB out={r.mem_out/2**30:.2f}GiB "
+              f"alias={mem['alias_size_in_bytes']/2**30:.2f}GiB "
+              f"~peak={hbm_used/2**30:.2f}GiB (HBM 16GiB)")
+        print(f"     cost/dev: flops={flops_dev:.3e} bytes={bytes_dev:.3e} "
+              f"coll={sum(coll.values()):.3e} {coll}")
+        print(f"     roofline: compute={r.t_compute*1e3:.2f}ms "
+              f"memory={r.t_memory*1e3:.2f}ms "
+              f"collective={r.t_collective*1e3:.2f}ms -> {r.dominant} "
+              f"(useful={r.useful_ratio:.2f}, mfu@roofline={r.mfu:.2%})")
+    del case
+    gc.collect()
+    return rec
+
+
+def _write(out_dir: str, tag: str, rec: dict) -> None:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--perf", default="",
+                    help="comma-separated perf variants: moe_stationary,"
+                         "cache_onehot,microbatch2 (§Perf hillclimb)")
+    args = ap.parse_args()
+    perf = tuple(p for p in args.perf.split(",") if p)
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    cases = []
+    if args.all:
+        for mp in meshes:
+            for arch in configs.ARCH_IDS:
+                for shape_name in INPUT_SHAPES:
+                    cases.append((arch, shape_name, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cases = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    mesh_cache = {}
+    for arch, shape_name, mp in cases:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = f"{arch}__{shape_name}__{mesh_name}"
+        if perf:
+            tag += "__perf-" + "-".join(perf)
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[cached] {tag}")
+            continue
+        if mp not in mesh_cache:
+            mesh_cache[mp] = make_production_mesh(multi_pod=mp)
+        try:
+            run_case(arch, shape_name, mp, args.out, mesh=mesh_cache[mp],
+                     perf=perf)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {tag}")
+            traceback.print_exc()
+            _write(args.out, tag, {"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name, "skipped": False,
+                                   "error": traceback.format_exc()[-2000:]})
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Production mesh builders (functions, not module constants — importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+from repro.launch.meshctx import MeshContext
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """v5e-256 single pod (16x16 data x model) or 2 pods (2x16x16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_context(mesh: jax.sharding.Mesh) -> MeshContext:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshContext(mesh=mesh, data_axes=("pod", "data"), model_axis="model")
+    return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist, as a 1D 'data' mesh (smoke-scale serving)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,248 @@
+"""Dry-run case builder: (arch x input-shape x mesh) -> lowerable closure.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input
+(weak-type correct, shardable, zero device allocation) and the matching
+in_shardings; ``build_case`` pairs them with the right step function:
+
+* train_4k     -> training.train.train_step        (fwd+bwd+AdamW)
+* prefill_32k  -> serving.engine.prefill_step
+* decode_32k / long_500k -> serving.engine.serve_step (1 token, deep KV cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_context, make_production_mesh
+from repro.launch.meshctx import MeshContext
+from repro.models import init_cache, init_model, vlm
+from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.serving.engine import prefill_step, serve_step
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train import train_step
+
+
+@dataclasses.dataclass
+class Case:
+    arch: str
+    shape: str
+    multi_pod: bool
+    cfg: ModelConfig
+    ctx: MeshContext
+    fn: Callable
+    args: Tuple[Any, ...]              # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    skip_reason: Optional[str] = None
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not configs.supports_long_context(arch):
+        return ("pure full-attention architecture: long_500k requires a "
+                "sub-quadratic or sliding-window variant (DESIGN.md §5)")
+    return None
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str, cfg: Optional[ModelConfig] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this case."""
+    cfg = cfg or configs.get(arch)
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    out: Dict[str, Any] = {}
+    if shp.kind == "train":
+        out["tokens"] = _struct((B, S), jnp.int32)
+        out["labels"] = _struct((B, S), jnp.int32)
+    elif shp.kind == "prefill":
+        out["tokens"] = _struct((B, S), jnp.int32)
+    else:  # decode
+        out["tokens"] = _struct((B, 1), jnp.int32)
+        out["positions"] = _struct((B, 1), jnp.int32)
+    if cfg.family == "vlm" and shp.kind != "decode":
+        out["img_embeds"] = _struct((B, vlm.n_patches(cfg), cfg.d_model), cfg.dtype)
+    if cfg.family == "audio" and shp.kind != "decode":
+        out["frames"] = _struct((B, cfg.n_frames, cfg.d_encoder), cfg.dtype)
+    return out
+
+
+def _params_struct(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_model(cfg, k), key)
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int, with_cross: bool):
+    struct = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    if with_cross and cfg.family == "audio":
+        k = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        struct = dict(struct, cross_kv=(k, k))
+    return struct
+
+
+PERF_VARIANTS = ("moe_stationary", "cache_onehot", "microbatch2", "microbatch4", "cp_decode")
+
+
+def build_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               opt_dtype: str = "auto",
+               cfg: Optional[ModelConfig] = None,
+               perf: Tuple[str, ...] = ()) -> Case:
+    cfg = cfg or configs.get(arch)
+    shp = INPUT_SHAPES[shape_name]
+    if shp.kind == "train" and not cfg.remat:
+        cfg = dataclasses.replace(cfg, remat=True)   # activation checkpointing
+    # beyond-paper perf levers (§Perf) — off by default (baseline-faithful)
+    if "moe_stationary" in perf:
+        cfg = dataclasses.replace(cfg, moe_caseb_stationary=True)
+    if "cache_onehot" in perf:
+        cfg = dataclasses.replace(cfg, sharded_cache_update=True)
+    if "cp_decode" in perf:
+        cfg = dataclasses.replace(cfg, context_parallel_decode=True)
+    microbatches = 1
+    if "microbatch2" in perf:
+        microbatches = 2
+    if "microbatch4" in perf:
+        microbatches = 4
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    ctx = make_context(mesh)
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return Case(arch, shape_name, multi_pod, cfg, ctx, None, (), (), (),
+                    skip_reason=reason)
+
+    pstruct = _params_struct(cfg)
+    pshard = sh.shard_params_specs(pstruct, cfg, ctx, fsdp=(shp.kind == "train"))
+    ins = input_specs(arch, shape_name, cfg)
+    bshard = sh.batch_specs(cfg, shp, ctx)
+    B = shp.global_batch
+
+    if shp.kind == "train":
+        # bf16 optimizer moments for the giant MoE models (EXPERIMENTS.md)
+        if opt_dtype == "auto":
+            big = cfg.total_params() * 2 > 100e9
+            sdtype = jnp.bfloat16 if big else jnp.float32
+        else:
+            sdtype = jnp.dtype(opt_dtype)
+        ostruct = jax.eval_shape(lambda p: init_opt_state(p, sdtype), pstruct)
+        oshard = sh.shard_opt_state_specs(ostruct, cfg, ctx)
+        oc = OptConfig()
+        fn = functools.partial(train_step, cfg=cfg, oc=oc,
+                               microbatches=microbatches)
+        batch = {k: ins[k] for k in ins}
+        bsh = {k: bshard[k] for k in batch}
+        return Case(arch, shape_name, multi_pod, cfg, ctx, fn,
+                    (pstruct, ostruct, batch), (pshard, oshard, bsh),
+                    donate_argnums=(0, 1))
+
+    if shp.kind == "prefill":
+        n_prefix = vlm.n_patches(cfg) if cfg.family == "vlm" else 0
+        cstruct = _cache_struct(cfg, B, shp.seq_len + n_prefix, with_cross=False)
+        cshard = sh.cache_specs(cstruct, cfg, shp, ctx)
+        kwargs = {k: ins[k] for k in ("img_embeds", "frames") if k in ins}
+        kshard = {k: bshard[k] for k in kwargs}
+        fn = functools.partial(prefill_step, cfg=cfg, **{})
+        # close over kwargs order by wrapping: prefill(params, tokens, cache, **kw)
+        if kwargs:
+            def fn2(params, tokens, cache, extra, _cfg=cfg):
+                return prefill_step(params, tokens, cache, cfg=_cfg, **extra)
+            return Case(arch, shape_name, multi_pod, cfg, ctx, fn2,
+                        (pstruct, ins["tokens"], cstruct, kwargs),
+                        (pshard, bshard["tokens"], cshard, kshard),
+                        donate_argnums=(2,))
+        fn2 = functools.partial(prefill_step, cfg=cfg)
+        return Case(arch, shape_name, multi_pod, cfg, ctx, fn2,
+                    (pstruct, ins["tokens"], cstruct),
+                    (pshard, bshard["tokens"], cshard),
+                    donate_argnums=(2,))
+
+    # decode
+    cstruct = _cache_struct(cfg, B, shp.seq_len, with_cross=True)
+    cshard = sh.cache_specs(cstruct, cfg, shp, ctx)
+    tsh = sh.batch_specs(cfg, shp, ctx)["tokens"]
+    fn2 = functools.partial(serve_step, cfg=cfg)
+    return Case(arch, shape_name, multi_pod, cfg, ctx, fn2,
+                (pstruct, ins["tokens"], ins["positions"], cstruct),
+                (pshard, tsh, tsh, cshard),
+                donate_argnums=(3,))
+
+
+def all_cases(multi_pod: bool = False):
+    for arch in configs.ARCH_IDS:
+        for shape_name in INPUT_SHAPES:
+            yield arch, shape_name, multi_pod
+
+
+# --------------------------------------------------------------------------
+# Depth calibration (see roofline/analysis.py): XLA's cost analysis counts
+# while-loop bodies once, so scanned stacks undercount.  We compile depth-1
+# and depth-2 *unrolled* variants at full width and extrapolate linearly —
+# exact for homogeneous stacks.  Whisper has two unit kinds (enc/dec layers)
+# and gets a 3-point fit.
+# --------------------------------------------------------------------------
+def unit_counts(cfg: ModelConfig) -> Tuple[int, ...]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return (cfg.n_layers,)
+    if fam == "moe":
+        return (cfg.n_layers // cfg.moe_interleave,)
+    if fam == "hybrid":
+        return (cfg.n_layers // (cfg.hybrid_group + 1),)
+    if fam == "ssm":
+        return (cfg.n_layers // cfg.slstm_interval,)
+    if fam == "audio":
+        return (cfg.n_enc_layers, cfg.n_layers)
+    raise ValueError(fam)
+
+
+def with_units(cfg: ModelConfig, units: Tuple[int, ...]) -> ModelConfig:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return dataclasses.replace(cfg, n_layers=units[0], unroll_layers=True)
+    if fam == "moe":
+        return dataclasses.replace(cfg, n_layers=units[0] * cfg.moe_interleave,
+                                   unroll_layers=True)
+    if fam == "hybrid":
+        rem = cfg.n_layers % (cfg.hybrid_group + 1)
+        return dataclasses.replace(
+            cfg, n_layers=units[0] * (cfg.hybrid_group + 1) + rem,
+            unroll_layers=True)
+    if fam == "ssm":
+        return dataclasses.replace(cfg, n_layers=units[0] * cfg.slstm_interval,
+                                   unroll_layers=True)
+    if fam == "audio":
+        return dataclasses.replace(cfg, n_enc_layers=units[0], n_layers=units[1],
+                                   unroll_layers=True)
+    raise ValueError(fam)
+
+
+def calibration_points(cfg: ModelConfig):
+    """[(units_tuple, weight_in_extrapolation)] — linear model per unit kind.
+
+    corrected = c(base) + sum_k (U_k - base_k) * (c(bump_k) - c(base))
+    """
+    full = unit_counts(cfg)
+    base = tuple(1 for _ in full)
+    pts = [base]
+    for k in range(len(full)):
+        bump = list(base)
+        bump[k] += 1
+        pts.append(tuple(bump))
+    return pts, full, base
+
+
+def build_calibration_case(arch: str, shape_name: str, units: Tuple[int, ...],
+                           *, multi_pod: bool = False, mesh=None,
+                           perf: Tuple[str, ...] = ()) -> Case:
+    cfg = with_units(configs.get(arch), units)
+    return build_case(arch, shape_name, multi_pod=multi_pod, mesh=mesh, cfg=cfg,
+                      perf=perf)

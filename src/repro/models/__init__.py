@@ -1,0 +1,60 @@
+"""Model zoo: unified init/apply entry points over all six families."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer, vlm
+from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+__all__ = ["ModelConfig", "ShapeConfig", "INPUT_SHAPES", "init_model", "apply_model",
+           "init_cache", "transformer", "encdec", "vlm"]
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> Dict:
+    if cfg.family == "audio":
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    if cfg.family == "audio":
+        from repro.models import layers as L
+        return {"kv": L.init_kv_cache(cfg, batch, max_len, cfg.n_layers)}
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def apply_model(
+    params: Dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict] = None,
+    img_embeds: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+    cross_kv=None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Single forward entry point.
+
+    audio: pass ``frames`` (prefill; cross-KV computed here) or ``cross_kv``
+    (decode).  vlm: pass ``img_embeds`` at train/prefill.
+    Returns (logits, new_cache, aux_loss).
+    """
+    if cfg.family == "audio":
+        if cross_kv is None and cache is not None and "cross_kv" in cache:
+            cross_kv = cache["cross_kv"]
+        if cross_kv is None:
+            assert frames is not None, "audio prefill needs frames"
+            enc = encdec.encode(params, frames, cfg)
+            cross_kv = encdec.precompute_cross_kv(params, enc, cfg)
+        sub = None if cache is None else {"kv": cache["kv"]}
+        logits, new_cache = encdec.decode(params, tokens, cross_kv, cfg,
+                                          positions=positions, cache=sub)
+        if new_cache is not None:
+            new_cache = dict(new_cache, cross_kv=cross_kv)
+        return logits, new_cache, jnp.float32(0.0)
+    return transformer.forward(params, tokens, cfg, positions=positions,
+                               cache=cache, img_embeds=img_embeds)

@@ -1,0 +1,208 @@
+"""Unified model configuration covering all six architecture families.
+
+A single frozen dataclass describes every architecture the framework can
+instantiate (dense / moe / hybrid / ssm / vlm / audio).  Configs are hashable
+so they can be passed as static arguments to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    act: str = "silu"                # silu | geglu | gelu
+    qkv_bias: bool = False           # qwen2
+    qk_norm: bool = False            # gemma3
+    norm: str = "rms"                # rms | layer
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0       # attention-score softcap; 0 = disabled (grok: 30)
+    final_softcap: float = 0.0       # output-logit softcap; 0 = disabled (grok: 30)
+    scale_embed: bool = False        # gemma: multiply embeddings by sqrt(d_model)
+
+    # -- sliding-window / local:global attention (gemma3) --------------------
+    sliding_window: int = 0          # 0 = all layers full attention
+    global_interval: int = 0         # every Nth layer global, rest local; 0 = all global
+
+    # -- mixture of experts ---------------------------------------------------
+    n_experts: int = 0
+    moe_top_k: int = 1
+    moe_d_ff: int = 0                # 0 -> d_ff
+    moe_interleave: int = 1          # MoE on layers with (i % interleave == interleave-1)
+    n_shared_experts: int = 0        # llama4: dense "shared expert" alongside routed
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # -- SSM / hybrid ---------------------------------------------------------
+    ssm_state: int = 0               # N (Mamba2 state size)
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128             # SSD chunk length
+    hybrid_group: int = 0            # zamba2: mamba blocks per shared-attn group
+    n_shared_attn: int = 2           # zamba2: number of alternating shared blocks
+    slstm_interval: int = 0          # xlstm: every Nth block is sLSTM (0 = none)
+
+    # -- encoder-decoder (audio) ----------------------------------------------
+    n_enc_layers: int = 0
+    n_frames: int = 0                # encoder input length (post conv-frontend stub)
+    d_enc: int = 0                   # 0 -> d_model
+
+    # -- vlm ------------------------------------------------------------------
+    n_img_patches: int = 0           # prepended patch embeddings (frontend stub)
+
+    # -- numerics / execution -------------------------------------------------
+    dtype: str = "float32"           # param + activation dtype
+    remat: bool = False              # checkpoint each scanned block
+    unroll_layers: bool = False      # python-loop stacks (dry-run cost calibration)
+    use_pallas: bool = False         # TPU kernels (CPU tests/dry-run use jnp path)
+    # --- beyond-paper perf levers (§Perf; default off = paper-faithful) -----
+    moe_caseb_stationary: bool = False  # case-B MoE: keep weights resident,
+                                        # move activations (vs per-layer FSDP
+                                        # weight all-gather)
+    sharded_cache_update: bool = False  # one-hot KV write: GSPMD-local on a
+                                        # sequence-sharded cache (vs scatter
+                                        # that forces a cache all-gather)
+                                        # [REFUTED in §Perf — kept for the record]
+    context_parallel_decode: bool = False  # shard_map flash-decode over the
+                                           # seq-sharded KV cache: local cache
+                                           # write + distributed online softmax
+    max_position: int = 1_048_576    # RoPE/positional safety bound
+
+    source: str = ""                 # citation (paper / model card)
+
+    # -- derived --------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def moe_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def d_encoder(self) -> int:
+        return self.d_enc or self.d_model
+
+    def layer_is_global(self, i: int) -> bool:
+        """Local:global pattern: with global_interval g, layer i is global iff
+        (i + 1) % g == 0 (gemma3: 5 local then 1 global)."""
+        if self.sliding_window <= 0 or self.global_interval <= 0:
+            return True
+        return (i + 1) % self.global_interval == 0
+
+    def layer_is_moe(self, i: int) -> bool:
+        if self.n_experts <= 0:
+            return False
+        return i % self.moe_interleave == self.moe_interleave - 1
+
+    def layer_is_slstm(self, i: int) -> bool:
+        if self.slstm_interval <= 0:
+            return False
+        return (i + 1) % self.slstm_interval == 0
+
+    def validate(self) -> "ModelConfig":
+        assert self.family in ("dense", "moe", "hybrid", "ssm", "vlm", "audio"), self.family
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA requires n_heads % n_kv_heads == 0"
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.moe_top_k >= 1
+            assert self.n_layers % self.moe_interleave == 0
+        if self.family == "hybrid":
+            assert self.ssm_state > 0 and self.hybrid_group > 0
+        if self.family == "audio":
+            assert self.n_enc_layers > 0 and self.n_frames > 0
+        if self.family == "vlm":
+            assert self.n_img_patches > 0
+        return self
+
+    # number of params that touch every token (for cost-per-token accounting,
+    # paper §2.2: cost proportional to active parameters)
+    def active_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        gated = self.act in ("silu", "geglu")
+        ff_mats = 3 if gated else 2
+        out = 0
+        if self.family in ("dense", "vlm"):
+            out = self.n_layers * (attn + ff_mats * d * self.d_ff)
+        elif self.family == "moe":
+            per = 0
+            n_moe = sum(self.layer_is_moe(i) for i in range(self.n_layers))
+            n_dense = self.n_layers - n_moe
+            per += n_dense * (attn + ff_mats * d * self.d_ff)
+            active_ff = self.moe_top_k * self.moe_ff + self.n_shared_experts * self.d_ff
+            per += n_moe * (attn + ff_mats * d * active_ff + d * self.n_experts)
+            out = per
+        elif self.family == "hybrid":
+            n_groups = 0 if self.hybrid_group <= 0 else self.n_layers // (self.hybrid_group + 1)
+            n_mamba = self.n_layers - n_groups
+            inner = self.ssm_inner
+            mamba = d * (2 * inner + 2 * self.ssm_state + self.ssm_heads) + inner * d
+            out = n_mamba * mamba + n_groups * (attn + ff_mats * d * self.d_ff)
+        elif self.family == "ssm":
+            inner = 2 * d
+            mlstm = d * (3 * inner + inner) + inner * d
+            out = self.n_layers * mlstm
+        elif self.family == "audio":
+            dec_attn = attn * 2  # self + cross
+            out = self.n_enc_layers * (attn + 2 * d * self.d_ff) + \
+                self.n_layers * (dec_attn + 2 * d * self.d_ff)
+        return out + self.vocab * d
+
+    def total_params(self) -> int:
+        if self.family != "moe":
+            return self.active_params()
+        d = self.d_model
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        n_moe = sum(self.layer_is_moe(i) for i in range(self.n_layers))
+        n_dense = self.n_layers - n_moe
+        per = n_dense * (attn + 3 * d * self.d_ff)
+        per += n_moe * (attn + 3 * d * (self.n_experts * self.moe_ff
+                                        + self.n_shared_experts * self.d_ff)
+                        + d * self.n_experts)
+        return per + self.vocab * d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,274 @@
+"""Mixture-of-experts layer.
+
+Three execution paths, one routing algorithm:
+
+* ``moe_dense_ref``  — every expert on every token (oracle; tiny configs only).
+* ``_moe_local``     — capacity-bounded gather/scatter routing on one device:
+  top-k -> stable argsort by expert -> rank-within-expert -> scatter into an
+  (E, C, d) buffer -> stacked expert matmuls on the MXU -> scatter-add back.
+  This is the TPU-native adaptation of GPU "megablocks"-style grouped GEMM:
+  fixed-capacity dense buffers instead of ragged tiles.
+* ``moe_apply``      — under a mesh, wraps ``_moe_local`` in shard_map:
+  tokens stay sharded over the data axes (replicated over `model`), expert
+  weights are sharded over `model` on the expert axis when E % axis == 0
+  (expert parallelism, llama4 128e/16) and on the ff axis otherwise (tensor-
+  parallel experts, grok 8e/16); both end in one psum over `model` — the
+  MoE combine collective.
+
+Routing decisions are made per data-shard with local capacity
+C = ceil(cf * T_local * k / E), the standard GShard/GSPMD discipline.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import meshctx
+from repro.models.config import ModelConfig
+from repro.models.params import Initializer
+
+
+def init_moe(init: Initializer, cfg: ModelConfig) -> Dict:
+    d, f, E = cfg.d_model, cfg.moe_ff, cfg.n_experts
+    p = {
+        "w_router": init.fan_in((d, E)),
+        "we_gate": init.fan_in((E, d, f)),
+        "we_up": init.fan_in((E, d, f)),
+        "we_down": init.fan_in((E, f, d)),
+    }
+    if cfg.n_shared_experts > 0:
+        p["ws_gate"] = init.fan_in((d, cfg.d_ff * cfg.n_shared_experts))
+        p["ws_up"] = init.fan_in((d, cfg.d_ff * cfg.n_shared_experts))
+        p["ws_down"] = init.fan_in((cfg.d_ff * cfg.n_shared_experts, d))
+    return p
+
+
+def _routing(xt: jax.Array, w_router: jax.Array, k: int):
+    """xt: (T, d). Returns (gate (T,k), eidx (T,k), probs (T,E))."""
+    logits = (xt @ w_router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renormalise over top-k
+    return gate.astype(xt.dtype), eidx, probs
+
+
+def _aux_loss(probs: jax.Array, eidx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    T = probs.shape[0]
+    top1 = eidx[:, 0]
+    f = jnp.bincount(top1, length=n_experts).astype(jnp.float32) / T
+    pbar = probs.mean(0)
+    return n_experts * jnp.sum(f * pbar)
+
+
+def _dispatch_indices(eidx: jax.Array, k: int, n_experts: int, capacity: int):
+    """Stable-sort routing -> (src_token, dst_e, dst_c, keep) all (T*k,)."""
+    e = eidx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(e)                                 # stable
+    sorted_e = e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    rank = jnp.arange(e.shape[0]) - starts[sorted_e]
+    keep = rank < capacity
+    dst_c = jnp.where(keep, rank, 0)
+    src_token = order // k
+    src_slot = order % k
+    return src_token, src_slot, sorted_e, dst_c, keep
+
+
+def _expert_ffn(buf: jax.Array, p: Dict, cfg: ModelConfig,
+                we_gate=None, we_up=None, we_down=None) -> jax.Array:
+    """buf: (E, C, d) -> (E, C, d) with stacked expert weights."""
+    wg = we_gate if we_gate is not None else p["we_gate"]
+    wu = we_up if we_up is not None else p["we_up"]
+    wd = we_down if we_down is not None else p["we_down"]
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _moe_local(p: Dict, x: jax.Array, cfg: ModelConfig, capacity: int,
+               expert_lo: int = 0, n_local_experts: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Local (per-shard) MoE. x: (B, S, d). Returns (y, aux_loss).
+
+    expert_lo / n_local_experts restrict computation to a contiguous slice of
+    experts (expert parallelism); routing itself is always over all E experts.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    if n_local_experts < 0:
+        n_local_experts = E
+    xt = x.reshape(B * S, d)
+    gate, eidx, probs = _routing(xt, p["w_router"], k)
+    aux = _aux_loss(probs, eidx, E)
+
+    src_token, src_slot, dst_e, dst_c, keep = _dispatch_indices(eidx, k, E, capacity)
+    local = (dst_e >= expert_lo) & (dst_e < expert_lo + n_local_experts)
+    keep = keep & local
+    dst_e_loc = jnp.where(keep, dst_e - expert_lo, 0)
+
+    xin = jnp.take(xt, src_token, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((n_local_experts, capacity, d), xt.dtype)
+    buf = buf.at[dst_e_loc, dst_c].add(xin)
+
+    ybuf = _expert_ffn(buf, p, cfg)
+
+    yslots = ybuf[dst_e_loc, dst_c]                        # (T*k, d)
+    gflat = gate[src_token, src_slot] * keep.astype(gate.dtype)
+    out = jnp.zeros_like(xt).at[src_token].add(yslots * gflat[:, None])
+
+    if cfg.n_shared_experts > 0:
+        h = jax.nn.silu(xt @ p["ws_gate"]) * (xt @ p["ws_up"])
+        out = out + h @ p["ws_down"]
+    return out.reshape(B, S, d), aux
+
+
+def _capacity(tokens_local: int, cfg: ModelConfig) -> int:
+    c = math.ceil(cfg.capacity_factor * tokens_local * cfg.moe_top_k / cfg.n_experts)
+    return max(4, c)
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """MoE layer entry point: local path, or the 2D-sharded shard_map schedule.
+
+    Sharded schedules (must stay in sync with launch/sharding.param_spec):
+
+    * case A (E % data_size == 0, e.g. llama4 128e):
+      expert dim over `data`, ff dim over `model`.  Tokens route locally into
+      an (E, C, d) capacity buffer, an **all-to-all over `data`** carries each
+      expert's slots to its owner, the owner runs the (E_l, ·, d)x(E_l, d, f_l)
+      grouped GEMMs, a psum over `model` combines ff partials, and the
+      all-to-all runs in reverse.  This is the classic expert-parallel
+      dispatch/combine, TPU-style (fixed capacity, dense buffers).
+    * case B (E doesn't divide, e.g. grok 8e): d dim over `data` (FSDP —
+      weights all-gathered per layer inside the shard_map), ff over `model`,
+      every device computes its local tokens for all experts, psum over
+      `model` combines.
+    """
+    ctx = meshctx.current()
+    B, S, _ = x.shape
+    if ctx is None:
+        return _moe_local(p, x, cfg, _capacity(B * S, cfg))
+
+    E = cfg.n_experts
+    model = ctx.model_axis
+    data = ctx.data_axes
+    dsz = ctx.data_size
+    t_local = max(B // dsz, 1) * S
+    cap = _capacity(max(t_local, 1), cfg)
+    case_a = E % dsz == 0
+
+    if case_a:
+        wspec = {"we_gate": P(data, None, model),
+                 "we_up": P(data, None, model),
+                 "we_down": P(data, model, None)}
+    else:
+        wspec = {"we_gate": P(None, data, model),
+                 "we_up": P(None, data, model),
+                 "we_down": P(None, model, data)}
+    pspec = {"w_router": P(None, None)}
+    pspec.update(wspec)
+    if cfg.n_shared_experts > 0:
+        pspec.update({"ws_gate": P(data, model),
+                      "ws_up": P(data, model),
+                      "ws_down": P(model, data)})
+    psub = {k2: p[k2] for k2 in pspec}
+    xspec = P(data, None, None)
+
+    @partial(jax.shard_map, mesh=ctx.mesh,
+             in_specs=(pspec, xspec),
+             out_specs=(xspec, P()))
+    def _sharded(p_l, x_l):
+        Bl, Sl, d = x_l.shape
+        xt = x_l.reshape(Bl * Sl, d)
+        gate, eidx, probs = _routing(xt, p_l["w_router"], cfg.moe_top_k)
+        aux = _aux_loss(probs, eidx, E)
+        src_token, src_slot, dst_e, dst_c, keep = _dispatch_indices(
+            eidx, cfg.moe_top_k, E, cap)
+
+        if case_a:
+            xin = jnp.take(xt, src_token, axis=0) * keep[:, None].astype(xt.dtype)
+            buf = jnp.zeros((E, cap, d), xt.dtype).at[dst_e, dst_c].add(xin)
+            E_l = E // dsz
+            send = buf.reshape(dsz, E_l, cap, d)
+            work = jax.lax.all_to_all(send, data, split_axis=0, concat_axis=0,
+                                      tiled=False)
+            work = jnp.moveaxis(work, 0, 1).reshape(E_l, dsz * cap, d)
+            yl = _expert_ffn(work, p_l, cfg)
+            yl = jax.lax.psum(yl, model)                # combine ff partials
+            back = jnp.moveaxis(yl.reshape(E_l, dsz, cap, d), 1, 0)
+            ybuf = jax.lax.all_to_all(back, data, split_axis=0, concat_axis=0,
+                                      tiled=False).reshape(E, cap, d)
+            yslots = ybuf[dst_e, dst_c]
+        elif not cfg.moe_caseb_stationary:
+            # baseline case B: FSDP-style — all-gather the d-sharded expert
+            # weights every layer, compute locally. Weight traffic is O(params
+            # /layers) per step per device: ruinous for decode (§Perf).
+            weg = jax.lax.all_gather(p_l["we_gate"], data, axis=1, tiled=True)
+            weu = jax.lax.all_gather(p_l["we_up"], data, axis=1, tiled=True)
+            wed = jax.lax.all_gather(p_l["we_down"], data, axis=2, tiled=True)
+            xin = jnp.take(xt, src_token, axis=0) * keep[:, None].astype(xt.dtype)
+            buf = jnp.zeros((E, cap, d), xt.dtype).at[dst_e, dst_c].add(xin)
+            ybuf = _expert_ffn(buf, p_l, cfg, we_gate=weg, we_up=weu, we_down=wed)
+            ybuf = jax.lax.psum(ybuf, model)
+            yslots = ybuf[dst_e, dst_c]
+        else:
+            # beyond-paper case B (§Perf): weights stay resident; activations
+            # move instead.  Token buffers are all-gathered over `data`
+            # (O(E*C*d) activation traffic, vs O(params/L) weight traffic),
+            # every device computes with its (d_l, f_l) weight tile, partials
+            # are psum'd over `data` (d contraction) and `model` (f
+            # contraction), and each shard takes back its slot block.
+            dl = d // dsz
+            di = jax.lax.axis_index(data)
+            xin = jnp.take(xt, src_token, axis=0) * keep[:, None].astype(xt.dtype)
+            buf = jnp.zeros((E, cap, d), xt.dtype).at[dst_e, dst_c].add(xin)
+            allbuf = jax.lax.all_gather(buf, data, axis=1, tiled=True)  # (E, dsz*C, d)
+            work = jax.lax.dynamic_slice_in_dim(allbuf, di * dl, dl, axis=2)
+            g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", work, p_l["we_gate"]), data)
+            u = jax.lax.psum(jnp.einsum("ecd,edf->ecf", work, p_l["we_up"]), data)
+            h = jax.nn.silu(g) * u                               # (E, dsz*C, f_l)
+            y_dl = jax.lax.psum(
+                jnp.einsum("ecf,efd->ecd", h, p_l["we_down"]), model)
+            yall = jax.lax.all_gather(y_dl, data, axis=2, tiled=True)  # (E, dsz*C, d)
+            ybuf = jax.lax.dynamic_slice_in_dim(yall, di * cap, cap, axis=1)
+            yslots = ybuf[dst_e, dst_c]
+
+        gflat = gate[src_token, src_slot] * keep.astype(gate.dtype)
+        out = jnp.zeros_like(xt).at[src_token].add(yslots * gflat[:, None])
+
+        if cfg.n_shared_experts > 0:
+            wsg = jax.lax.all_gather(p_l["ws_gate"], data, axis=0, tiled=True)
+            wsu = jax.lax.all_gather(p_l["ws_up"], data, axis=0, tiled=True)
+            wsd = jax.lax.all_gather(p_l["ws_down"], data, axis=1, tiled=True)
+            hs = jax.nn.silu(xt @ wsg) * (xt @ wsu)
+            out = out + jax.lax.psum(hs @ wsd, model)
+
+        aux = jax.lax.pmean(aux, data)
+        return out.reshape(Bl, Sl, d), aux
+
+    return _sharded(psub, x)
+
+
+def moe_dense_ref(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: run every expert on every token (tests / tiny configs)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    gate, eidx, probs = _routing(xt, p["w_router"], cfg.moe_top_k)
+    aux = _aux_loss(probs, eidx, cfg.n_experts)
+    # all-expert outputs: (E, T, d)
+    g = jnp.einsum("td,edf->etf", xt, p["we_gate"])
+    u = jnp.einsum("td,edf->etf", xt, p["we_up"])
+    y_all = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * u, p["we_down"])
+    onehot = jax.nn.one_hot(eidx, cfg.n_experts, dtype=xt.dtype)   # (T,k,E)
+    w = jnp.einsum("tk,tke->te", gate, onehot)
+    out = jnp.einsum("te,etd->td", w, y_all)
+    if cfg.n_shared_experts > 0:
+        h = jax.nn.silu(xt @ p["ws_gate"]) * (xt @ p["ws_up"])
+        out = out + h @ p["ws_down"]
+    return out.reshape(B, S, d), aux

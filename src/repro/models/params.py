@@ -1,0 +1,89 @@
+"""Parameter-tree utilities (we carry our own — no flax/optax in this stack).
+
+Params are nested dicts of jnp arrays.  Helpers here cover initialisation,
+path-based tree walking (used by the sharding rules), counting and casting.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+class Initializer:
+    """Splittable PRNG wrapper so init code reads linearly."""
+
+    def __init__(self, key: jax.Array, dtype: str = "float32"):
+        self._key = key
+        self.dtype = dtype
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, shape: Tuple[int, ...], scale: float = 0.02) -> jax.Array:
+        return (jax.random.normal(self._next(), shape, jnp.float32) * scale).astype(self.dtype)
+
+    def fan_in(self, shape: Tuple[int, ...]) -> jax.Array:
+        # variance-scaling on the second-to-last dim (input features)
+        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        return self.normal(shape, scale=1.0 / np.sqrt(fan))
+
+    def zeros(self, shape: Tuple[int, ...]) -> jax.Array:
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, shape: Tuple[int, ...]) -> jax.Array:
+        return jnp.ones(shape, self.dtype)
+
+    def uniform(self, shape, lo: float, hi: float) -> jax.Array:
+        return (jax.random.uniform(self._next(), shape, jnp.float32, lo, hi)).astype(self.dtype)
+
+
+def tree_paths(tree: Params, prefix: str = "") -> Iterator[Tuple[str, jax.Array]]:
+    """Yield ('layers/wq', array) pairs for every leaf (dicts, tuples, lists)."""
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from tree_paths(tree[k], f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from tree_paths(v, f"{prefix}/{i}" if prefix else str(i))
+    elif tree is not None:
+        yield prefix, tree
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Params, prefix: str = "") -> Params:
+    if isinstance(tree, dict):
+        return {k: map_with_path(fn, v, f"{prefix}/{k}" if prefix else k)
+                for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        out = [map_with_path(fn, v, f"{prefix}/{i}" if prefix else str(i))
+               for i, v in enumerate(tree)]
+        return type(tree)(out)
+    if tree is None:
+        return None
+    return fn(prefix, tree)
+
+
+def count_params(tree: Params) -> int:
+    return sum(int(np.prod(a.shape)) for _, a in tree_paths(tree))
+
+
+def param_bytes(tree: Params) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for _, a in tree_paths(tree))
+
+
+def cast_tree(tree: Params, dtype) -> Params:
+    return jax.tree.map(lambda a: a.astype(dtype) if hasattr(a, "astype") else a, tree)
+
+
+def tree_zeros_like(tree: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

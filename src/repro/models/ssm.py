@@ -1,0 +1,352 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+TPU adaptation note (DESIGN.md §3): GPU Mamba kernels rely on warp-level
+selective scans.  The TPU-native form is the *chunked* linear recurrence:
+within a chunk everything is dense matmuls on the MXU (quadratic in the small
+chunk length), and a short `lax.scan` carries the inter-chunk state.  Both
+Mamba2's SSD and the mLSTM matrix memory are instances of the same algebra
+
+    h_t = exp(logdecay_t) * h_{t-1} + gatein_t * (k_t ⊗ v_t)
+    y_t = q_t · h_t
+
+so one ``chunked_linear_rnn`` serves both (Mamba2: logdecay = dt*A,
+gatein = dt, k = B, q = C, v = x;  mLSTM: logdecay = logsigmoid(f),
+gatein = exp(i), v augmented with a ones-column to carry the normalizer).
+The sLSTM has true sequential dependencies (recurrent gate connections) and
+runs as a `lax.scan` over time, as the xLSTM paper prescribes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import Initializer
+
+
+# --------------------------------------------------------------------------
+# Generic chunked linear recurrence
+# --------------------------------------------------------------------------
+def chunked_linear_rnn(
+    logdecay: jax.Array,   # (B, S, H)  log of per-step decay (<= 0 for stability)
+    gatein: jax.Array,     # (B, S, H)  multiplicative input gate
+    q: jax.Array,          # (B, S, H, N)
+    k: jax.Array,          # (B, S, H, N)
+    v: jax.Array,          # (B, S, H, P)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    B, S, H = logdecay.shape
+    N, Pv = q.shape[-1], v.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        logdecay, gatein, q, k, v = map(zpad, (logdecay, gatein, q, k, v))
+    St = S + pad
+    Cn = St // Q
+
+    ld = logdecay.astype(jnp.float32).reshape(B, Cn, Q, H)
+    gi = gatein.astype(jnp.float32).reshape(B, Cn, Q, H)
+    qc = q.reshape(B, Cn, Q, H, N)
+    kc = k.reshape(B, Cn, Q, H, N)
+    vc = v.reshape(B, Cn, Q, H, Pv)
+
+    cum = jnp.cumsum(ld, axis=2)                              # (B,Cn,Q,H)
+
+    # ---- intra-chunk (dense, MXU-friendly) --------------------------------
+    qk = jnp.einsum("bcqhn,bckhn->bchqk", qc, kc,
+                    preferred_element_type=jnp.float32)        # (B,Cn,H,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,Cn,Qi,Qj,H)
+    decay = jnp.moveaxis(decay, -1, 2)                         # (B,Cn,H,Qi,Qj)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    scores = qk * decay * tri * jnp.moveaxis(gi, -1, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(v.dtype), vc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summaries ---------------------------------------------------
+    to_end = jnp.exp(cum[:, :, -1:, :] - cum) * gi             # (B,Cn,Q,H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                        to_end.astype(v.dtype), kc, vc,
+                        preferred_element_type=jnp.float32)    # (B,Cn,H,N,P)
+    total = cum[:, :, -1, :]                                   # (B,Cn,H)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    h0 = (jnp.zeros((B, H, N, Pv), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        tot_c, st_c = inp
+        h_new = jnp.exp(tot_c)[:, :, None, None] * h + st_c
+        return h_new, h                                        # emit state *before* chunk
+
+    (h_final, prevs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(states, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)                    # (B,Cn,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         (qc.astype(jnp.float32) * jnp.exp(cum)[..., None]).astype(v.dtype),
+                         prev_states.astype(v.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, St, H, Pv)[:, :S]
+    return y.astype(v.dtype), h_final
+
+
+def linear_rnn_step(
+    state: jax.Array,      # (B, H, N, P)
+    logdecay: jax.Array,   # (B, H)
+    gatein: jax.Array,     # (B, H)
+    q: jax.Array,          # (B, H, N)
+    k: jax.Array,          # (B, H, N)
+    v: jax.Array,          # (B, H, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. Returns (y (B,H,P), new_state)."""
+    state = state.astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhp->bhnp", k, v).astype(jnp.float32)
+    new = jnp.exp(logdecay.astype(jnp.float32))[:, :, None, None] * state \
+        + gatein.astype(jnp.float32)[:, :, None, None] * kv
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), new)
+    return y.astype(v.dtype), new
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+def init_mamba2(init: Initializer, cfg: ModelConfig) -> Dict:
+    d, inner, N, H = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = inner + 2 * N
+    return {
+        "w_in": init.fan_in((d, 2 * inner + 2 * N + H)),
+        "conv_w": init.normal((cfg.ssm_conv, conv_dim), scale=0.1),
+        "conv_b": init.zeros((conv_dim,)),
+        "A_log": init.uniform((H,), 0.0, 1.0),
+        "D": init.ones((H,)),
+        "dt_bias": init.uniform((H,), -4.0, -1.0),
+        "gate_norm_w": init.ones((inner,)),
+        "w_out": init.fan_in((inner, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                   # (B, S+K-1, C)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(K)[None, :]   # (S, K)
+    windows = xp[:, idx]                                       # (B, S, K, C)
+    y = jnp.einsum("bskc,kc->bsc", windows, w) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def mamba2_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   state: Optional[Dict] = None, return_state: bool = False):
+    """x: (B, S, d). state: {"conv": (B,K-1,conv_dim), "ssm": (B,H,N,P)}.
+
+    Returns (y, new_state_or_None).  With S == 1 and state given, runs the
+    O(1) decode recurrence.
+    """
+    B, S, d = x.shape
+    inner, N, H, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["w_in"]
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bmat, Cmat = jnp.split(conv_out, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    logdecay = dt * A                                          # (B,S,H)
+
+    xh = xin.reshape(B, S, H, P)
+    kq_shape = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N))
+    qh = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N))
+
+    ssm_state = None if state is None else state["ssm"]
+    if S == 1 and state is not None:
+        y, new_ssm = linear_rnn_step(
+            ssm_state, logdecay[:, 0], dt[:, 0].astype(x.dtype),
+            qh[:, 0], kq_shape[:, 0], xh[:, 0])
+        y = y[:, None]
+    else:
+        y, new_ssm = chunked_linear_rnn(
+            logdecay, dt.astype(x.dtype), qh, kq_shape, xh,
+            cfg.ssm_chunk, init_state=ssm_state)
+        y = y.reshape(B, S, H, P)
+
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    new_state = {"conv": new_conv, "ssm": new_ssm} if (return_state or state is not None) else None
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# --------------------------------------------------------------------------
+def init_mlstm(init: Initializer, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    inner = 2 * d
+    H = cfg.n_heads
+    hd = inner // H
+    return {
+        "w_up": init.fan_in((d, 2 * inner)),      # -> (x_inner, z_gate)
+        "conv_w": init.normal((cfg.ssm_conv, inner), scale=0.1),
+        "conv_b": init.zeros((inner,)),
+        "wq": init.fan_in((inner, inner)),
+        "wk": init.fan_in((inner, inner)),
+        "wv": init.fan_in((inner, inner)),
+        "w_i": init.fan_in((inner, H)),
+        "w_f": init.fan_in((inner, H)),
+        "b_i": init.zeros((H,)),
+        "b_f": init.uniform((H,), 3.0, 6.0),      # bias toward remembering
+        "out_norm_w": init.ones((inner,)),
+        "w_down": init.fan_in((inner, d)),
+    }
+
+
+def mlstm_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[Dict] = None, return_state: bool = False):
+    """xLSTM mLSTM block. state: {"conv": (B,K-1,inner), "ssm": (B,H,hd,hd+1)}."""
+    B, S, d = x.shape
+    inner = 2 * d
+    H = cfg.n_heads
+    hd = inner // H
+
+    up = x @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi_c, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi_c = jax.nn.silu(xi_c)
+
+    q = (xi_c @ p["wq"]).reshape(B, S, H, hd) / jnp.sqrt(jnp.float32(hd)).astype(x.dtype)
+    k = (xi_c @ p["wk"]).reshape(B, S, H, hd)
+    v = (xi @ p["wv"]).reshape(B, S, H, hd)
+
+    logf = jax.nn.log_sigmoid((xi_c @ p["w_f"]).astype(jnp.float32) + p["b_f"])
+    logi = (xi_c @ p["w_i"]).astype(jnp.float32) + p["b_i"]
+    gatein = jnp.exp(logi)                                     # fp32; see module note
+
+    vaug = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)
+
+    ssm_state = None if state is None else state["ssm"]
+    if S == 1 and state is not None:
+        y, new_ssm = linear_rnn_step(ssm_state, logf[:, 0], gatein[:, 0].astype(x.dtype),
+                                     q[:, 0], k[:, 0], vaug[:, 0])
+        y = y[:, None]
+    else:
+        y, new_ssm = chunked_linear_rnn(logf, gatein.astype(x.dtype), q, k, vaug,
+                                        cfg.ssm_chunk, init_state=ssm_state)
+
+    num, den = y[..., :hd], y[..., hd:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, S, inner)
+    h = rms_norm(h, p["out_norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    out = h @ p["w_down"]
+    new_state = {"conv": new_conv, "ssm": new_ssm} if (return_state or state is not None) else None
+    return out, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    inner = 2 * cfg.d_model
+    hd = inner // cfg.n_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, hd, hd + 1), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (xLSTM) — true sequential recurrence
+# --------------------------------------------------------------------------
+def init_slstm(init: Initializer, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    return {
+        "w_gates": init.fan_in((d, 4 * d)),        # z, i, f, o input projections
+        "r_gates": init.normal((4, H, hd, hd), scale=0.02),  # per-head recurrent
+        "b_gates": init.zeros((4 * d,)),
+        "out_norm_w": init.ones((d,)),
+        # post-block gated FFN (pf = 4/3 per xLSTM paper)
+        "ff_gate": init.fan_in((d, (4 * d) // 3)),
+        "ff_up": init.fan_in((d, (4 * d) // 3)),
+        "ff_down": init.fan_in(((4 * d) // 3, d)),
+    }
+
+
+def slstm_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[Dict] = None, return_state: bool = False):
+    """state: {"c","n","h": (B,H,hd), "m": (B,H)}; scan over time."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+
+    had_state = state is not None
+    gx = x @ p["w_gates"] + p["b_gates"]                       # (B,S,4d)
+    gx = gx.reshape(B, S, 4, H, hd)
+
+    if state is None:
+        state = init_slstm_state(cfg, B, x.dtype)
+    c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    rg = p["r_gates"]                                          # (4,H,hd,hd)
+
+    def step(carry, gxt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,ghde->bghe", h, rg)              # (B,4,H,hd)
+        zt = jnp.tanh(gxt[:, 0] + rec[:, 0])
+        i_pre = (gxt[:, 1] + rec[:, 1]).astype(jnp.float32)    # per-cell exp. gate
+        f_pre = (gxt[:, 2] + rec[:, 2]).astype(jnp.float32)
+        o = jax.nn.sigmoid(gxt[:, 3] + rec[:, 3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c.astype(jnp.float32) + i_g * zt.astype(jnp.float32)
+        n_new = f_g * n.astype(jnp.float32) + i_g
+        h_new = (o.astype(jnp.float32) * c_new / jnp.maximum(n_new, 1e-6)).astype(x.dtype)
+        return (c_new.astype(c.dtype), n_new.astype(n.dtype), h_new, m_new), h_new
+
+    gx_t = jnp.moveaxis(gx, 1, 0)                              # (S,B,4,H,hd)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), gx_t)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+    y = rms_norm(y, p["out_norm_w"], cfg.norm_eps)
+    # gated FFN
+    y = y + (jax.nn.silu(y @ p["ff_gate"]) * (y @ p["ff_up"])) @ p["ff_down"]
+    new_state = {"c": c, "n": n, "h": h, "m": m} if (return_state or had_state) else None
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return {
+        "c": jnp.zeros((batch, H, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "h": jnp.zeros((batch, H, hd), dtype),
+        "m": jnp.zeros((batch, H, hd), jnp.float32),
+    }

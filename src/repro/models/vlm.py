@@ -1,0 +1,39 @@
+"""VLM (llava-next) support: stub vision frontend + token interleave helpers.
+
+Per the assignment carve-out the ViT/SigLIP tower + projector is a STUB —
+``patch_embeddings`` deterministically synthesises pre-projected patch
+embeddings with the right shape/dtype, standing in for
+vision_tower(pixel_values) -> projector -> (B, n_patches, d_model).
+
+anyres tiling (llava-v1.6): a 672x672 image is cut into 4 tiles + 1 overview,
+each tile contributing 576 patches -> 2880 image tokens. The *backbone* that
+consumes the interleaved [img; text] sequence is the real Mistral-7B config
+and runs through models/transformer.py (family="vlm").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ANYRES_TILES = 5
+PATCHES_PER_TILE = 576
+
+
+def n_patches(cfg: ModelConfig) -> int:
+    return cfg.n_img_patches or ANYRES_TILES * PATCHES_PER_TILE
+
+
+def patch_embeddings(cfg: ModelConfig, batch: int, key: jax.Array | None = None) -> jax.Array:
+    """Stub frontend output: (B, n_patches, d_model)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    P = n_patches(cfg)
+    x = jax.random.normal(key, (batch, P, cfg.d_model), jnp.float32) * 0.02
+    return x.astype(cfg.dtype)
+
+
+def text_logit_slice(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Drop image positions from (B, n_img + S_text, V)."""
+    return logits[:, n_patches(cfg):]

@@ -1,0 +1,166 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_global    / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_global    / (chips * HBM_BW)
+    collective = collective_bytes_gl / (chips * LINK_BW)
+
+HLO flops/bytes come from ``compiled.cost_analysis()`` (per-device partitioned
+program; multiplied back to global).  Collective bytes are parsed from the
+HLO text — the sum of result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op (async *-start variants
+counted once).
+
+Also reported: MODEL_FLOPS = 6·N_active·tokens and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs_global (catches remat/redundant compute), and the
+dominant term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<res>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(?P<op>all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective op kind."""
+    out: Dict[str, int] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        res = m.group("res")
+        b = sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(res))
+        out[op] = out.get(op, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float
+    collective_bytes_global: float
+    collective_by_op: Dict[str, int]
+    model_flops: float
+    tokens: int
+    # memory analysis (per device)
+    mem_args: int = 0
+    mem_out: int = 0
+    mem_temp: int = 0
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_global / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.flops_global, 1.0)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline-implied step time."""
+        t = self.step_time_lower_bound
+        return self.model_flops / (t * self.chips * PEAK_FLOPS) if t > 0 else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio, mfu=self.mfu,
+                 step_time_lower_bound=self.step_time_lower_bound)
+        return d
+
+
+def model_flops(cfg, shape) -> tuple[float, int]:
+    """6·N_active·tokens (dense & MoE-active); decode counts B new tokens."""
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    f = 6.0 * cfg.active_params() * tokens
+    if shape.kind == "train":
+        pass  # 6ND already includes fwd+bwd convention
+    elif shape.kind == "prefill":
+        f = 2.0 * cfg.active_params() * tokens  # fwd only
+    else:
+        f = 2.0 * cfg.active_params() * tokens
+    return f, tokens
+
+
+def analyze(compiled, hlo_text: str, *, arch: str, shape, cfg, mesh_name: str,
+            chips: int, compile_seconds: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total_dev = float(sum(coll.values()))
+    mf, tokens = model_flops(cfg, shape)
+    r = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_global=flops_dev * chips, bytes_global=bytes_dev * chips,
+        collective_bytes_global=coll_total_dev * chips,
+        collective_by_op=coll, model_flops=mf, tokens=tokens,
+        compile_seconds=compile_seconds)
+    try:
+        ma = compiled.memory_analysis()
+        r.mem_args = int(getattr(ma, "argument_size_in_bytes", 0))
+        r.mem_out = int(getattr(ma, "output_size_in_bytes", 0))
+        r.mem_temp = int(getattr(ma, "temp_size_in_bytes", 0))
+    except Exception:
+        pass
+    return r
+
+
+def save(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_json(), f, indent=1)

@@ -1,0 +1,229 @@
+"""Flash-kernel roofline correction (§Perf).
+
+XLA materialises attention scores + softmax intermediates in HBM; the Pallas
+flash/decode kernels (validated vs oracles in tests/test_kernels.py) keep
+them in VMEM.  Since Pallas->TPU can't compile on this CPU host, we MEASURE
+the jnp attention block's per-layer HBM bytes by compiling it standalone at
+the per-device local shape, compute the kernel's ideal traffic (QKV in, O
+out; backward re-reads QKV,O and writes dQKV), and substitute:
+
+    corrected_bytes = baseline_bytes - n_attn_layers * (measured - ideal)
+
+Usage:
+    PYTHONPATH=src python -m repro.roofline.kernel_correction \
+        --arch qwen2-1.5b --shape train_4k [--multi-pod]
+reads the baseline record from experiments/dryrun and writes a
+``__perf-flash_kernel`` record next to it.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.roofline import analysis
+
+
+def _bytes_of(fn, *args) -> float:
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def _attn_fwd(q, k, v):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+    mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool),
+                    k.shape[1] - q.shape[1])
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def local_attention_shapes(cfg: ModelConfig, shape, chips: int,
+                           dsz: int, msz: int) -> Tuple[Tuple[int, ...], ...]:
+    """Per-device (q, kv) shapes after the sharding rules."""
+    B = max(shape.global_batch // dsz, 1)
+    hd = cfg.hd
+    if cfg.n_kv_heads % msz == 0:
+        hq, t = max(cfg.n_heads // msz, 1), shape.seq_len
+    else:
+        hq, t = cfg.n_heads, shape.seq_len // msz
+    sq = 1 if shape.kind == "decode" else shape.seq_len
+    # GQA: kernel-relevant traffic uses Hq score rows but Hkv KV reads;
+    # conservatively model with Hq for both (overestimates ideal -> smaller
+    # claimed win).
+    return (B, sq, hq, hd), (B, t, hq, hd)
+
+
+def measure_correction(cfg: ModelConfig, shape, chips: int) -> dict:
+    dsz = 16 if chips == 256 else 32
+    msz = 16
+    qs, kvs = local_attention_shapes(cfg, shape, chips, dsz, msz)
+    dtype = jnp.bfloat16
+    q = jax.ShapeDtypeStruct(qs, dtype)
+    k = jax.ShapeDtypeStruct(kvs, dtype)
+    v = jax.ShapeDtypeStruct(kvs, dtype)
+
+    measured_fwd = _bytes_of(_attn_fwd, q, k, v)
+    itemsize = 2
+    ideal_fwd = (2 * _n(kvs) + 2 * _n(qs)) * itemsize          # read K,V,Q; write O
+
+    if shape.kind == "train":
+        def loss(q_, k_, v_):
+            return _attn_fwd(q_, k_, v_).astype(jnp.float32).sum()
+        measured_bwd = _bytes_of(jax.grad(loss, argnums=(0, 1, 2)), q, k, v)
+        # flash backward: re-read Q,K,V,O + write dQ,dK,dV
+        ideal_bwd = (3 * _n(kvs) + 4 * _n(qs)) * itemsize
+        # remat: forward runs twice (once saved-input recompute)
+        measured = 2 * measured_fwd + measured_bwd
+        ideal = 2 * ideal_fwd + ideal_bwd
+    else:
+        measured, ideal = measured_fwd, ideal_fwd
+
+    n_attn = _attn_layer_count(cfg)
+    return {
+        "measured_per_layer_dev": measured,
+        "ideal_per_layer_dev": ideal,
+        "n_attn_layers": n_attn,
+        "delta_dev": max(0.0, (measured - ideal)) * n_attn,
+    }
+
+
+def _n(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def _attn_layer_count(cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // (cfg.hybrid_group + 1)
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "audio":
+        return cfg.n_enc_layers + 2 * cfg.n_layers   # self + cross
+    return cfg.n_layers
+
+
+def window_cache_correction(cfg: ModelConfig, shape, chips: int) -> dict:
+    """Rolling-buffer KV caches for sliding-window layers (§Perf, gemma3).
+
+    Baseline decode reads every layer's full KV slice; local (windowed)
+    layers only ever *need* `sliding_window` positions (Mistral-style rolling
+    buffer).  Analytic substitution of the per-layer cache read:
+
+        delta = n_local_layers x 2(K,V) x (S_read_full - S_read_window)
+                x Hkv_local x hd x 2B   per device per step.
+    """
+    assert cfg.sliding_window > 0 and cfg.global_interval > 0
+    dsz = 16 if chips == 256 else 32
+    msz = 16
+    n_local = sum(not cfg.layer_is_global(i) for i in range(cfg.n_layers))
+    head_ok = cfg.n_kv_heads % msz == 0
+    hkv_loc = cfg.n_kv_heads // msz if head_ok else cfg.n_kv_heads
+    batch_sharded = shape.global_batch % dsz == 0
+    b_loc = max(shape.global_batch // dsz, 1)
+    # sequence dim sharding (see launch/sharding.cache_specs)
+    if not batch_sharded:                 # long_500k: seq over data
+        s_full = shape.seq_len // dsz
+        s_win = max(cfg.sliding_window // dsz, 1)
+    elif not head_ok:                     # seq over model
+        s_full = shape.seq_len // msz
+        s_win = max(cfg.sliding_window // msz, 1)
+    else:
+        s_full = shape.seq_len
+        s_win = cfg.sliding_window
+    per_layer_full = 2 * b_loc * s_full * hkv_loc * cfg.hd * 2
+    per_layer_win = 2 * b_loc * s_win * hkv_loc * cfg.hd * 2
+    return {
+        "n_local_layers": n_local,
+        "per_layer_full_dev": per_layer_full,
+        "per_layer_window_dev": per_layer_win,
+        "delta_dev": n_local * max(per_layer_full - per_layer_win, 0),
+        # static footprint saving (cache argument bytes)
+        "arg_bytes_saved_dev": n_local * (per_layer_full - per_layer_win),
+    }
+
+
+def apply_correction(baseline: dict, corr: dict) -> dict:
+    chips = baseline["chips"]
+    floor = corr.get("ideal_per_layer_dev", 0.0) * corr.get("n_attn_layers", 0) * chips
+    new_bytes = max(baseline["bytes_global"] - corr["delta_dev"] * chips, floor)
+    r = analysis.Roofline(
+        arch=baseline["arch"], shape=baseline["shape"], mesh=baseline["mesh"],
+        chips=chips, flops_global=baseline["flops_global"],
+        bytes_global=new_bytes,
+        collective_bytes_global=baseline["collective_bytes_global"],
+        collective_by_op=baseline["collective_by_op"],
+        model_flops=baseline["model_flops"], tokens=baseline["tokens"],
+        mem_args=baseline["mem_args"], mem_out=baseline["mem_out"],
+        mem_temp=baseline["mem_temp"],
+        compile_seconds=baseline["compile_seconds"])
+    rec = r.to_json()
+    rec["skipped"] = False
+    rec["perf_variant"] = ["flash_kernel"]
+    rec["kernel_correction"] = corr
+    rec["calibration"] = baseline.get("calibration", "")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--base-perf", default="",
+                    help="apply on top of a perf-variant baseline record")
+    ap.add_argument("--correction", default="flash",
+                    choices=("flash", "window_cache"))
+    args = ap.parse_args()
+    mesh = "pod2x16x16" if args.multi_pod else "pod16x16"
+    tag = f"{args.arch}__{args.shape}__{mesh}"
+    base_tag = tag + (f"__perf-{args.base_perf}" if args.base_perf else "")
+    with open(os.path.join(args.dir, base_tag + ".json")) as f:
+        baseline = json.load(f)
+    cfg = configs.get(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    if args.correction == "window_cache":
+        corr = window_cache_correction(cfg, shape, baseline["chips"])
+        vname = "window_cache"
+    else:
+        corr = measure_correction(cfg, shape, baseline["chips"])
+        vname = "flash_kernel"
+    rec = apply_correction(baseline, corr)
+    rec["perf_variant"] = [vname]
+    if args.base_perf:
+        rec["perf_variant"] = args.base_perf.split("-") + [vname]
+    suffix = "-".join(rec["perf_variant"])
+    out = os.path.join(args.dir, f"{tag}__perf-{suffix}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    if "measured_per_layer_dev" in corr:
+        print(f"measured/layer/dev={corr['measured_per_layer_dev']:.3e} "
+              f"ideal={corr['ideal_per_layer_dev']:.3e} layers={corr['n_attn_layers']}")
+    else:
+        print(f"window cache: {corr['n_local_layers']} local layers, "
+              f"per-layer read {corr['per_layer_full_dev']:.3e} -> "
+              f"{corr['per_layer_window_dev']:.3e} B/dev")
+    print(f"bytes: {baseline['bytes_global']:.3e} -> {rec['bytes_global']:.3e}")
+    print(f"memory term: {baseline['t_memory']*1e3:.1f}ms -> "
+          f"{rec['t_memory']*1e3:.1f}ms; dominant: {baseline['dominant']} -> "
+          f"{rec['dominant']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Inference engine: jitted prefill / decode steps + generation loops.
+
+The engine is what the LLMBridge model pool calls into for every model.
+Two decode drivers:
+
+* ``generate``      — Python loop over a jitted single-token step (the real
+                      serving path; composes with the continuous-batching
+                      scheduler which mutates slots between steps);
+* ``generate_scan`` — fully jitted ``lax.scan`` decode (benchmarks; no
+                      per-step host round-trip).
+
+``serve_step`` is the artifact the multi-pod dry-run lowers for the decode
+shapes: ONE new token against a (seq_len)-deep KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_model, init_cache, vlm
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplerConfig, sample
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+
+    def new_cache(self, batch: int, max_len: Optional[int] = None) -> Dict:
+        return init_cache(self.cfg, batch, max_len or self.max_len)
+
+    def prefill(self, tokens: jax.Array, cache: Dict, **extras):
+        return self._prefill(self.params, tokens, cache, **extras)
+
+    def decode(self, tokens: jax.Array, positions: jax.Array, cache: Dict):
+        return self._decode(self.params, tokens, positions, cache)
+
+    def generate(self, prompt: jax.Array, max_new: int,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 key: Optional[jax.Array] = None,
+                 eos_id: int = -1) -> jax.Array:
+        """prompt: (B, S). Returns (B, max_new) generated ids."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        B, S = prompt.shape
+        extras = {}
+        n_prefix = 0
+        if self.cfg.family == "vlm":
+            extras["img_embeds"] = vlm.patch_embeddings(self.cfg, B)
+            n_prefix = vlm.n_patches(self.cfg)
+        if self.cfg.family == "audio":
+            extras["frames"] = jnp.zeros((B, self.cfg.n_frames, self.cfg.d_encoder),
+                                         self.cfg.dtype)
+        cache = self.new_cache(B, max(self.max_len, S + n_prefix + max_new + 1))
+        logits, cache = self.prefill(prompt, cache, **extras)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        out = []
+        pos = S + n_prefix
+        done = jnp.zeros((B,), bool)
+        for i in range(max_new):
+            out.append(tok)
+            key, sub = jax.random.split(key)
+            positions = jnp.full((B, 1), pos + i, jnp.int32)
+            logits, cache = self.decode(tok[:, None], positions, cache)
+            tok = sample(logits[:, -1], sub, sampler)
+            done = done | (tok == eos_id)
+            if bool(done.all()):
+                out.extend([tok] * 0)
+                break
+        return jnp.stack(out, axis=1)
+
+
+def prefill_step(params: Dict, tokens: jax.Array, cache: Dict, *,
+                 cfg: ModelConfig, img_embeds=None, frames=None
+                 ) -> Tuple[jax.Array, Dict]:
+    B, S = tokens.shape
+    n_prefix = vlm.n_patches(cfg) if (cfg.family == "vlm" and img_embeds is not None) else 0
+    positions = jnp.broadcast_to(
+        jnp.arange(S + n_prefix, dtype=jnp.int32)[None], (B, S + n_prefix))
+    if cfg.family != "vlm":
+        positions = positions[:, :S]
+    logits, new_cache, _ = apply_model(
+        params, tokens, cfg, positions=positions, cache=cache,
+        img_embeds=img_embeds, frames=frames)
+    if cfg.family == "vlm" and img_embeds is not None:
+        logits = logits[:, n_prefix:]
+    return logits, new_cache
+
+
+def decode_step(params: Dict, tokens: jax.Array, positions: jax.Array,
+                cache: Dict, *, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, 1); positions: (B, 1) absolute positions."""
+    logits, new_cache, _ = apply_model(params, tokens, cfg,
+                                       positions=positions, cache=cache)
+    return logits, new_cache
+
+
+def serve_step(params: Dict, tokens: jax.Array, positions: jax.Array,
+               cache: Dict, *, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Dry-run artifact for decode shapes: one token, deep KV cache."""
+    return decode_step(params, tokens, positions, cache, cfg=cfg)
+
+
+def generate_scan(params: Dict, cfg: ModelConfig, prompt: jax.Array,
+                  max_new: int, cache: Dict) -> jax.Array:
+    """Fully jitted greedy decode (benchmark path)."""
+    B, S = prompt.shape
+    logits, cache = prefill_step(params, prompt, cache, cfg=cfg)
+    tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+    def body(carry, i):
+        tok, cache = carry
+        positions = jnp.full((B, 1), S, jnp.int32) + i
+        logits, cache = decode_step(params, tok[:, None], positions, cache, cfg=cfg)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return (nxt, cache), tok
+
+    (_, _), toks = jax.lax.scan(body, (tok0, cache), jnp.arange(max_new))
+    return jnp.moveaxis(toks, 0, 1)

@@ -1,0 +1,65 @@
+"""Slot-wise cache surgery for continuous batching.
+
+Caches are family-specific pytrees with the *scan* dimension leading (see
+models/transformer.init_cache); the batch/slot axis therefore sits at a
+per-subtree position.  These helpers insert a freshly prefilled single-slot
+cache into a batched cache, and reset slots, without the scheduler knowing
+the family's cache layout.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+# batch-axis position per top-level cache key (see init_cache layouts)
+_BATCH_AXIS = {
+    "kv": 1,          # (L, B, S, H, hd) / pos (L, B)
+    "cross_kv": 1,    # (L, B, T, H, hd)
+    "mamba": 2,       # (G, g, B, ...)
+    "mamba_tail": 1,  # (R, B, ...)
+    "mlstm": 2,       # (G, k-1, B, ...)
+    "slstm": 1,       # (G, B, ...)
+}
+
+
+def _map_with_axis(fn, cache: Dict, other=None):
+    out = {}
+    for key, sub in cache.items():
+        ax = _BATCH_AXIS[key]
+        osub = None if other is None else other[key]
+        if isinstance(sub, dict):
+            out[key] = {k: fn(v, ax, None if osub is None else osub[k])
+                        for k, v in sub.items()}
+        elif isinstance(sub, tuple):
+            out[key] = tuple(fn(v, ax, None if osub is None else osub[i])
+                             for i, v in enumerate(sub))
+        else:
+            out[key] = fn(sub, ax, osub)
+    return out
+
+
+def insert_slot(batched: Dict, single: Dict, slot: int) -> Dict:
+    """Write a B=1 cache into slot `slot` of a batched cache."""
+    def fn(big, ax, small):
+        return jax.lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype), slot, axis=ax)
+    return _map_with_axis(fn, batched, single)
+
+
+def reset_slot(batched: Dict, slot: int) -> Dict:
+    """Zero a slot (request completed / evicted)."""
+    def fn(big, ax, _):
+        idx = [slice(None)] * big.ndim
+        idx[ax] = slice(slot, slot + 1)
+        zeros = jnp.zeros_like(big[tuple(idx)])
+        return jax.lax.dynamic_update_slice_in_dim(big, zeros, slot, axis=ax)
+    return _map_with_axis(fn, batched)
+
+
+def slot_positions(cache: Dict) -> jax.Array:
+    """Current per-slot write positions (B,) — from the attention cache if
+    present, else zeros (pure-SSM caches track no position)."""
+    if "kv" in cache:
+        return cache["kv"]["pos"][0]
+    raise KeyError("cache has no positional record; track positions in the scheduler")

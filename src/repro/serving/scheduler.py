@@ -1,0 +1,136 @@
+"""Continuous-batching scheduler with per-user FIFO queues.
+
+The paper's deployment funnels every WhatsApp request through a per-user
+FIFO (AWS SQS) so responses arrive in order (§4).  This scheduler reproduces
+that discipline inside the serving engine:
+
+* one in-flight request per user at a time; later requests wait in that
+  user's queue;
+* a fixed pool of decode slots (the continuous batch); freed slots are
+  refilled from user queues round-robin;
+* admission = single-request prefill + slot insertion into the batched KV
+  cache (serving/kv_cache.insert_slot).
+
+This is the substrate under LLMBridge's model pool: every pool model gets an
+Engine + Scheduler pair.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import kv_cache
+from repro.serving.engine import Engine
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    user: str
+    prompt: jax.Array              # (S,) int32
+    max_new: int = 32
+    eos_id: int = -1
+    # filled during serving
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0
+    done: bool = False
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, n_slots: int = 8,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 max_len: Optional[int] = None, seed: int = 0):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.sampler = sampler
+        self.max_len = max_len or engine.max_len
+        self.queues: Dict[str, collections.deque] = collections.defaultdict(collections.deque)
+        self.user_inflight: Dict[str, bool] = collections.defaultdict(bool)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.cache = engine.new_cache(n_slots, self.max_len)
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.finished: List[Request] = []
+        self._rr = itertools.cycle(range(1 << 30))  # round-robin cursor
+        self._users_order: List[str] = []
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.user not in self.queues:
+            self._users_order.append(req.user)
+        self.queues[req.user].append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values()) + \
+            sum(1 for s in self.slots if s is not None)
+
+    # -- admission -----------------------------------------------------------
+    def _next_request(self) -> Optional[Request]:
+        """Round-robin over users; respect one-in-flight-per-user FIFO."""
+        for user in list(self._users_order):
+            if self.queues[user] and not self.user_inflight[user]:
+                self.user_inflight[user] = True
+                return self.queues[user].popleft()
+        return None
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None:
+                continue
+            req = self._next_request()
+            if req is None:
+                return
+            prompt = req.prompt[None, :]                      # (1, S)
+            single = self.engine.new_cache(1, self.max_len)
+            logits, single = self.engine.prefill(prompt, single)
+            first = int(jnp.argmax(logits[0, -1]))
+            self.cache = kv_cache.insert_slot(self.cache, single, slot)
+            req.slot = slot
+            req.pos = int(prompt.shape[1])
+            req.generated = [first]
+            self.tokens = self.tokens.at[slot].set(first)
+            self.slots[slot] = req
+
+    # -- one decode step over the whole batch --------------------------------
+    def step(self) -> List[Request]:
+        self._admit()
+        live = [s for s in self.slots if s is not None]
+        if not live:
+            return []
+        positions = jnp.array(
+            [[s.pos if s is not None else 0] for s in self.slots], jnp.int32)
+        logits, self.cache = self.engine.decode(self.tokens[:, None], positions, self.cache)
+        self.key, sub = jax.random.split(self.key)
+        nxt = sample(logits[:, -1], sub, self.sampler)
+
+        done_now: List[Request] = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            req.pos += 1
+            if tok == req.eos_id or len(req.generated) >= req.max_new:
+                req.done = True
+                done_now.append(req)
+                self.slots[slot] = None
+                self.user_inflight[req.user] = False
+                self.cache = kv_cache.reset_slot(self.cache, slot)
+            else:
+                self.tokens = self.tokens.at[slot].set(tok)
+        self.finished.extend(done_now)
+        return done_now
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if self.pending() == 0:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,44 @@
+"""Checkpointing: msgpack-framed numpy buffers (no orbax in this stack).
+
+Format: a single file, msgpack map {path: {"shape", "dtype", "data"}} plus a
+"__meta__" entry.  Restores to the exact pytree structure via path joins.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.models.params import tree_paths
+
+
+def save(path: str, tree: Dict, meta: Optional[Dict[str, Any]] = None) -> None:
+    payload = {}
+    for p, a in tree_paths(tree):
+        a = np.asarray(a)
+        payload[p] = {"shape": list(a.shape), "dtype": str(a.dtype),
+                      "data": a.tobytes()}
+    payload["__meta__"] = meta or {}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load(path: str) -> tuple[Dict, Dict]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+    tree: Dict = {}
+    for p, rec in payload.items():
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        node = tree
+        parts = p.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return tree, meta

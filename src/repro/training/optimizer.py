@@ -1,0 +1,95 @@
+"""Pure-JAX AdamW with warmup+cosine schedule and global-norm clipping.
+
+(No optax in this environment — the optimizer is part of the substrate.)
+State is a pytree mirroring params; everything jit-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Dict, state_dtype=jnp.float32) -> Dict:
+    """state_dtype: fp32 default; production configs for the 300-400B MoE
+    models use bf16 moments so optimizer state fits v5e HBM (EXPERIMENTS.md)."""
+    mk = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(mk, params),
+        "v": jax.tree.map(mk, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(path: str) -> bool:
+    """Weight-decay applies to matrices, not norms/biases/scalars."""
+    last = path.rsplit("/", 1)[-1]
+    return not (last.startswith("b_") or last.endswith("_b") or "norm" in last
+                or last in ("A_log", "D", "dt_bias", "pos", "bq", "bk", "bv"))
+
+
+def adamw_update(grads: Dict, state: Dict, params: Dict, oc: OptConfig
+                 ) -> Tuple[Dict, Dict, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state["step"] + 1
+    lr = lr_at(step, oc)
+    b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: (oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * g).astype(m.dtype),
+        state["m"], grads)
+    new_v = jax.tree.map(
+        lambda v, g: (oc.b2 * v.astype(jnp.float32) + (1 - oc.b2) * g * g).astype(v.dtype),
+        state["v"], grads)
+
+    from repro.models.params import map_with_path, tree_paths
+
+    def compute(p, m, v):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        return mhat / (jnp.sqrt(vhat) + oc.eps)
+
+    updates = jax.tree.map(compute, params, new_m, new_v)
+    upd_by_path = dict(tree_paths(updates))
+
+    def apply_one(path, p):
+        u = upd_by_path[path]
+        wd = oc.weight_decay if _decay_mask(path) else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype)
+
+    new_params = map_with_path(apply_one, params)
+
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,113 @@
+"""Training step: cross-entropy LM loss (+ MoE aux), jit/pjit-able.
+
+``train_step`` is the artifact the dry-run lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_model, vlm
+from repro.models.config import ModelConfig
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """batch: {"tokens": (B,S), "labels": (B,S), optional "mask": (B,S),
+    vlm: "img_embeds", audio: "frames"}."""
+    kwargs = {}
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        kwargs["img_embeds"] = batch["img_embeds"]
+    if cfg.family == "audio":
+        kwargs["frames"] = batch["frames"]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.family == "audio":
+        logits, _, aux = apply_model(params, batch["tokens"], cfg, **kwargs)
+        loss = jax.checkpoint(_xent)(logits, labels, mask)
+    else:
+        # unembed + softmax inside one checkpoint: the (B, S, V) logits are
+        # recomputed from the final hidden state in backward, never saved
+        from repro.models import transformer as T
+        from repro.models import layers as L
+        hidden, _, aux = T.forward(params, batch["tokens"], cfg,
+                                   return_hidden=True, **kwargs)
+        if cfg.family == "vlm" and "img_embeds" in batch:
+            hidden = hidden[:, vlm.n_patches(cfg):]
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+        def head_loss(h, tbl, lbl, msk):
+            logits = L.unembed(h, tbl, cfg.tie_embeddings)
+            if cfg.final_softcap > 0:
+                c = cfg.final_softcap
+                logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+            return _xent(logits, lbl, msk)
+
+        loss = jax.checkpoint(head_loss)(hidden, table, labels, mask)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def _xent(logits: jax.Array, labels: jax.Array, mask) -> jax.Array:
+    """Cross-entropy via one-hot contraction: keeps the vocab axis sharded
+    (take_along_axis would force an all-gather of the full logits)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - picked
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def train_step(params: Dict, opt_state: Dict, batch: Dict, *,
+               cfg: ModelConfig, oc: OptConfig, microbatches: int = 1
+               ) -> Tuple[Dict, Dict, Dict[str, jax.Array]]:
+    """One optimizer step.  microbatches > 1 runs gradient accumulation via
+    lax.scan over batch chunks (§Perf: cuts live activation memory ~Mx at the
+    cost of M sequential sub-steps)."""
+    if microbatches <= 1:
+        (total, parts), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, batch, cfg)
+    else:
+        M = microbatches
+
+        def split(a):
+            B = a.shape[0]
+            assert B % M == 0, f"batch {B} not divisible by microbatches {M}"
+            return a.reshape((M, B // M) + a.shape[1:])
+
+        chunks = jax.tree.map(split, batch)
+
+        def body(acc, chunk):
+            (t, p), g = jax.value_and_grad(lm_loss, has_aux=True)(
+                params, chunk, cfg)
+            acc_g, acc_t, acc_parts = acc
+            acc_g = jax.tree.map(lambda a, b: a + b / M, acc_g, g)
+            return (acc_g, acc_t + t / M,
+                    jax.tree.map(lambda a, b: a + b / M, acc_parts, p)), None
+
+        zero_g = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+        zero_parts = {"loss": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+        init = (zero_g, jnp.float32(0.0), zero_parts)
+        if cfg.unroll_layers:
+            # dry-run cost calibration: unrolled so XLA's scan-body-once
+            # counting doesn't halve the reported per-step costs
+            acc = init
+            for i in range(M):
+                acc, _ = body(acc, jax.tree.map(lambda a: a[i], chunks))
+            grads, total, parts = acc
+        else:
+            (grads, total, parts), _ = jax.lax.scan(body, init, chunks)
+
+    new_params, new_state, opt_metrics = adamw_update(grads, opt_state, params, oc)
+    metrics = {"total_loss": total, **parts, **opt_metrics}
+    return new_params, new_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, microbatches: int = 1):
+    return functools.partial(train_step, cfg=cfg, oc=oc, microbatches=microbatches)

@@ -1,0 +1,84 @@
+"""Roofline analysis unit tests: HLO collective parser, term math,
+depth-FD extrapolation arithmetic, kernel-correction shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.config import INPUT_SHAPES
+from repro.roofline import analysis
+from repro.roofline.kernel_correction import (local_attention_shapes,
+                                              measure_correction)
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), replica_groups=...
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512]{1,0} %y), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), dimensions={0}
+  %a2a = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-to-all(%p, %q)
+  %cp-start = bf16[32,32]{1,0} collective-permute-start(bf16[32,32]{1,0} %w)
+  %ar2-start = f32[10]{0} all-reduce-start(f32[10]{0} %v)
+  %fusion.3 = f32[999]{0} fusion(%k), kind=kLoop  // not a collective
+"""
+
+
+def test_collective_parser_counts_each_kind_once():
+    out = analysis.collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 128 * 4 + 10 * 4       # incl. -start form
+    assert out["all-gather"] == 2048 * 512 * 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["all-to-all"] == 2 * 4 * 8 * 2               # tuple result
+    assert out["collective-permute"] == 32 * 32 * 2
+    assert "fusion" not in out
+
+
+def test_roofline_terms_math():
+    r = analysis.Roofline(
+        arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+        flops_global=256 * analysis.PEAK_FLOPS,          # exactly 1s compute
+        bytes_global=256 * analysis.HBM_BW * 2,          # exactly 2s memory
+        collective_bytes_global=256 * analysis.LINK_BW * 0.5,
+        collective_by_op={}, model_flops=256 * analysis.PEAK_FLOPS / 2,
+        tokens=1)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.useful_ratio - 0.5) < 1e-9
+    # MFU = model_flops / (step_lb * chips * peak) = 0.5/2 = 0.25
+    assert abs(r.mfu - 0.25) < 1e-9
+
+
+def test_model_flops_active_params_moe():
+    cfg = configs.get("llama4-maverick-400b-a17b")
+    # active params far below total (top-1 of 128 experts)
+    assert cfg.active_params() < cfg.total_params() / 10
+    f_train, tok_train = analysis.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    f_dec, tok_dec = analysis.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tok_train == 256 * 4096 and tok_dec == 128
+    assert f_train == 6.0 * cfg.active_params() * tok_train
+    assert f_dec == 2.0 * cfg.active_params() * tok_dec
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-1.5b", "decode_32k"),
+    ("gemma-2b", "decode_32k"),
+    ("llama4-maverick-400b-a17b", "decode_32k"),
+])
+def test_local_attention_shapes_respect_sharding(arch, shape):
+    cfg = configs.get(arch)
+    shp = INPUT_SHAPES[shape]
+    qs, kvs = local_attention_shapes(cfg, shp, 256, dsz=16, msz=16)
+    assert qs[0] == shp.global_batch // 16
+    if cfg.n_kv_heads % 16 == 0:
+        assert kvs[1] == shp.seq_len                 # heads sharded, seq full
+    else:
+        assert kvs[1] == shp.seq_len // 16           # seq sharded over model
+
+
+def test_measure_correction_positive_delta():
+    cfg = configs.get("qwen2-1.5b")
+    corr = measure_correction(cfg, INPUT_SHAPES["decode_32k"], 256)
+    assert corr["measured_per_layer_dev"] > corr["ideal_per_layer_dev"] > 0
+    assert corr["n_attn_layers"] == cfg.n_layers
+    assert corr["delta_dev"] > 0

@@ -1,0 +1,109 @@
+"""SSM substrate invariants: the chunked linear recurrence vs the naive
+sequential oracle, chunk-size invariance (property), and prefill->decode
+state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import ssm as S
+from repro.models.params import Initializer
+
+
+def naive_linear_rnn(logdecay, gatein, q, k, v):
+    """Sequential oracle for h_t = exp(ld_t) h_{t-1} + g_t k_t v_t^T."""
+    B, T, H = logdecay.shape
+    N, P = q.shape[-1], v.shape[-1]
+    h = np.zeros((B, H, N, P), np.float64)
+    ys = np.zeros((B, T, H, P), np.float64)
+    for t in range(T):
+        a = np.exp(logdecay[:, t].astype(np.float64))[:, :, None, None]
+        kv = np.einsum("bhn,bhp->bhnp", k[:, t].astype(np.float64),
+                       v[:, t].astype(np.float64))
+        h = a * h + gatein[:, t].astype(np.float64)[:, :, None, None] * kv
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", q[:, t].astype(np.float64), h)
+    return ys, h
+
+
+def _rand(shape, key, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@pytest.mark.parametrize("B,T,H,N,P,chunk", [
+    (2, 16, 3, 4, 8, 4), (1, 33, 2, 8, 4, 8), (2, 64, 4, 16, 16, 16),
+    (1, 7, 1, 2, 2, 32),  # chunk > T
+])
+def test_chunked_rnn_matches_naive(B, T, H, N, P, chunk):
+    ld = -jnp.abs(_rand((B, T, H), 1))          # decays <= 0
+    g = jnp.abs(_rand((B, T, H), 2))
+    q = _rand((B, T, H, N), 3)
+    k = _rand((B, T, H, N), 4)
+    v = _rand((B, T, H, P), 5)
+    y, h = S.chunked_linear_rnn(ld, g, q, k, v, chunk)
+    y_ref, h_ref = naive_linear_rnn(np.asarray(ld), np.asarray(g), np.asarray(q),
+                                    np.asarray(k), np.asarray(v))
+    np.testing.assert_allclose(np.asarray(y, np.float64), y_ref, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h, np.float64), h_ref, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(T=st.integers(2, 40), c1=st.sampled_from([2, 4, 8]),
+       c2=st.sampled_from([3, 5, 16]))
+def test_chunk_size_invariance(T, c1, c2):
+    """The recurrence result must not depend on the chunking."""
+    B, H, N, P = 1, 2, 4, 4
+    ld = -jnp.abs(_rand((B, T, H), 10))
+    g = jnp.abs(_rand((B, T, H), 11))
+    q = _rand((B, T, H, N), 12)
+    k = _rand((B, T, H, N), 13)
+    v = _rand((B, T, H, P), 14)
+    y1, h1 = S.chunked_linear_rnn(ld, g, q, k, v, c1)
+    y2, h2 = S.chunked_linear_rnn(ld, g, q, k, v, c2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)
+
+
+def test_mamba_prefill_then_decode_matches_full():
+    cfg = configs.get_reduced("zamba2-7b")
+    init = Initializer(jax.random.PRNGKey(0))
+    p = S.init_mamba2(init, cfg)
+    B, S_, d = 2, 12, cfg.d_model
+    x = _rand((B, S_, d), 20, 0.1)
+    y_full, _ = S.mamba2_forward(p, x, cfg)
+    state = S.init_mamba_state(cfg, B, "float32")
+    y_pre, state = S.mamba2_forward(p, x[:, :-1], cfg, state=state,
+                                    return_state=True)
+    y_dec, _ = S.mamba2_forward(p, x[:, -1:], cfg, state=state)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]), atol=5e-4)
+
+
+def test_mlstm_prefill_then_decode_matches_full():
+    cfg = configs.get_reduced("xlstm-350m")
+    init = Initializer(jax.random.PRNGKey(0))
+    p = S.init_mlstm(init, cfg)
+    B, S_, d = 2, 10, cfg.d_model
+    x = _rand((B, S_, d), 21, 0.1)
+    y_full, _ = S.mlstm_forward(p, x, cfg)
+    state = S.init_mlstm_state(cfg, B, "float32")
+    y_pre, state = S.mlstm_forward(p, x[:, :-1], cfg, state=state,
+                                   return_state=True)
+    y_dec, _ = S.mlstm_forward(p, x[:, -1:], cfg, state=state)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]), atol=5e-4)
+
+
+def test_slstm_state_handoff():
+    cfg = configs.get_reduced("xlstm-350m")
+    init = Initializer(jax.random.PRNGKey(0))
+    p = S.init_slstm(init, cfg)
+    B, S_, d = 1, 9, cfg.d_model
+    x = _rand((B, S_, d), 22, 0.1)
+    y_full, _ = S.slstm_forward(p, x, cfg)
+    st0 = S.init_slstm_state(cfg, B, "float32")
+    _, st1 = S.slstm_forward(p, x[:, :-1], cfg, state=st0, return_state=True)
+    y_dec, _ = S.slstm_forward(p, x[:, -1:], cfg, state=st1)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]), atol=5e-4)
