@@ -14,6 +14,7 @@ MODULES = {
     "fig6": ("benchmarks.smart_context", "Fig 6 smart context"),
     "fig7": ("benchmarks.smart_cache", "Fig 7 smart cache"),
     "latency": ("benchmarks.serving_latency", "§5.1 latency table"),
+    "throughput": ("benchmarks.proxy_throughput", "batched pipeline rps"),
     "kernels": ("benchmarks.kernel_bench", "kernel microbench"),
     "roofline": ("benchmarks.roofline_table", "§Roofline table"),
 }

@@ -16,6 +16,9 @@ from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
 from repro.core.judge import Judge
 from repro.core.model_adapter import (ModelAdapter, ModelPool, PoolModel,
                                       Resolution, pool_model_from_config)
+from repro.core.pipeline import (CacheStage, ContextStage, ModelStage,
+                                 PrefetchStage, PromptPipeline, RequestState,
+                                 RouteStage, Stage, default_pipelines)
 from repro.core.proxy import LLMBridge, ProxyConfig
 from repro.core.embeddings import ModelEmbedder, WorkloadEmbedder
 from repro.core.vector_store import VectorStore
@@ -30,6 +33,9 @@ __all__ = [
     "pool_model_from_config", "LLMBridge", "ProxyConfig", "ModelEmbedder",
     "WorkloadEmbedder", "VectorStore", "Query", "Workload", "WorkloadConfig",
     "capability_from_params", "build_bridge", "default_pool",
+    "CacheStage", "ContextStage", "ModelStage", "PrefetchStage",
+    "PromptPipeline", "RequestState", "RouteStage", "Stage",
+    "default_pipelines",
 ]
 
 

@@ -72,6 +72,8 @@ class Metadata:
     cache_types: List[str] = dataclasses.field(default_factory=list)
     usage: Usage = dataclasses.field(default_factory=Usage)
     regeneration: int = 0
+    # stage trajectory through the PromptPipeline (transparency + telemetry)
+    pipeline_stages: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass

@@ -172,26 +172,63 @@ class SemanticCache:
         material is relevant, then answers WITH the cached content using the
         small local model.
         """
-        self.last_usage = Usage()
-        exact = self.get_exact(prompt)
-        if exact is not None:
-            return True, exact, ["exact"], None
+        results, usages = self.smart_get_batch(
+            [prompt], queries=[query], workload=workload,
+            relevance_thresholds=[relevance_threshold], top_k=top_k)
+        self.last_usage = usages[0]
+        return results[0]
 
-        q = self.embedder.embed([prompt])[0]
-        hits = self.store.search(q, top_k=top_k)[0]
+    def smart_get_batch(self, prompts: Sequence[str], *, queries=None,
+                        workload=None,
+                        relevance_thresholds: Optional[Sequence[float]] = None,
+                        top_k: int = 4):
+        """Batched SmartCache GET: the whole batch is embedded in ONE
+        embedder forward pass and answered by ONE multi-query vector search
+        (the ``cache_topk`` hot path); the per-prompt relevance/answer logic
+        matches ``smart_get`` exactly, in submission order.
+
+        Returns ``(results, usages)`` — per-prompt ``smart_get`` 4-tuples and
+        their ``Usage``.
+        """
+        n = len(prompts)
+        queries = queries if queries is not None else [None] * n
+        thresholds = (list(relevance_thresholds)
+                      if relevance_thresholds is not None else [0.60] * n)
+        results: List[Tuple] = [None] * n
+        usages: List[Usage] = [Usage() for _ in range(n)]
+        pend: List[int] = []
+        for i, prompt in enumerate(prompts):
+            exact = self.get_exact(prompt)
+            if exact is not None:
+                results[i] = (True, exact, ["exact"], None)
+            else:
+                pend.append(i)
+        if pend:
+            vecs = self.embedder.embed([prompts[i] for i in pend])
+            hit_lists = self.store.search(vecs, top_k=top_k)
+            for i, hits in zip(pend, hit_lists):
+                results[i], usages[i] = self._decide(
+                    prompts[i], hits, queries[i], workload, thresholds[i])
+        return results, usages
+
+    def _decide(self, prompt: str, hits: List[SearchHit], query, workload,
+                relevance_threshold: float) -> Tuple[Tuple, Usage]:
+        """Per-prompt relevance decision + grounded answer over retrieved
+        hits; shared by the sequential and batched GET paths."""
+        usage = Usage()
         if not hits:
-            return False, None, [], None
+            return (False, None, [], None), usage
         best = hits[0]
         # cache-LLM relevance decision (one small-model call)
         if self.small_model is not None:
             u = self.small_model.usage_for(
                 _count_tokens(prompt) + _count_tokens(best.payload.obj), 2)
-            self.last_usage = self.last_usage.add(Usage(
+            usage = usage.add(Usage(
                 extra_llm_input_tokens=u.input_tokens,
                 extra_llm_output_tokens=u.output_tokens,
                 cost=u.cost, latency=u.latency))
         if best.score < relevance_threshold:
-            return False, None, [], None
+            return (False, None, [], None), usage
 
         types = sorted({h.payload.key_type.value for h in hits
                         if h.score >= relevance_threshold})
@@ -202,7 +239,7 @@ class SemanticCache:
         if self.small_model is not None:
             u = self.small_model.usage_for(
                 _count_tokens(prompt) + _count_tokens(material), out_tokens)
-            self.last_usage = self.last_usage.add(u)
+            usage = usage.add(u)
         text = f"[{self.small_model.name if self.small_model else 'cache'}+cache] " \
                f"{material[:96]}"
         tq = None
@@ -210,4 +247,4 @@ class SemanticCache:
             cap = (self.small_model.effective_capability()
                    if self.small_model else 0.3)
             tq = workload.quality(query, cap, cached_facts=True, rng=self.rng)
-        return True, text, types, tq
+        return (True, text, types, tq), usage

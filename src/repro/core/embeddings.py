@@ -43,8 +43,12 @@ class ModelEmbedder:
             return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
 
         self._embed = jax.jit(_embed)
+        self.n_calls = 0
+        self.n_texts = 0
 
     def embed(self, texts: List[str]) -> np.ndarray:
+        self.n_calls += 1
+        self.n_texts += len(texts)
         ids = [self.tok.encode(t)[: self.max_len] for t in texts]
         toks = pad_batch(ids, self.max_len)
         mask = (toks != self.tok.pad_id).astype(np.float32)
@@ -57,6 +61,8 @@ class WorkloadEmbedder:
     def __init__(self, dim: int = 64):
         self.dim = dim
         self._planted: dict[str, np.ndarray] = {}
+        self.n_calls = 0
+        self.n_texts = 0
 
     def register(self, text: str, embedding: np.ndarray) -> None:
         self._planted[text] = embedding / max(np.linalg.norm(embedding), 1e-9)
@@ -72,6 +78,8 @@ class WorkloadEmbedder:
         return v / n if n > 0 else v
 
     def embed(self, texts: List[str]) -> np.ndarray:
+        self.n_calls += 1
+        self.n_texts += len(texts)
         out = np.zeros((len(texts), self.dim), np.float32)
         for i, t in enumerate(texts):
             if t in self._planted:

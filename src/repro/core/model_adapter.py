@@ -146,14 +146,15 @@ class ModelAdapter:
                query: Optional[Query] = None,
                has_context: bool = True,
                cached_facts: bool = False,
-               out_tokens: Optional[int] = None) -> Resolution:
+               out_tokens: Optional[int] = None,
+               text_override: Optional[str] = None) -> Resolution:
         prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
         in_tokens = prompt_tokens + context_tokens
-        if query is not None:
-            out_tokens = out_tokens or query.output_tokens
-        out_tokens = out_tokens or int(prompt_tokens * 3)
+        out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
 
-        if model.engine is not None and model.tokenizer is not None:
+        if text_override is not None:
+            text = text_override
+        elif model.engine is not None and model.tokenizer is not None:
             text = self._real_generate(model, prompt, out_tokens)
         else:
             text = f"[{model.name}] response({_count_tokens(prompt)}t prompt): {prompt[:64]}"
@@ -173,6 +174,46 @@ class ModelAdapter:
         toks = jnp.asarray([ids], jnp.int32)
         gen = model.engine.generate(toks, max_new=min(out_tokens, 32))
         return model.tokenizer.decode(list(np.asarray(gen[0])))
+
+    # -- batched decode (the serving substrate) --------------------------------
+    def generate_batch(self, items) -> List[Optional[str]]:
+        """items: ``[(model, prompt, query)]``.  Engine-backed models decode
+        ALL their prompts in one continuous batch on the serving Scheduler;
+        SIM-mode entries return None (their text is templated in ``answer``).
+        """
+        out: List[Optional[str]] = [None] * len(items)
+        groups: Dict[str, Tuple[PoolModel, List[Tuple[int, str, int]]]] = {}
+        for i, (model, prompt, query) in enumerate(items):
+            if model is None or model.engine is None or model.tokenizer is None:
+                continue
+            prompt_tokens = (query.input_tokens if query is not None
+                             else _count_tokens(prompt))
+            out_tokens = _default_out_tokens(prompt_tokens, query)
+            groups.setdefault(model.name, (model, []))[1].append(
+                (i, prompt, out_tokens))
+        for model, rows in groups.values():
+            texts = self._real_generate_batch(
+                model, [p for _, p, _ in rows], [o for _, _, o in rows])
+            for (i, _, _), text in zip(rows, texts):
+                out[i] = text
+        return out
+
+    def _real_generate_batch(self, model: PoolModel, prompts: List[str],
+                             out_tokens: List[int]) -> List[str]:
+        """Continuous-batch decode: every prompt gets a Scheduler slot (one
+        synthetic user per request so admission is concurrent, not per-user
+        FIFO-serialized) and the whole batch shares the decode steps."""
+        import jax.numpy as jnp
+        from repro.serving.scheduler import Request, Scheduler
+        sched = Scheduler(model.engine, n_slots=min(len(prompts), 8))
+        for i, (prompt, ot) in enumerate(zip(prompts, out_tokens)):
+            ids = model.tokenizer.encode(prompt)[-64:]
+            sched.submit(Request(rid=i, user=f"__batch__{i}",
+                                 prompt=jnp.asarray(ids, jnp.int32),
+                                 max_new=min(ot, 32)))
+        done = sched.run_to_completion()
+        texts = {r.rid: model.tokenizer.decode(r.generated) for r in done}
+        return [texts[i] for i in range(len(prompts))]
 
     # -- verification-based selection (paper §3.3) -----------------------------
     def verification_select(self, prompt: str, *, threshold: float = 8.0,
@@ -208,6 +249,13 @@ class ModelAdapter:
                           true_quality=r2.true_quality,
                           models_consulted=[m1.name, f"verifier:{verifier.name}", m2.name],
                           verifier_score=score)
+
+
+def _default_out_tokens(prompt_tokens: int, query: Optional[Query]) -> int:
+    """Shared by the sequential and batched answer paths so both decode the
+    same length; a zero planted budget falls through to the 3x heuristic."""
+    out = query.output_tokens if query is not None else 0
+    return out or int(prompt_tokens * 3)
 
 
 def _count_tokens(text: str) -> int:

@@ -1,0 +1,283 @@
+"""Composable prompt pipeline: the proxy request plane as declarative stages.
+
+The paper frames LLMBridge as an HTTP-proxy analogue for prompts — a
+middlebox whose value comes from *composing* caching, context and routing
+functions per request.  This module makes that composition explicit:
+
+* ``RequestState``   — per-request scratchpad threaded through the stages;
+* ``Stage``          — one middlebox function (cache / context / route /
+  model / prefetch); each consumes and produces a ``RequestState``;
+* ``PromptPipeline`` — an ordered stage list with single-request (``run``)
+  and batch-first (``run_batch``) execution.
+
+Every ``ServiceType`` is a stage composition (see ``default_pipelines``),
+so new policies — e.g. a cache→route→verify chain — are one-liners:
+
+    bridge.pipelines[my_type] = PromptPipeline(
+        [CacheStage(), ContextStage(default_k=5), ModelStage(verification=True)])
+
+Batch execution is stage-major: a stage sees ALL in-flight requests of its
+pipeline at once, which is what lets ``CacheStage`` embed every prompt in a
+single embedder forward pass and answer the whole batch with one multi-query
+``VectorStore.search`` (the Pallas ``cache_topk`` hot path), and lets
+``ModelStage`` decode every REAL-mode request in one continuous batch on the
+serving ``Scheduler``.  Stages process requests in submission order, so
+per-generator RNG draw sequences match the sequential path exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.api import ProxyRequest, ProxyResponse, ServiceType, Usage
+from repro.core.context_manager import Message
+from repro.core.model_adapter import PoolModel
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Mutable per-request state consumed/produced by pipeline stages."""
+    req: ProxyRequest
+    model: Optional[PoolModel] = None
+    messages: List[Message] = dataclasses.field(default_factory=list)
+    strategy: str = "none"
+    gate_usage: Usage = dataclasses.field(default_factory=Usage)
+    decision_latency: float = 0.0
+    text_override: Optional[str] = None    # batched REAL-mode decode result
+    response: Optional[ProxyResponse] = None
+    stages_run: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def resolved(self) -> bool:
+        return self.response is not None
+
+
+class Stage:
+    """One middlebox function. ``run`` handles a single request; ``run_batch``
+    defaults to an in-order loop and is overridden by stages with a vectorized
+    hot path (CacheStage, ModelStage)."""
+
+    name = "stage"
+    #: stages that post-process a resolved response (PrefetchStage) set False
+    skip_if_resolved = True
+
+    def run(self, proxy, state: RequestState) -> None:
+        raise NotImplementedError
+
+    def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
+        for st in states:
+            if not (st.resolved and self.skip_if_resolved):
+                self.run(proxy, st)
+
+
+class CacheStage(Stage):
+    """Semantic-cache GET (paper §3.5).  A hit resolves the request and
+    short-circuits the rest of the pipeline.  With ``opt_in=True`` the stage
+    only consults the cache when ``params["cache"]`` is set and not "skip"
+    (the FIXED service type's contract)."""
+
+    name = "cache"
+
+    def __init__(self, opt_in: bool = False):
+        self.opt_in = opt_in
+
+    def _enabled(self, req: ProxyRequest) -> bool:
+        if self.opt_in:
+            return req.params.get("cache", "skip") != "skip"
+        return True
+
+    def run(self, proxy, state: RequestState) -> None:
+        if not self._enabled(state.req):
+            return
+        state.response = proxy._try_cache(state.req)
+
+    def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
+        todo = [s for s in states if not s.resolved and self._enabled(s.req)]
+        if not todo:
+            return
+        results, usages = proxy.cache.smart_get_batch(
+            [s.req.prompt for s in todo],
+            queries=[s.req.query for s in todo],
+            workload=proxy.workload,
+            relevance_thresholds=[float(s.req.params.get(
+                "cache_threshold", proxy.config.cache_relevance)) for s in todo])
+        for s, hit_tuple, usage in zip(todo, results, usages):
+            s.response = proxy._cache_response(s.req, hit_tuple, usage)
+
+
+class ContextStage(Stage):
+    """Context selection (paper §3.4): last-k, optionally gated by the
+    SmartContext decider.  ``default_k`` reads ``params["context_k"]`` with
+    that default; ``k`` pins the window and ignores params."""
+
+    name = "context"
+
+    def __init__(self, default_k: Optional[int] = None, k: Optional[int] = None,
+                 smart: bool = False):
+        assert (default_k is None) != (k is None), "pass exactly one of default_k/k"
+        self.default_k = default_k
+        self.k = k
+        self.smart = smart
+        if smart:
+            self.name = "context[smart]"
+
+    def run(self, proxy, state: RequestState) -> None:
+        req = state.req
+        k = self.k if self.k is not None else int(
+            req.params.get("context_k", self.default_k))
+        msgs, strat, gate, dlat = proxy._select_context(req, k, smart=self.smart)
+        state.messages = msgs
+        state.strategy = strat
+        state.gate_usage = gate
+        state.decision_latency = dlat
+
+
+class RouteStage(Stage):
+    """Model routing over the pool (paper §3.3 filters).  ``select`` maps
+    ``(proxy, req) -> PoolModel``; named constructors cover the standard
+    policies."""
+
+    name = "route"
+
+    def __init__(self, select: Callable, label: str = "route"):
+        self.select = select
+        self.name = f"route[{label}]"
+
+    def run(self, proxy, state: RequestState) -> None:
+        state.model = self.select(proxy, state.req)
+
+    @classmethod
+    def fixed(cls) -> "RouteStage":
+        return cls(lambda p, r: p.pool.get(r.params["model"]), "fixed")
+
+    @classmethod
+    def best(cls) -> "RouteStage":
+        return cls(lambda p, r: p.pool.best(), "best")
+
+    @classmethod
+    def cheapest(cls) -> "RouteStage":
+        return cls(lambda p, r: p.pool.cheapest(), "cheapest")
+
+    @classmethod
+    def param_or_best(cls) -> "RouteStage":
+        return cls(lambda p, r: p._param_model(r, "model") or p.pool.best(),
+                   "param|best")
+
+    @classmethod
+    def param_or_cheapest(cls) -> "RouteStage":
+        return cls(lambda p, r: p._param_model(r, "model") or p.pool.cheapest(),
+                   "param|cheapest")
+
+
+class ModelStage(Stage):
+    """Resolve the request against the routed model (or the verification
+    triple when ``verification=True``, paper §3.3).  In batch mode, REAL-mode
+    pool models decode every request of the batch in one continuous batch via
+    the serving Scheduler before the in-order accounting loop."""
+
+    name = "model"
+
+    def __init__(self, verification: bool = False):
+        self.verification = verification
+        if verification:
+            self.name = "model[verify]"
+
+    def run(self, proxy, state: RequestState) -> None:
+        state.response = proxy._resolve(
+            state.req, state.model, state.messages, state.strategy,
+            state.gate_usage, state.decision_latency,
+            verification=self.verification, text_override=state.text_override)
+
+    def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
+        todo = [s for s in states if not s.resolved]
+        if not self.verification:
+            texts = proxy.adapter.generate_batch(
+                [(s.model, s.req.prompt, s.req.query) for s in todo])
+            for s, t in zip(todo, texts):
+                if t is not None:
+                    s.text_override = t
+        for s in todo:
+            self.run(proxy, s)
+
+
+class PrefetchStage(Stage):
+    """FAST_THEN_BETTER tail (paper §5.1): prefetch a high-quality answer
+    into the exact-match cache; its cost is charged, its latency hidden."""
+
+    name = "prefetch"
+    skip_if_resolved = False
+
+    def run(self, proxy, state: RequestState) -> None:
+        from repro.core.context_manager import ContextManager
+        req, quick = state.req, state.response
+        best = proxy.pool.best()
+        ctx_tokens = ContextManager.token_count(state.messages)
+        better = proxy.adapter.answer(best, req.prompt,
+                                      context_tokens=ctx_tokens, query=req.query)
+        proxy.cache.put_exact(proxy._better_key(req), better.text)
+        # cost is accounted; latency is off the critical path (async prefetch)
+        quick.metadata.usage = quick.metadata.usage.add(
+            Usage(input_tokens=better.usage.input_tokens,
+                  output_tokens=better.usage.output_tokens,
+                  cost=better.usage.cost, latency=0.0))
+        quick.metadata.models_consulted = (
+            quick.metadata.models_consulted + [f"prefetch:{best.name}"])
+        proxy._better_quality[proxy._better_key(req)] = better.true_quality
+
+
+class PromptPipeline:
+    """An ordered stage composition with sequential and batch execution."""
+
+    def __init__(self, stages: Sequence[Stage]):
+        self.stages = list(stages)
+
+    def describe(self) -> str:
+        return " -> ".join(s.name for s in self.stages)
+
+    def run(self, proxy, state: RequestState) -> RequestState:
+        for stage in self.stages:
+            if state.resolved and stage.skip_if_resolved:
+                continue
+            stage.run(proxy, state)
+            state.stages_run.append(stage.name)
+        return state
+
+    def run_batch(self, proxy, states: Sequence[RequestState]
+                  ) -> Sequence[RequestState]:
+        """Stage-major execution: each stage sees every still-live request,
+        in submission order, enabling the batched cache/embedding/decode hot
+        paths."""
+        for stage in self.stages:
+            live = [s for s in states
+                    if not (s.resolved and stage.skip_if_resolved)]
+            if not live:
+                continue
+            stage.run_batch(proxy, live)
+            for s in live:
+                s.stages_run.append(stage.name)
+        return states
+
+
+def default_pipelines(config) -> Dict[ServiceType, PromptPipeline]:
+    """The seven paper service types as declarative stage compositions."""
+    return {
+        ServiceType.FIXED: PromptPipeline([
+            RouteStage.fixed(), CacheStage(opt_in=True),
+            ContextStage(default_k=0), ModelStage()]),
+        ServiceType.QUALITY: PromptPipeline([
+            ContextStage(default_k=50), RouteStage.best(), ModelStage()]),
+        ServiceType.COST: PromptPipeline([
+            RouteStage.cheapest(), ModelStage()]),
+        ServiceType.MODEL_SELECTOR: PromptPipeline([
+            ContextStage(default_k=config.default_context_k),
+            ModelStage(verification=True)]),
+        ServiceType.SMART_CONTEXT: PromptPipeline([
+            ContextStage(default_k=config.smart_context_k, smart=True),
+            RouteStage.param_or_best(), ModelStage()]),
+        ServiceType.SMART_CACHE: PromptPipeline([
+            CacheStage(), ContextStage(k=1),
+            RouteStage.param_or_cheapest(), ModelStage()]),
+        ServiceType.FAST_THEN_BETTER: PromptPipeline([
+            ContextStage(k=1), RouteStage.cheapest(), ModelStage(),
+            PrefetchStage()]),
+    }

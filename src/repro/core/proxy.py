@@ -1,14 +1,31 @@
-"""LLMBridge proxy orchestrator (paper Fig 2).
+"""LLMBridge proxy orchestrator: a stage pipeline over a batched hot path.
 
-Pipeline order for every service type in the paper: ② cache -> ③ context ->
-④ model adapter.  The response carries full transparency metadata and
-``regenerate`` implements the iterative path (same service type = nudge
-quality over cost; §3.2).
+Every service type is a declarative ``PromptPipeline`` composition of
+middlebox stages (``core/pipeline.py``): ② ``CacheStage`` -> ③
+``ContextStage`` -> ``RouteStage`` -> ④ ``ModelStage`` (paper Fig 2), with
+``PrefetchStage`` appended for the latency-centric FAST_THEN_BETTER type.
+``self.pipelines`` maps ``ServiceType -> PromptPipeline``; new policies
+(e.g. cache→route→verify chains) are one-line compositions, not new handler
+methods.
+
+Two execution modes share the same stages:
+
+* ``request``        — one request through its pipeline, stage by stage;
+* ``request_batch``  — B in-flight requests executed stage-major: one
+  embedder forward pass and one multi-query ``VectorStore.search`` (Pallas
+  ``cache_topk``) answer the whole batch's cache lookups, and REAL-mode pool
+  models decode admitted requests in one continuous batch on the serving
+  ``Scheduler``.  Requests in a batch are concurrently in-flight: context
+  writes commit after the batch completes, in submission order.
+
+The response carries full transparency metadata — including the stage
+trajectory in ``metadata.pipeline_stages`` — and ``regenerate`` implements
+the iterative path (same service type = nudge quality over cost; §3.2).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -18,6 +35,7 @@ from repro.core.context_manager import (ContextManager, LastK, SmartContext,
                                         apply_filters)
 from repro.core.model_adapter import ModelAdapter, ModelPool, PoolModel, _count_tokens
 from repro.core.judge import Judge
+from repro.core.pipeline import PromptPipeline, RequestState, default_pipelines
 from repro.core.workload import Workload
 
 
@@ -43,6 +61,10 @@ class LLMBridge:
         self.workload = workload
         self.config = config
         self.rng = np.random.default_rng(seed + 1)
+        # ServiceType -> PromptPipeline; mutate/extend to add policies
+        self.pipelines: Dict[ServiceType, PromptPipeline] = default_pipelines(config)
+        # FAST_THEN_BETTER prefetched qualities, keyed by _better_key
+        self._better_quality: Dict[str, Any] = {}
 
     # -- the SmartContext decider (planted channel or real small model) -------
     def _context_decider(self) -> Callable:
@@ -59,18 +81,33 @@ class LLMBridge:
 
     # -- main entry ------------------------------------------------------------
     def request(self, req: ProxyRequest) -> ProxyResponse:
-        st = req.service_type
-        handler = {
-            ServiceType.FIXED: self._handle_fixed,
-            ServiceType.QUALITY: self._handle_quality,
-            ServiceType.COST: self._handle_cost,
-            ServiceType.MODEL_SELECTOR: self._handle_model_selector,
-            ServiceType.SMART_CONTEXT: self._handle_smart_context,
-            ServiceType.SMART_CACHE: self._handle_smart_cache,
-            ServiceType.FAST_THEN_BETTER: self._handle_fast_then_better,
-        }[st]
-        resp = handler(req)
-        resp.metadata.service_type = st.value
+        state = RequestState(req=req)
+        self.pipelines[req.service_type].run(self, state)
+        return self._finalize(state)
+
+    def request_batch(self, reqs: Sequence[ProxyRequest]) -> List[ProxyResponse]:
+        """Execute B in-flight requests batch-first.
+
+        Requests are grouped by service type (order preserved within a
+        group) and each group runs stage-major through its pipeline, so the
+        cache stage issues ONE embedder call + ONE multi-query vector search
+        for the group and REAL-mode models decode in one continuous batch.
+        Context appends commit after the batch, in submission order — a
+        batch is a set of concurrently in-flight requests, so members do
+        not observe each other's context writes.
+        """
+        states = [RequestState(req=r) for r in reqs]
+        groups: Dict[ServiceType, List[RequestState]] = {}
+        for s in states:
+            groups.setdefault(s.req.service_type, []).append(s)
+        for st_type, group in groups.items():
+            self.pipelines[st_type].run_batch(self, group)
+        return [self._finalize(s) for s in states]
+
+    def _finalize(self, state: RequestState) -> ProxyResponse:
+        req, resp = state.req, state.response
+        resp.metadata.service_type = req.service_type.value
+        resp.metadata.pipeline_stages = list(state.stages_run)
         if req.update_context:
             toks = None
             if req.query is not None:
@@ -78,7 +115,7 @@ class LLMBridge:
             self.context.append(req.conversation, req.prompt, resp.text, tokens=toks)
         return resp
 
-    # -- service types -----------------------------------------------------------
+    # -- stage primitives --------------------------------------------------------
     def _select_context(self, req: ProxyRequest, k: int, smart: bool):
         """Returns (messages, strategy_name, gate_usage, decision_latency)."""
         gate_usage = Usage()
@@ -95,9 +132,10 @@ class LLMBridge:
         msgs = apply_filters(LastK(k), self.context.history(req.conversation), req.prompt)
         return msgs, f"last_k(k={k})", gate_usage, 0.0
 
-    def _resolve(self, req: ProxyRequest, model: PoolModel, msgs,
+    def _resolve(self, req: ProxyRequest, model: Optional[PoolModel], msgs,
                  strategy: str, gate_usage: Usage, decision_latency: float,
-                 *, verification: bool = False) -> ProxyResponse:
+                 *, verification: bool = False,
+                 text_override: Optional[str] = None) -> ProxyResponse:
         ctx_tokens = ContextManager.token_count(msgs)
         has_ctx = len(msgs) > 0 or not (req.query is not None and req.query.needs_context)
         if verification:
@@ -110,7 +148,8 @@ class LLMBridge:
                 verifier=self._param_model(req, "verifier"))
         else:
             res = self.adapter.answer(model, req.prompt, context_tokens=ctx_tokens,
-                                      query=req.query, has_context=has_ctx)
+                                      query=req.query, has_context=has_ctx,
+                                      text_override=text_override)
         usage = res.usage.add(gate_usage)
         md = Metadata(model_used=res.model, models_consulted=res.models_consulted,
                       verifier_score=res.verifier_score,
@@ -123,100 +162,35 @@ class LLMBridge:
         name = req.params.get(key)
         return self.pool.get(name) if name else None
 
-    def _handle_fixed(self, req: ProxyRequest) -> ProxyResponse:
-        model = self.pool.get(req.params["model"])
-        k = int(req.params.get("context_k", 0))
-        if req.params.get("cache", "skip") != "skip":
-            resp = self._try_cache(req)
-            if resp is not None:
-                return resp
-        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
-        return self._resolve(req, model, msgs, strat, gate, dlat)
-
-    def _handle_quality(self, req: ProxyRequest) -> ProxyResponse:
-        model = self.pool.best()
-        k = int(req.params.get("context_k", 50))
-        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
-        return self._resolve(req, model, msgs, strat, gate, dlat)
-
-    def _handle_cost(self, req: ProxyRequest) -> ProxyResponse:
-        model = self.pool.cheapest()
-        return self._resolve(req, model, [], "none", Usage(), 0.0)
-
-    def _handle_model_selector(self, req: ProxyRequest) -> ProxyResponse:
-        k = int(req.params.get("context_k", self.config.default_context_k))
-        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
-        return self._resolve(req, None, msgs, strat, gate, dlat, verification=True)
-
-    def _handle_smart_context(self, req: ProxyRequest) -> ProxyResponse:
-        k = int(req.params.get("context_k", self.config.smart_context_k))
-        msgs, strat, gate, dlat = self._select_context(req, k, smart=True)
-        model = self._param_model(req, "model") or self.pool.best()
-        return self._resolve(req, model, msgs, strat, gate, dlat)
-
-    def _handle_smart_cache(self, req: ProxyRequest) -> ProxyResponse:
-        resp = self._try_cache(req)
-        if resp is not None:
-            return resp
-        # miss: small model, light context
-        model = self._param_model(req, "model") or self.pool.cheapest()
-        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
-        out = self._resolve(req, model, msgs, strat, gate, dlat)
-        out.metadata.cache_hit = False
-        return out
-
-    def _handle_fast_then_better(self, req: ProxyRequest) -> ProxyResponse:
-        """Latency-centric service type (paper §5.1): the fastest cheap model
-        answers NOW (short output via a suitable prompt); a high-quality
-        answer is prefetched into the exact-match cache asynchronously (its
-        cost is charged, its latency is hidden from the user-facing path)."""
-        fast = self.pool.cheapest()
-        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
-        quick = self._resolve(req, fast, msgs, strat, gate, dlat)
-
-        best = self.pool.best()
-        ctx_tokens = ContextManager.token_count(msgs)
-        better = self.adapter.answer(best, req.prompt, context_tokens=ctx_tokens,
-                                     query=req.query)
-        self.cache.put_exact(self._better_key(req), better.text)
-        # cost is accounted; latency is off the critical path (async prefetch)
-        quick.metadata.usage = quick.metadata.usage.add(
-            Usage(input_tokens=better.usage.input_tokens,
-                  output_tokens=better.usage.output_tokens,
-                  cost=better.usage.cost, latency=0.0))
-        quick.metadata.models_consulted = (
-            quick.metadata.models_consulted + [f"prefetch:{best.name}"])
-        self._better_quality[self._better_key(req)] = better.true_quality
-        return quick
-
-    _better_quality: Dict[str, Any] = {}
-
     @staticmethod
     def _better_key(req: ProxyRequest) -> str:
         return f"__better__:{req.conversation}:{req.prompt}"
 
     def batch_request(self, prompts, models, *, user: str = "batch",
                       queries=None) -> Dict[str, List[ProxyResponse]]:
-        """Batch-mode interface (paper §5.2, motivated future work): submit a
-        batch of prompts to several pool models at once and compare."""
+        """Batch-mode comparison interface (paper §5.2): submit a batch of
+        prompts to several pool models at once; each model's batch runs
+        through the batched execution engine."""
         out: Dict[str, List[ProxyResponse]] = {}
         queries = queries or [None] * len(prompts)
         for name in models:
-            rows = []
-            for prompt, q in zip(prompts, queries):
-                rows.append(self.request(ProxyRequest(
-                    prompt=prompt, user=user, conversation=f"batch:{name}",
-                    service_type=ServiceType.FIXED, update_context=False,
-                    query=q, params={"model": name, "context_k": 0})))
-            out[name] = rows
+            out[name] = self.request_batch([ProxyRequest(
+                prompt=prompt, user=user, conversation=f"batch:{name}",
+                service_type=ServiceType.FIXED, update_context=False,
+                query=q, params={"model": name, "context_k": 0})
+                for prompt, q in zip(prompts, queries)])
         return out
 
     def _try_cache(self, req: ProxyRequest) -> Optional[ProxyResponse]:
-        hit, text, types, tq = self.cache.smart_get(
+        hit_tuple = self.cache.smart_get(
             req.prompt, query=req.query, workload=self.workload,
             relevance_threshold=float(req.params.get(
                 "cache_threshold", self.config.cache_relevance)))
-        usage = self.cache.last_usage
+        return self._cache_response(req, hit_tuple, self.cache.last_usage)
+
+    def _cache_response(self, req: ProxyRequest, hit_tuple,
+                        usage: Usage) -> Optional[ProxyResponse]:
+        hit, text, types, tq = hit_tuple
         if not hit:
             return None
         md = Metadata(model_used=(self.cache.small_model.name

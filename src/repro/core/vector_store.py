@@ -28,6 +28,10 @@ class VectorStore:
         self._vecs = np.zeros((capacity, dim), np.float32)
         self._payloads: List[Any] = []
         self.use_pallas = use_pallas
+        # stage telemetry: kernel dispatches vs query rows served by them —
+        # the batched proxy path drives n_queries/n_searches up
+        self.n_searches = 0
+        self.n_queries = 0
 
     def __len__(self) -> int:
         return len(self._payloads)
@@ -51,6 +55,8 @@ class VectorStore:
                predicate=None) -> List[List[SearchHit]]:
         """queries: (Q, dim) or (dim,). Returns per-query hits sorted by score."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
+        self.n_searches += 1
+        self.n_queries += queries.shape[0]
         n = len(self._payloads)
         if n == 0:
             return [[] for _ in range(queries.shape[0])]

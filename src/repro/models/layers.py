@@ -316,7 +316,7 @@ def _decode_attn_context_parallel(q, k_new, v_new, cache, cfg: ModelConfig,
     cspec = P(b_ax, model, None, None)
     pspec = P(b_ax)
 
-    @partial(jax.shard_map, mesh=ctx.mesh,
+    @partial(meshctx.shard_map, mesh=ctx.mesh,
              in_specs=(qspec, qspec, qspec, cspec, cspec, pspec, pspec),
              out_specs=(P(b_ax, None, None), cspec, cspec))
     def _cp(q_l, kn, vn, kc, vc, pos, qpos):

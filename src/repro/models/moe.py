@@ -180,7 +180,7 @@ def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.A
     psub = {k2: p[k2] for k2 in pspec}
     xspec = P(data, None, None)
 
-    @partial(jax.shard_map, mesh=ctx.mesh,
+    @partial(meshctx.shard_map, mesh=ctx.mesh,
              in_specs=(pspec, xspec),
              out_specs=(xspec, P()))
     def _sharded(p_l, x_l):

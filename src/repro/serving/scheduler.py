@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -58,7 +57,7 @@ class Scheduler:
         self.tokens = jnp.zeros((n_slots,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
-        self._rr = itertools.cycle(range(1 << 30))  # round-robin cursor
+        self._rr_start = 0                # round-robin start index over users
         self._users_order: List[str] = []
 
     # -- submission ----------------------------------------------------------
@@ -73,10 +72,16 @@ class Scheduler:
 
     # -- admission -----------------------------------------------------------
     def _next_request(self) -> Optional[Request]:
-        """Round-robin over users; respect one-in-flight-per-user FIFO."""
-        for user in list(self._users_order):
+        """Round-robin over users; respect one-in-flight-per-user FIFO.
+
+        The scan start rotates past the last admitted user so users early in
+        ``_users_order`` cannot starve later ones when slots are scarce."""
+        users = self._users_order
+        for i in range(len(users)):
+            user = users[(self._rr_start + i) % len(users)]
             if self.queues[user] and not self.user_inflight[user]:
                 self.user_inflight[user] = True
+                self._rr_start = (self._rr_start + i + 1) % len(users)
                 return self.queues[user].popleft()
         return None
 

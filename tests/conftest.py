@@ -1,8 +1,19 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
 benches must see the real (single) device; only launch/dryrun.py forces 512
 host devices."""
+import importlib.util
+import pathlib
+
 import jax
 import pytest
+
+# Property-based modules need hypothesis (see requirements-dev.txt).  When it
+# is absent, skip those modules at collection instead of erroring the run.
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore = sorted(
+        p.name for p in pathlib.Path(__file__).parent.glob("test_*.py")
+        if any(line.startswith(("import hypothesis", "from hypothesis"))
+               for line in p.read_text().splitlines()))
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,352 @@
+"""Pipeline layer: stage-composition equivalence against the legacy
+dict-of-handlers proxy, batch-vs-sequential parity, multi-query vector
+search, scheduler round-robin fairness, per-instance prefetch state.
+
+(No hypothesis dependency on purpose: this module must run even when the
+property-based modules are skipped at collection.)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CachedType, LLMBridge, PromptPipeline, ProxyRequest,
+                        ServiceType, Usage, VectorStore, Workload,
+                        WorkloadConfig, build_bridge)
+from repro.core.pipeline import (CacheStage, ContextStage, ModelStage,
+                                 RouteStage)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=6, turns_per_conversation=12,
+                                   seed=7))
+
+
+def _populate_cache(bridge, workload, n=20):
+    for q in workload.queries[:n]:
+        bridge.cache.put(q.text + " background facts. " * 5,
+                         [(CachedType.CHUNK, q.text)], meta={"topic": q.topic})
+
+
+def _assert_responses_equal(a, b, check_stochastic=True):
+    assert a.text == b.text
+    assert a.metadata.model_used == b.metadata.model_used
+    assert a.metadata.models_consulted == b.metadata.models_consulted
+    assert a.metadata.cache_hit == b.metadata.cache_hit
+    assert a.metadata.cache_types == b.metadata.cache_types
+    assert a.metadata.context_k == b.metadata.context_k
+    assert a.metadata.context_strategy == b.metadata.context_strategy
+    assert a.metadata.usage.input_tokens == b.metadata.usage.input_tokens
+    assert a.metadata.usage.output_tokens == b.metadata.usage.output_tokens
+    assert a.metadata.usage.extra_llm_input_tokens == \
+        b.metadata.usage.extra_llm_input_tokens
+    assert np.isclose(a.metadata.usage.cost, b.metadata.usage.cost)
+    if check_stochastic:
+        # identical RNG draw sequences => latency jitter and planted quality
+        # match bit-for-bit
+        assert np.isclose(a.metadata.usage.latency, b.metadata.usage.latency)
+        if a.true_quality is not None or b.true_quality is not None:
+            assert np.isclose(a.true_quality, b.true_quality)
+
+
+# -- legacy reference implementation -------------------------------------------
+class LegacyBridge(LLMBridge):
+    """The pre-pipeline dict-of-handlers request plane, preserved verbatim as
+    the equivalence oracle for the stage compositions."""
+
+    def request(self, req):
+        st = req.service_type
+        handler = {
+            ServiceType.FIXED: self._handle_fixed,
+            ServiceType.QUALITY: self._handle_quality,
+            ServiceType.COST: self._handle_cost,
+            ServiceType.MODEL_SELECTOR: self._handle_model_selector,
+            ServiceType.SMART_CONTEXT: self._handle_smart_context,
+            ServiceType.SMART_CACHE: self._handle_smart_cache,
+            ServiceType.FAST_THEN_BETTER: self._handle_fast_then_better,
+        }[st]
+        resp = handler(req)
+        resp.metadata.service_type = st.value
+        if req.update_context:
+            toks = None
+            if req.query is not None:
+                toks = req.query.input_tokens + req.query.output_tokens
+            self.context.append(req.conversation, req.prompt, resp.text, tokens=toks)
+        return resp
+
+    def _handle_fixed(self, req):
+        model = self.pool.get(req.params["model"])
+        k = int(req.params.get("context_k", 0))
+        if req.params.get("cache", "skip") != "skip":
+            resp = self._try_cache(req)
+            if resp is not None:
+                return resp
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_quality(self, req):
+        model = self.pool.best()
+        k = int(req.params.get("context_k", 50))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_cost(self, req):
+        model = self.pool.cheapest()
+        return self._resolve(req, model, [], "none", Usage(), 0.0)
+
+    def _handle_model_selector(self, req):
+        k = int(req.params.get("context_k", self.config.default_context_k))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
+        return self._resolve(req, None, msgs, strat, gate, dlat, verification=True)
+
+    def _handle_smart_context(self, req):
+        k = int(req.params.get("context_k", self.config.smart_context_k))
+        msgs, strat, gate, dlat = self._select_context(req, k, smart=True)
+        model = self._param_model(req, "model") or self.pool.best()
+        return self._resolve(req, model, msgs, strat, gate, dlat)
+
+    def _handle_smart_cache(self, req):
+        resp = self._try_cache(req)
+        if resp is not None:
+            return resp
+        model = self._param_model(req, "model") or self.pool.cheapest()
+        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
+        out = self._resolve(req, model, msgs, strat, gate, dlat)
+        out.metadata.cache_hit = False
+        return out
+
+    def _handle_fast_then_better(self, req):
+        from repro.core.context_manager import ContextManager
+        fast = self.pool.cheapest()
+        msgs, strat, gate, dlat = self._select_context(req, 1, smart=False)
+        quick = self._resolve(req, fast, msgs, strat, gate, dlat)
+        best = self.pool.best()
+        ctx_tokens = ContextManager.token_count(msgs)
+        better = self.adapter.answer(best, req.prompt, context_tokens=ctx_tokens,
+                                     query=req.query)
+        self.cache.put_exact(self._better_key(req), better.text)
+        quick.metadata.usage = quick.metadata.usage.add(
+            Usage(input_tokens=better.usage.input_tokens,
+                  output_tokens=better.usage.output_tokens,
+                  cost=better.usage.cost, latency=0.0))
+        quick.metadata.models_consulted = (
+            quick.metadata.models_consulted + [f"prefetch:{best.name}"])
+        self._better_quality[self._better_key(req)] = better.true_quality
+        return quick
+
+
+def _build_legacy(workload, seed=0):
+    b = build_bridge(workload=workload, seed=seed)
+    legacy = LegacyBridge(b.pool, b.context, b.cache, b.judge,
+                          workload=workload, config=b.config, seed=seed)
+    return legacy
+
+
+SERVICE_PARAMS = {
+    ServiceType.FIXED: {"model": "gemma3-27b", "context_k": 2, "cache": "on"},
+}
+
+
+@pytest.mark.parametrize("st", list(ServiceType))
+def test_pipeline_matches_legacy_handlers(workload, st):
+    """Each ServiceType's stage composition reproduces the legacy handler
+    output exactly (same seeds => same RNG draw order => identical
+    text/metadata/usage/quality) on the planted workload."""
+    pipe = build_bridge(workload=workload, seed=0)
+    legacy = _build_legacy(workload, seed=0)
+    _populate_cache(pipe, workload)
+    _populate_cache(legacy, workload)
+    for q in workload.queries[:12]:
+        req = ProxyRequest(prompt=q.text, conversation=q.conversation,
+                           service_type=st, query=q,
+                           params=dict(SERVICE_PARAMS.get(st, {})))
+        _assert_responses_equal(pipe.request(req), legacy.request(req))
+
+
+def test_all_service_types_have_pipelines(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    assert set(bridge.pipelines) == set(ServiceType)
+    for st, pipe in bridge.pipelines.items():
+        assert isinstance(pipe, PromptPipeline) and pipe.stages
+    # cache-capable types end with a model stage; cache stage precedes it
+    smart = bridge.pipelines[ServiceType.SMART_CACHE].describe()
+    assert smart.startswith("cache") and smart.endswith("model")
+
+
+def test_custom_pipeline_one_liner(workload):
+    """New policies are stage compositions, not handler methods: a
+    cache→route→verify chain bolted onto an existing type."""
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.pipelines[ServiceType.QUALITY] = PromptPipeline(
+        [CacheStage(), ContextStage(default_k=3),
+         ModelStage(verification=True)])
+    q = workload.queries[0]
+    r = bridge.request(ProxyRequest(prompt=q.text, conversation=q.conversation,
+                                    service_type=ServiceType.QUALITY, query=q))
+    assert r.metadata.pipeline_stages == ["cache", "context", "model[verify]"]
+    assert r.metadata.verifier_score is not None
+
+
+def test_pipeline_stage_trajectory_in_metadata(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    q = workload.queries[0]
+    r = bridge.request(ProxyRequest(prompt=q.text, conversation=q.conversation,
+                                    service_type=ServiceType.SMART_CACHE,
+                                    query=q))
+    assert r.metadata.pipeline_stages[0] == "cache"
+    if r.metadata.cache_hit:
+        assert r.metadata.pipeline_stages == ["cache"]
+    else:
+        assert r.metadata.pipeline_stages == \
+            ["cache", "context", "route[param|cheapest]", "model"]
+
+
+# -- batch engine ---------------------------------------------------------------
+def _one_req_per_conversation(workload, st):
+    qs = [qs[0] for qs in workload.conversations().values()]
+    return [ProxyRequest(prompt=q.text, conversation=q.conversation,
+                         service_type=st, query=q, update_context=False)
+            for q in qs]
+
+
+@pytest.mark.parametrize("st", [ServiceType.COST, ServiceType.QUALITY,
+                                ServiceType.MODEL_SELECTOR,
+                                ServiceType.SMART_CONTEXT,
+                                ServiceType.SMART_CACHE,
+                                ServiceType.FAST_THEN_BETTER])
+def test_request_batch_matches_sequential(workload, st):
+    """request_batch == sequential request on concurrently in-flight
+    requests: identical costs/tokens/models/cache decisions.  Stage-major
+    execution preserves per-generator RNG order for every composition except
+    FAST_THEN_BETTER (whose prefetch draws interleave differently), so
+    latency/quality match exactly there too."""
+    seq_bridge = build_bridge(workload=workload, seed=0)
+    bat_bridge = build_bridge(workload=workload, seed=0)
+    _populate_cache(seq_bridge, workload)
+    _populate_cache(bat_bridge, workload)
+    reqs = _one_req_per_conversation(workload, st)
+    seq = [seq_bridge.request(r) for r in reqs]
+    bat = bat_bridge.request_batch(reqs)
+    stochastic_ok = st != ServiceType.FAST_THEN_BETTER
+    for s, b in zip(seq, bat):
+        _assert_responses_equal(s, b, check_stochastic=stochastic_ok)
+
+
+def test_request_batch_single_embed_and_search(workload):
+    """The acceptance invariant: a B-request smart-cache batch embeds every
+    prompt in ONE embedder call and answers with ONE multi-query
+    VectorStore.search, vs B each sequentially."""
+    B = 6
+    seq_bridge = build_bridge(workload=workload, seed=0)
+    bat_bridge = build_bridge(workload=workload, seed=0)
+    _populate_cache(seq_bridge, workload)
+    _populate_cache(bat_bridge, workload)
+    reqs = _one_req_per_conversation(workload, ServiceType.SMART_CACHE)[:B]
+
+    for bridge in (seq_bridge, bat_bridge):
+        bridge.cache.embedder.n_calls = 0
+        bridge.cache.store.n_searches = 0
+    for r in reqs:
+        seq_bridge.request(r)
+    bat_bridge.request_batch(reqs)
+
+    assert seq_bridge.cache.embedder.n_calls == B
+    assert seq_bridge.cache.store.n_searches == B
+    assert bat_bridge.cache.embedder.n_calls == 1
+    assert bat_bridge.cache.store.n_searches == 1
+
+
+def test_request_batch_mixed_service_types(workload):
+    """A mixed batch groups per service type and returns responses in
+    submission order."""
+    bridge = build_bridge(workload=workload, seed=0)
+    qs = workload.queries[:4]
+    types = [ServiceType.COST, ServiceType.QUALITY, ServiceType.COST,
+             ServiceType.SMART_CONTEXT]
+    reqs = [ProxyRequest(prompt=q.text, conversation=f"mix{i}", query=q,
+                         service_type=st, update_context=False)
+            for i, (q, st) in enumerate(zip(qs, types))]
+    out = bridge.request_batch(reqs)
+    assert [r.metadata.service_type for r in out] == [t.value for t in types]
+    assert [r.request.prompt for r in out] == [q.text for q in qs]
+
+
+def test_batch_request_comparison_interface(workload):
+    """The multi-model comparison API rides on the batched engine."""
+    bridge = build_bridge(workload=workload, seed=0)
+    qs = workload.queries[:3]
+    out = bridge.batch_request([q.text for q in qs],
+                               ["qwen2-1.5b", "gemma3-27b"], queries=qs)
+    assert set(out) == {"qwen2-1.5b", "gemma3-27b"}
+    assert all(len(v) == 3 for v in out.values())
+    cheap = sum(r.metadata.usage.cost for r in out["qwen2-1.5b"])
+    exp = sum(r.metadata.usage.cost for r in out["gemma3-27b"])
+    assert cheap < exp
+
+
+# -- multi-query vector search --------------------------------------------------
+def test_multi_query_search_matches_single(workload):
+    rng = np.random.default_rng(0)
+    store = VectorStore(dim=32)
+    vecs = rng.normal(size=(50, 32)).astype(np.float32)
+    store.add(vecs, [f"p{i}" for i in range(50)])
+    queries = rng.normal(size=(8, 32)).astype(np.float32)
+
+    batched = store.search(queries, top_k=3)
+    for qi in range(queries.shape[0]):
+        single = store.search(queries[qi], top_k=3)[0]
+        got = batched[qi]
+        assert [h.index for h in got] == [h.index for h in single]
+        assert np.allclose([h.score for h in got], [h.score for h in single])
+        assert [h.payload for h in got] == [h.payload for h in single]
+
+
+def test_multi_query_search_threshold_and_predicate():
+    rng = np.random.default_rng(1)
+    store = VectorStore(dim=16)
+    vecs = rng.normal(size=(30, 16)).astype(np.float32)
+    store.add(vecs, list(range(30)))
+    queries = vecs[:5] + 0.01 * rng.normal(size=(5, 16)).astype(np.float32)
+    even = lambda p: p % 2 == 0
+    batched = store.search(queries, top_k=2, threshold=0.2, predicate=even)
+    for qi in range(5):
+        single = store.search(queries[qi], top_k=2, threshold=0.2,
+                              predicate=even)[0]
+        assert [h.index for h in batched[qi]] == [h.index for h in single]
+        assert all(h.payload % 2 == 0 and h.score >= 0.2 for h in batched[qi])
+
+
+# -- satellite regressions ------------------------------------------------------
+def test_scheduler_round_robin_rotates():
+    """The admission scan must rotate across calls: with one slot and three
+    backlogged users, admissions interleave a,b,c,a,b,c — not a,a,b,b,c,c."""
+    import jax.numpy as jnp
+    from repro.serving.scheduler import Request, Scheduler
+
+    class _StubEngine:
+        max_len = 16
+        def new_cache(self, batch, max_len):
+            return {}
+
+    sch = Scheduler(_StubEngine(), n_slots=1)
+    for u in "abc":
+        for i in range(2):
+            sch.submit(Request(rid=hash((u, i)), user=u,
+                               prompt=jnp.zeros((2,), jnp.int32)))
+    order = []
+    for _ in range(6):
+        req = sch._next_request()
+        order.append(req.user)
+        sch.user_inflight[req.user] = False   # simulate completion
+    assert order == list("abcabc")
+    assert sch._next_request() is None
+
+
+def test_better_quality_is_per_instance(workload):
+    b1 = build_bridge(workload=workload, seed=0)
+    b2 = build_bridge(workload=workload, seed=0)
+    assert b1._better_quality is not b2._better_quality
+    q = workload.queries[0]
+    b1.request(ProxyRequest(prompt=q.text, conversation=q.conversation,
+                            service_type=ServiceType.FAST_THEN_BETTER, query=q))
+    assert b1._better_quality and not b2._better_quality
+    assert "_better_quality" not in LLMBridge.__dict__
