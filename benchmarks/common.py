@@ -3,7 +3,7 @@ CSV row plumbing (``name,us_per_call,derived``)."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 

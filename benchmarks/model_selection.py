@@ -12,7 +12,6 @@ Claims validated:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List
 
 import numpy as np

@@ -11,6 +11,7 @@ into ONE embedder forward pass and ONE multi-query ``VectorStore.search``
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.core import (CachedType, ProxyRequest, ServiceType, Workload,
@@ -18,6 +19,10 @@ from repro.core import (CachedType, ProxyRequest, ServiceType, Workload,
 
 BATCH_SIZES = (1, 8, 32)
 REPEATS = 3
+# --smoke (CI): one small batch size pair, single repeat — fails fast on
+# API-surface regressions without burning CI minutes
+SMOKE_BATCH_SIZES = (1, 8)
+SMOKE_REPEATS = 1
 
 
 def _workload():
@@ -42,10 +47,10 @@ def _requests(wl, n):
                          update_context=False) for q in qs]
 
 
-def _time_mode(wl, reqs, batched: bool):
-    """Returns (best_seconds, embed_calls, searches, hits) over REPEATS."""
+def _time_mode(wl, reqs, batched: bool, repeats: int = REPEATS):
+    """Returns (best_seconds, embed_calls, searches, hits) over repeats."""
     best = float("inf")
-    for _ in range(REPEATS):
+    for _ in range(repeats):
         bridge = _fresh_bridge(wl)
         t0 = time.perf_counter()
         if batched:
@@ -59,14 +64,15 @@ def _time_mode(wl, reqs, batched: bool):
     return best, embeds, searches, hits
 
 
-def run():
+def run(batch_sizes=BATCH_SIZES, repeats=REPEATS):
     rows = []
     wl = _workload()
     base_rps = None
-    for B in BATCH_SIZES:
+    for B in batch_sizes:
         reqs = _requests(wl, B)
         for mode, batched in (("seq", False), ("batch", True)):
-            secs, embeds, searches, hits = _time_mode(wl, reqs, batched)
+            secs, embeds, searches, hits = _time_mode(wl, reqs, batched,
+                                                      repeats)
             rps = B / secs
             if B == 1 and mode == "seq":
                 base_rps = rps
@@ -86,5 +92,11 @@ def run():
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small batch sizes, single repeat (CI regression run)")
+    args = ap.parse_args()
+    kw = (dict(batch_sizes=SMOKE_BATCH_SIZES, repeats=SMOKE_REPEATS)
+          if args.smoke else {})
+    for name, us, derived in run(**kw):
         print(f"{name},{us:.1f},{derived}")

@@ -6,7 +6,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from collections import defaultdict
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]

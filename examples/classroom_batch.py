@@ -11,9 +11,8 @@
 * a batch-mode sweep comparing models on the same prompts (§5.2's
   "benchmarking" usage pattern).
 """
-import numpy as np
 
-from repro.core import (CachedType, ProxyRequest, ServiceType, Workload,
+from repro.core import (ProxyRequest, ServiceType, Workload,
                         WorkloadConfig, build_bridge)
 
 wl = Workload(WorkloadConfig(n_conversations=3, turns_per_conversation=8, seed=42))

@@ -1,0 +1,86 @@
+"""API v2 walkthrough: delegate an intent, inspect Metadata v2, iterate.
+
+    PYTHONPATH=src python examples/intent_api.py
+
+The bidirectional loop the paper argues for (§3.2), on the v2 request plane:
+
+1. *delegate*  — state Constraints + a Preference instead of picking a
+   service type; the PolicyCompiler picks the mechanisms;
+2. *inspect*   — Metadata v2 discloses the compiled policy, the budget
+   tier, and per-stage StageRecords (wall-time, decision, cost delta);
+3. *iterate*   — tighten the constraints (or regenerate) and resubmit;
+4. *govern*    — give a user a BudgetLedger budget and watch compiled
+   plans degrade monotonically instead of overdrawing;
+5. *observe*   — proxy.stats() aggregates per-stage wall-time and
+   hit/decision rates across every request served (Fig 6-style, live).
+"""
+from repro.core import (Constraints, Preference, ProxyRequest, Workload,
+                        WorkloadConfig, build_bridge)
+
+
+def show(tag, resp):
+    md = resp.metadata
+    print(f"\n[{tag}] policy={md.policy}  model={md.model_used}  "
+          f"cost={md.usage.cost:.4f}  tier={md.budget_tier}")
+    for rec in md.stage_records:
+        print(f"    {rec.name:16s} {rec.duration * 1e6:8.1f}us  "
+              f"decision={rec.decision:24s} cost+={rec.cost_delta:.4f}")
+
+
+def main() -> None:
+    wl = Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=6))
+    bridge = build_bridge(workload=wl, seed=0)
+    q = wl.queries[0]
+
+    # 1. delegate: quality-first, but never spend more than 2 cost units
+    req = ProxyRequest(prompt=q.text, conversation=q.conversation, query=q,
+                       preference=Preference.QUALITY_FIRST,
+                       constraints=Constraints(max_cost=2.0))
+    r1 = bridge.request(req)
+    show("quality-first, max_cost=2.0", r1)
+
+    # 2-3. inspect, then iterate with a tightened cost ceiling: the compiler
+    # degrades the plan (cheaper route / tighter context) instead of refusing
+    for cap in (0.5, 0.05, 0.002):
+        r = bridge.request(ProxyRequest(
+            prompt=q.text, conversation=q.conversation, query=q,
+            preference=Preference.QUALITY_FIRST,
+            constraints=Constraints(max_cost=cap)))
+        show(f"tightened to max_cost={cap}", r)
+        assert r.metadata.usage.cost <= cap + 1e-9
+
+    # latency-first: instant cheap answer, background prefetch; regenerate
+    # serves the prefetched high-quality answer with zero wait
+    r = bridge.request(ProxyRequest(
+        prompt=q.text, conversation=q.conversation, query=q,
+        preference=Preference.LATENCY_FIRST, constraints=Constraints()))
+    show("latency-first (prefetching in background)", r)
+    better = bridge.regenerate(r)
+    show("regenerate -> served from prefetch cache", better)
+
+    # 4. govern: a per-user budget; plans degrade monotonically, never overdraw
+    bridge.ledger.set_budget("metered-user", 3.0)
+    print("\nbudget-governed run (budget=3.0):")
+    for query in wl.queries[:12]:
+        resp = bridge.request(ProxyRequest(
+            prompt=query.text, conversation=query.conversation, query=query,
+            user="metered-user", update_context=False,
+            preference=Preference.QUALITY_FIRST,
+            constraints=Constraints(allow_cache=False)))
+        md = resp.metadata
+        print(f"    tier={md.budget_tier}  model={md.model_used:22s} "
+              f"cost={md.usage.cost:.4f}  remaining={md.budget_remaining:.4f}")
+    assert bridge.ledger.spent("metered-user") <= 3.0
+
+    # 5. observe: proxy-wide per-stage telemetry
+    stats = bridge.stats()
+    print("\nproxy.stats() — request path:")
+    for name, s in stats["paths"]["request"]["stages"].items():
+        print(f"    {name:16s} n={s['count']:3d}  p50={s['p50_s'] * 1e6:8.1f}us "
+              f" p95={s['p95_s'] * 1e6:8.1f}us  decisions={s['decisions']}")
+    print(f"cache: {stats['cache']}")
+    print(f"ledger: {stats['ledger']}")
+
+
+if __name__ == "__main__":
+    main()

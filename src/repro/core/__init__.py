@@ -6,36 +6,42 @@ cache, context manager and judge.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Optional
 
-from repro.core.api import (Metadata, ProxyRequest, ProxyResponse, ServiceType,
-                            Usage)
+from repro.core.api import (Constraints, Metadata, Preference, ProxyRequest,
+                            ProxyResponse, ServiceType, StageRecord, Usage)
 from repro.core.cache import CachedType, SemanticCache
 from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
                                         SmartContext, Summarize, apply_filters)
 from repro.core.judge import Judge
 from repro.core.model_adapter import (ModelAdapter, ModelPool, PoolModel,
                                       Resolution, pool_model_from_config)
-from repro.core.pipeline import (CacheStage, ContextStage, ModelStage,
-                                 PrefetchStage, PromptPipeline, RequestState,
-                                 RouteStage, Stage, default_pipelines)
-from repro.core.proxy import LLMBridge, ProxyConfig
+from repro.core.pipeline import (CacheStage, ContextStage, DeclineStage,
+                                 ModelStage, PrefetchStage, PromptPipeline,
+                                 RequestState, RouteStage,
+                                 ServePrefetchedStage, Stage,
+                                 default_pipelines)
+from repro.core.policy import (BudgetLedger, CompiledPolicy, PlanSpec,
+                               PolicyCompiler)
+from repro.core.proxy import LLMBridge, ProxyConfig, ProxyStats
 from repro.core.embeddings import ModelEmbedder, WorkloadEmbedder
 from repro.core.vector_store import VectorStore
 from repro.core.workload import (Query, Workload, WorkloadConfig,
                                  capability_from_params)
 
 __all__ = [
-    "Metadata", "ProxyRequest", "ProxyResponse", "ServiceType", "Usage",
+    "Constraints", "Metadata", "Preference", "ProxyRequest", "ProxyResponse",
+    "ServiceType", "StageRecord", "Usage",
     "CachedType", "SemanticCache", "ContextManager", "LastK", "Message",
     "Similar", "SmartContext", "Summarize", "apply_filters", "Judge",
     "ModelAdapter", "ModelPool", "PoolModel", "Resolution",
-    "pool_model_from_config", "LLMBridge", "ProxyConfig", "ModelEmbedder",
-    "WorkloadEmbedder", "VectorStore", "Query", "Workload", "WorkloadConfig",
-    "capability_from_params", "build_bridge", "default_pool",
-    "CacheStage", "ContextStage", "ModelStage", "PrefetchStage",
-    "PromptPipeline", "RequestState", "RouteStage", "Stage",
-    "default_pipelines",
+    "pool_model_from_config", "LLMBridge", "ProxyConfig", "ProxyStats",
+    "ModelEmbedder", "WorkloadEmbedder", "VectorStore", "Query", "Workload",
+    "WorkloadConfig", "capability_from_params", "build_bridge", "default_pool",
+    "BudgetLedger", "CompiledPolicy", "PlanSpec", "PolicyCompiler",
+    "CacheStage", "ContextStage", "DeclineStage", "ModelStage",
+    "PrefetchStage", "PromptPipeline", "RequestState", "RouteStage",
+    "ServePrefetchedStage", "Stage", "default_pipelines",
 ]
 
 

@@ -1,10 +1,28 @@
-"""LLMBridge API types (paper §3.2, Table 2).
+"""LLMBridge API v2: an intent-based, bidirectional contract (paper §3.2).
 
-The bidirectional contract: applications *delegate* via ``service_type`` (+
-key-value params), the proxy answers with ``ProxyResponse`` whose
-``Metadata`` discloses every low-level choice (model(s), context size, cache
-hit — the X-Cache analogue), and applications may *iterate* via
-``proxy.regenerate`` with the same or a different service type.
+The paper's interface idea is *delegation with transparency*: applications
+hand the proxy a high-level intent, the proxy picks the low-level mechanisms
+(model, context window, cache), discloses every choice it made, and the
+application iterates.  Version 2 of the request plane makes the delegation
+genuinely high-level:
+
+* **Intents** — a request carries :class:`Constraints` (``max_cost``,
+  ``max_latency``, ``min_quality``, ``allow_cache``, ``allow_prefetch``) and
+  a :class:`Preference` (cost-first / balanced / quality-first /
+  latency-first).  The proxy's ``PolicyCompiler`` (``core/policy.py``)
+  compiles the intent into a concrete ``PromptPipeline`` composition, and a
+  per-user ``BudgetLedger`` lets compiled plans degrade gracefully (cheaper
+  route, tighter context-k, cache-only) as a budget depletes.
+* **Presets** — the seven v1 :class:`ServiceType` values survive as *named
+  presets*: each maps to a declarative plan that compiles through the same
+  compiler path.  The enum is a back-compat shim, not a dispatch key.
+* **Transparency v2** — :class:`Metadata` discloses the compiled policy, the
+  budget tier, the stage trajectory, and per-stage :class:`StageRecord`
+  entries (wall-time, decision, cost delta); ``proxy.stats()`` aggregates
+  them proxy-wide (the paper's Fig 6-style CDFs, live).
+* **Iteration** — ``proxy.regenerate`` walks the compiler-produced
+  *escalation ladder*: each regeneration attempt is an alternate pipeline
+  composition, so escalation composes with caching and batching.
 """
 from __future__ import annotations
 
@@ -14,6 +32,7 @@ from typing import Any, Dict, List, Optional
 
 
 class ServiceType(str, enum.Enum):
+    """v1 delegation presets (paper Table 2), kept as named intents."""
     FIXED = "fixed"
     QUALITY = "quality"
     COST = "cost"
@@ -26,6 +45,33 @@ class ServiceType(str, enum.Enum):
     FAST_THEN_BETTER = "fast_then_better"
 
 
+class Preference(str, enum.Enum):
+    """Which axis the proxy should optimise when constraints leave slack."""
+    COST_FIRST = "cost_first"
+    BALANCED = "balanced"          # verification routing (paper §3.3)
+    QUALITY_FIRST = "quality_first"
+    LATENCY_FIRST = "latency_first"
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    """Client-stated envelope the compiled pipeline must respect.
+
+    ``max_cost`` is a hard per-request ceiling in cost units: the compiler
+    only selects plans whose *pessimistic* estimate fits, so the realised
+    usage never exceeds it.  ``max_latency`` filters plans by their modelled
+    latency (best-effort; realised latency carries jitter).  ``min_quality``
+    is a capability floor in [0, 1] applied to the routing candidates.
+    ``allow_cache`` / ``allow_prefetch`` grant the middlebox permission to
+    consult the semantic cache / spend budget on background prefetch.
+    """
+    max_cost: Optional[float] = None
+    max_latency: Optional[float] = None
+    min_quality: Optional[float] = None
+    allow_cache: bool = True
+    allow_prefetch: bool = True
+
+
 @dataclasses.dataclass
 class ProxyRequest:
     prompt: str
@@ -36,6 +82,14 @@ class ProxyRequest:
     update_context: bool = True      # §3.4: some calls read but don't insert
     # benchmark plumbing: the planted workload query this prompt came from
     query: Optional[Any] = None
+    # -- v2 intent fields: when either is set the request takes the
+    # constraint-compilation path and ``service_type`` is ignored ----------
+    constraints: Optional[Constraints] = None
+    preference: Optional[Preference] = None
+
+    @property
+    def is_intent(self) -> bool:
+        return self.constraints is not None or self.preference is not None
 
 
 @dataclasses.dataclass
@@ -59,6 +113,22 @@ class Usage:
 
 
 @dataclasses.dataclass
+class StageRecord:
+    """One pipeline stage's disclosure: what it decided and what it cost.
+
+    ``duration`` is wall-clock seconds in the proxy process (in batch mode,
+    the stage's batch wall-time divided evenly across its live requests);
+    ``decision`` is the stage's one-token summary (``hit``/``miss``, routed
+    model, context strategy, ...); ``cost_delta`` is the request-cost
+    increase attributable to the stage.
+    """
+    name: str
+    duration: float = 0.0
+    decision: str = ""
+    cost_delta: float = 0.0
+
+
+@dataclasses.dataclass
 class Metadata:
     """Transparency payload (paper §3.2 'Transparency')."""
     service_type: str = ""
@@ -74,6 +144,11 @@ class Metadata:
     regeneration: int = 0
     # stage trajectory through the PromptPipeline (transparency + telemetry)
     pipeline_stages: List[str] = dataclasses.field(default_factory=list)
+    # -- v2 disclosure ------------------------------------------------------
+    policy: str = ""                 # compiled plan the proxy chose
+    budget_tier: int = 0             # degradation level (0 = undegraded)
+    budget_remaining: float = float("inf")
+    stage_records: List[StageRecord] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -83,3 +158,6 @@ class ProxyResponse:
     request: ProxyRequest
     # ground-truth quality (planted workloads only; never shown to "users")
     true_quality: Optional[float] = None
+    # internal: cost units already posted to the BudgetLedger for this
+    # response (async prefetch tops usage up after the response returns)
+    _ledger_charged: float = dataclasses.field(default=0.0, repr=False)

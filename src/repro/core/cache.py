@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import re
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -100,6 +100,11 @@ class SemanticCache:
         self._exact: Dict[str, str] = {}
         self.rng = np.random.default_rng(seed)
         self.last_usage = Usage()
+        # telemetry (proxy.stats()) + compiler cost-bound bookkeeping
+        self.n_hits = 0
+        self.n_misses = 0
+        self.n_exact_hits = 0
+        self._max_obj_tokens = 0
 
     # -- PUT -------------------------------------------------------------------
     def put(self, obj: str, keys: Optional[Sequence[Tuple[CachedType, str]]] = None,
@@ -127,6 +132,7 @@ class SemanticCache:
 
     def _insert(self, obj: str, keys: List[Tuple[CachedType, str]],
                 meta: Dict[str, Any]) -> List[int]:
+        self._max_obj_tokens = max(self._max_obj_tokens, _count_tokens(obj))
         texts = [k for _, k in keys]
         vecs = self.embedder.embed(texts)
         entries = []
@@ -201,6 +207,8 @@ class SemanticCache:
             exact = self.get_exact(prompt)
             if exact is not None:
                 results[i] = (True, exact, ["exact"], None)
+                self.n_hits += 1
+                self.n_exact_hits += 1
             else:
                 pend.append(i)
         if pend:
@@ -209,7 +217,31 @@ class SemanticCache:
             for i, hits in zip(pend, hit_lists):
                 results[i], usages[i] = self._decide(
                     prompts[i], hits, queries[i], workload, thresholds[i])
+                if results[i][0]:
+                    self.n_hits += 1
+                else:
+                    self.n_misses += 1
         return results, usages
+
+    def consult_cost_bound(self, prompt: str, out_tokens: int = 64,
+                           top_k: int = 4) -> float:
+        """Upper bound on what a ``smart_get`` for ``prompt`` can charge.
+
+        The PolicyCompiler reserves this amount before including a
+        ``CacheStage`` in a budget-constrained plan, so realised spend never
+        exceeds the ledger.  Bound = relevance decision (prompt + largest
+        cached object) + grounded answer over ``top_k`` retrieved objects
+        (with join-separator slack); exact-match hits and empty caches
+        charge nothing and are trivially under it.
+        """
+        if self.small_model is None or not self._entries:
+            return 0.0
+        wc = _count_tokens(prompt)
+        mx = self._max_obj_tokens
+        rel = self.small_model.usage_for(wc + mx, 2).cost
+        ans = self.small_model.usage_for(wc + top_k * mx + 2 * top_k,
+                                         max(out_tokens, 64)).cost
+        return rel + ans
 
     def _decide(self, prompt: str, hits: List[SearchHit], query, workload,
                 relevance_threshold: float) -> Tuple[Tuple, Usage]:

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer, pad_batch
-from repro.models import apply_model
 from repro.models.config import ModelConfig
 
 

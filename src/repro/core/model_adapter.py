@@ -15,7 +15,6 @@ cost(verifier) <= cost(M1) <= cost(M2) (§3.3).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,6 +64,14 @@ class PoolModel:
         cost = in_tokens / 1e3 * self.price_in + out_tokens / 1e3 * self.price_out
         return Usage(input_tokens=in_tokens, output_tokens=out_tokens,
                      cost=cost, latency=lat)
+
+    def estimate_usage(self, in_tokens: int, out_tokens: int) -> Usage:
+        """Deterministic (jitter-free) cost/latency estimate for the same
+        token counts ``usage_for`` would charge — what the PolicyCompiler
+        queries when fitting plans inside ``Constraints``/ledger budgets.
+        Cost is exact (the charged cost is deterministic); latency is the
+        un-jittered model."""
+        return self.usage_for(in_tokens, out_tokens, rng=None)
 
 
 def pool_model_from_config(cfg, generation_bonus: float = 0.0, **kw) -> PoolModel:
@@ -139,6 +146,10 @@ class ModelAdapter:
         self.pool = pool
         self.workload = workload
         self.rng = np.random.default_rng(seed)
+        # dedicated generator for off-critical-path work (async prefetch):
+        # background threads must not interleave draws with the foreground
+        # request path, both for thread-safety and for reproducibility
+        self.background_rng = np.random.default_rng(seed + 1000)
 
     # -- answering ------------------------------------------------------------
     def answer(self, model: PoolModel, prompt: str, *,
@@ -147,7 +158,9 @@ class ModelAdapter:
                has_context: bool = True,
                cached_facts: bool = False,
                out_tokens: Optional[int] = None,
-               text_override: Optional[str] = None) -> Resolution:
+               text_override: Optional[str] = None,
+               rng: Optional[np.random.Generator] = None) -> Resolution:
+        rng = rng if rng is not None else self.rng
         prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
         in_tokens = prompt_tokens + context_tokens
         out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
@@ -163,10 +176,41 @@ class ModelAdapter:
         if query is not None and self.workload is not None:
             tq = self.workload.quality(
                 query, model.effective_capability(),
-                has_context=has_context, cached_facts=cached_facts, rng=self.rng)
-        usage = model.usage_for(in_tokens, out_tokens, rng=self.rng)
+                has_context=has_context, cached_facts=cached_facts, rng=rng)
+        usage = model.usage_for(in_tokens, out_tokens, rng=rng)
         return Resolution(text=text, model=model.name, usage=usage,
                           true_quality=tq, models_consulted=[model.name])
+
+    # -- cost/latency estimation (the compiler's oracle) -----------------------
+    def estimate_answer(self, model: PoolModel, prompt: str, *,
+                        context_tokens: int = 0,
+                        query: Optional[Query] = None,
+                        out_tokens: Optional[int] = None) -> Usage:
+        """Deterministic estimate of what ``answer`` would charge for the
+        same inputs — cost-exact, latency un-jittered."""
+        prompt_tokens = (query.input_tokens if query is not None
+                         else _count_tokens(prompt))
+        out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
+        return model.estimate_usage(prompt_tokens + context_tokens, out_tokens)
+
+    def estimate_verification(self, prompt: str, *,
+                              m1: Optional[PoolModel] = None,
+                              m2: Optional[PoolModel] = None,
+                              verifier: Optional[PoolModel] = None,
+                              context_tokens: int = 0,
+                              query: Optional[Query] = None) -> Usage:
+        """Worst-case (M2 consulted) estimate of ``verification_select``."""
+        v, d1, d2 = self.pool.pick_triple()
+        m1, m2, verifier = m1 or d1, m2 or d2, verifier or v
+        u1 = self.estimate_answer(m1, prompt, context_tokens=context_tokens,
+                                  query=query)
+        vin = u1.input_tokens + u1.output_tokens
+        vu = verifier.estimate_usage(vin, 4)
+        u2 = self.estimate_answer(m2, prompt, context_tokens=context_tokens,
+                                  query=query)
+        return u1.add(Usage(extra_llm_input_tokens=vin,
+                            extra_llm_output_tokens=4,
+                            cost=vu.cost, latency=vu.latency)).add(u2)
 
     def _real_generate(self, model: PoolModel, prompt: str, out_tokens: int) -> str:
         import jax.numpy as jnp
@@ -177,58 +221,83 @@ class ModelAdapter:
 
     # -- batched decode (the serving substrate) --------------------------------
     def generate_batch(self, items) -> List[Optional[str]]:
-        """items: ``[(model, prompt, query)]``.  Engine-backed models decode
-        ALL their prompts in one continuous batch on the serving Scheduler;
-        SIM-mode entries return None (their text is templated in ``answer``).
+        """items: ``[(model, prompt, query)]`` or ``[(model, prompt, query,
+        deadline)]``.  Engine-backed models decode ALL their prompts in one
+        continuous batch on the serving Scheduler; SIM-mode entries return
+        None (their text is templated in ``answer``).  A non-None deadline
+        (seconds of latency budget) is handed to the Scheduler, whose
+        admission serves tight-budget requests first.
         """
         out: List[Optional[str]] = [None] * len(items)
-        groups: Dict[str, Tuple[PoolModel, List[Tuple[int, str, int]]]] = {}
-        for i, (model, prompt, query) in enumerate(items):
+        groups: Dict[str, Tuple[PoolModel, List[tuple]]] = {}
+        for i, item in enumerate(items):
+            model, prompt, query = item[0], item[1], item[2]
+            deadline = item[3] if len(item) > 3 else None
             if model is None or model.engine is None or model.tokenizer is None:
                 continue
             prompt_tokens = (query.input_tokens if query is not None
                              else _count_tokens(prompt))
             out_tokens = _default_out_tokens(prompt_tokens, query)
             groups.setdefault(model.name, (model, []))[1].append(
-                (i, prompt, out_tokens))
+                (i, prompt, out_tokens, deadline))
         for model, rows in groups.values():
             texts = self._real_generate_batch(
-                model, [p for _, p, _ in rows], [o for _, _, o in rows])
-            for (i, _, _), text in zip(rows, texts):
+                model, [p for _, p, _, _ in rows], [o for _, _, o, _ in rows],
+                deadlines=[d for _, _, _, d in rows])
+            for (i, _, _, _), text in zip(rows, texts):
                 out[i] = text
         return out
 
     def _real_generate_batch(self, model: PoolModel, prompts: List[str],
-                             out_tokens: List[int]) -> List[str]:
+                             out_tokens: List[int],
+                             deadlines: Optional[List[Optional[float]]] = None
+                             ) -> List[str]:
         """Continuous-batch decode: every prompt gets a Scheduler slot (one
         synthetic user per request so admission is concurrent, not per-user
-        FIFO-serialized) and the whole batch shares the decode steps."""
+        FIFO-serialized) and the whole batch shares the decode steps.  A
+        request with a latency budget is admitted earliest-deadline-first and
+        has its decode length trimmed to what the budget affords."""
         import jax.numpy as jnp
         from repro.serving.scheduler import Request, Scheduler
+        deadlines = deadlines or [None] * len(prompts)
         sched = Scheduler(model.engine, n_slots=min(len(prompts), 8))
-        for i, (prompt, ot) in enumerate(zip(prompts, out_tokens)):
+        for i, (prompt, ot, dl) in enumerate(zip(prompts, out_tokens, deadlines)):
+            if dl is not None:
+                affordable = int((dl - model.base_latency) /
+                                 model.per_token_latency)
+                ot = max(1, min(ot, affordable))
             ids = model.tokenizer.encode(prompt)[-64:]
             sched.submit(Request(rid=i, user=f"__batch__{i}",
                                  prompt=jnp.asarray(ids, jnp.int32),
-                                 max_new=min(ot, 32)))
+                                 max_new=min(ot, 32), deadline=dl))
         done = sched.run_to_completion()
         texts = {r.rid: model.tokenizer.decode(r.generated) for r in done}
         return [texts[i] for i in range(len(prompts))]
 
     # -- verification-based selection (paper §3.3) -----------------------------
-    def verification_select(self, prompt: str, *, threshold: float = 8.0,
-                            judge=None,
-                            m1: Optional[PoolModel] = None,
-                            m2: Optional[PoolModel] = None,
-                            verifier: Optional[PoolModel] = None,
+    def resolve_triple(self, m1: Optional[PoolModel] = None,
+                       m2: Optional[PoolModel] = None,
+                       verifier: Optional[PoolModel] = None
+                       ) -> Tuple[PoolModel, PoolModel, PoolModel]:
+        """(m1, m2, verifier) with explicit overrides applied over the pool
+        heuristic — the same resolution the verification phases use."""
+        v, d1, d2 = self.pool.pick_triple()
+        return m1 or d1, m2 or d2, verifier or v
+
+    def verification_phase1(self, prompt: str, *, threshold: float,
+                            judge, m1: PoolModel, verifier: PoolModel,
                             context_tokens: int = 0,
                             query: Optional[Query] = None,
-                            has_context: bool = True) -> Resolution:
-        v, d1, d2 = self.pool.pick_triple()
-        m1, m2, verifier = m1 or d1, m2 or d2, verifier or v
-
+                            has_context: bool = True,
+                            m1_text: Optional[str] = None
+                            ) -> Tuple[Optional[Resolution], Optional[tuple]]:
+        """M1 answers, the verifier scores.  Returns ``(resolution, None)``
+        when the score clears the threshold, else ``(None, pending)`` where
+        ``pending`` carries what phase 2 needs to consult M2.  ``m1_text``
+        injects a pre-batched engine decode (the batch hot path)."""
         r1 = self.answer(m1, prompt, context_tokens=context_tokens,
-                         query=query, has_context=has_context)
+                         query=query, has_context=has_context,
+                         text_override=m1_text)
         score = judge.score(r1, query=query) if judge is not None else 10.0
         # verifier call: reads prompt+answer, emits a 1-10 token
         vin = r1.usage.input_tokens + r1.usage.output_tokens
@@ -240,15 +309,43 @@ class ModelAdapter:
             out = dataclasses.replace(r1, usage=r1.usage.add(vusage),
                                       verifier_score=score)
             out.models_consulted = [m1.name, f"verifier:{verifier.name}"]
-            return out
+            return out, None
+        return None, (r1, vusage, score, m1.name, verifier.name)
 
+    def verification_phase2(self, prompt: str, pending: tuple, *,
+                            m2: PoolModel, context_tokens: int = 0,
+                            query: Optional[Query] = None,
+                            has_context: bool = True,
+                            m2_text: Optional[str] = None) -> Resolution:
+        """Consult M2 for a sub-threshold phase-1 result."""
+        r1, vusage, score, m1_name, v_name = pending
         r2 = self.answer(m2, prompt, context_tokens=context_tokens,
-                         query=query, has_context=has_context)
+                         query=query, has_context=has_context,
+                         text_override=m2_text)
         usage = r1.usage.add(vusage).add(r2.usage)
         return Resolution(text=r2.text, model=m2.name, usage=usage,
                           true_quality=r2.true_quality,
-                          models_consulted=[m1.name, f"verifier:{verifier.name}", m2.name],
+                          models_consulted=[m1_name, f"verifier:{v_name}",
+                                            m2.name],
                           verifier_score=score)
+
+    def verification_select(self, prompt: str, *, threshold: float = 8.0,
+                            judge=None,
+                            m1: Optional[PoolModel] = None,
+                            m2: Optional[PoolModel] = None,
+                            verifier: Optional[PoolModel] = None,
+                            context_tokens: int = 0,
+                            query: Optional[Query] = None,
+                            has_context: bool = True) -> Resolution:
+        m1, m2, verifier = self.resolve_triple(m1, m2, verifier)
+        done, pending = self.verification_phase1(
+            prompt, threshold=threshold, judge=judge, m1=m1, verifier=verifier,
+            context_tokens=context_tokens, query=query, has_context=has_context)
+        if done is not None:
+            return done
+        return self.verification_phase2(
+            prompt, pending, m2=m2, context_tokens=context_tokens,
+            query=query, has_context=has_context)
 
 
 def _default_out_tokens(prompt_tokens: int, query: Optional[Query]) -> int:

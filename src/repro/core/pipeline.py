@@ -6,12 +6,17 @@ functions per request.  This module makes that composition explicit:
 
 * ``RequestState``   — per-request scratchpad threaded through the stages;
 * ``Stage``          — one middlebox function (cache / context / route /
-  model / prefetch); each consumes and produces a ``RequestState``;
+  model / prefetch / decline); each consumes and produces a ``RequestState``;
 * ``PromptPipeline`` — an ordered stage list with single-request (``run``)
-  and batch-first (``run_batch``) execution.
+  and batch-first (``run_batch``) execution.  Both wrap every stage with a
+  wall-clock timer and append a ``StageRecord`` (name, duration, decision,
+  cost delta) to the state — the raw material for ``Metadata.stage_records``
+  and ``proxy.stats()``.
 
-Every ``ServiceType`` is a stage composition (see ``default_pipelines``),
-so new policies — e.g. a cache→route→verify chain — are one-liners:
+Pipelines are produced by the ``PolicyCompiler`` (``core/policy.py``): the
+seven ``ServiceType`` presets and arbitrary ``Constraints``/``Preference``
+intents compile into stage compositions through the same path.  Hand-rolled
+compositions still work — e.g. a cache→route→verify chain is one line:
 
     bridge.pipelines[my_type] = PromptPipeline(
         [CacheStage(), ContextStage(default_k=5), ModelStage(verification=True)])
@@ -20,17 +25,20 @@ Batch execution is stage-major: a stage sees ALL in-flight requests of its
 pipeline at once, which is what lets ``CacheStage`` embed every prompt in a
 single embedder forward pass and answer the whole batch with one multi-query
 ``VectorStore.search`` (the Pallas ``cache_topk`` hot path), and lets
-``ModelStage`` decode every REAL-mode request in one continuous batch on the
-serving ``Scheduler``.  Stages process requests in submission order, so
-per-generator RNG draw sequences match the sequential path exactly.
+``ModelStage`` decode every REAL-mode request — including the M1/M2 legs of
+verification routing — in one continuous batch on the serving ``Scheduler``.
+Stages process requests in submission order, so per-generator RNG draw
+sequences match the sequential path exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.api import ProxyRequest, ProxyResponse, ServiceType, Usage
-from repro.core.context_manager import Message
+from repro.core.api import (Metadata, ProxyRequest, ProxyResponse, ServiceType,
+                            StageRecord, Usage)
+from repro.core.context_manager import ContextManager, Message
 from repro.core.model_adapter import PoolModel
 
 
@@ -44,12 +52,27 @@ class RequestState:
     gate_usage: Usage = dataclasses.field(default_factory=Usage)
     decision_latency: float = 0.0
     text_override: Optional[str] = None    # batched REAL-mode decode result
+    resolution_override: Optional[Any] = None  # batched verification result
     response: Optional[ProxyResponse] = None
     stages_run: List[str] = dataclasses.field(default_factory=list)
+    records: List[StageRecord] = dataclasses.field(default_factory=list)
+    policy: Optional[Any] = None           # CompiledPolicy that produced this
+    # small-model relevance spend of a MISSED cache consult: kept out of the
+    # response usage (v1-compatible disclosure) but metered to the ledger
+    # and visible in the cache StageRecord's cost_delta
+    miss_usage: Usage = dataclasses.field(default_factory=Usage)
 
     @property
     def resolved(self) -> bool:
         return self.response is not None
+
+    def cost(self) -> float:
+        """Cost accumulated so far (gate usage folds into the response
+        usage at resolve time, so count one or the other, not both)."""
+        base = self.miss_usage.cost
+        if self.response is not None:
+            return base + self.response.metadata.usage.cost
+        return base + self.gate_usage.cost
 
 
 class Stage:
@@ -68,6 +91,11 @@ class Stage:
         for st in states:
             if not (st.resolved and self.skip_if_resolved):
                 self.run(proxy, st)
+
+    def decision(self, state: RequestState) -> str:
+        """One-token disclosure of what the stage did for ``state``
+        (recorded in ``StageRecord.decision`` after the stage ran)."""
+        return ""
 
 
 class CacheStage(Stage):
@@ -90,6 +118,9 @@ class CacheStage(Stage):
         if not self._enabled(state.req):
             return
         state.response = proxy._try_cache(state.req)
+        if state.response is None:
+            # a missed consult still spent the relevance decision — meter it
+            state.miss_usage = state.miss_usage.add(proxy.cache.last_usage)
 
     def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
         todo = [s for s in states if not s.resolved and self._enabled(s.req)]
@@ -103,21 +134,35 @@ class CacheStage(Stage):
                 "cache_threshold", proxy.config.cache_relevance)) for s in todo])
         for s, hit_tuple, usage in zip(todo, results, usages):
             s.response = proxy._cache_response(s.req, hit_tuple, usage)
+            if s.response is None:
+                s.miss_usage = s.miss_usage.add(usage)
+
+    def decision(self, state: RequestState) -> str:
+        if not self._enabled(state.req):
+            return "skip"
+        if state.response is not None and state.response.metadata.cache_hit:
+            return "hit"
+        return "miss"
 
 
 class ContextStage(Stage):
     """Context selection (paper §3.4): last-k, optionally gated by the
     SmartContext decider.  ``default_k`` reads ``params["context_k"]`` with
-    that default; ``k`` pins the window and ignores params."""
+    that default; ``k`` pins the window and ignores params.  ``scale``
+    multiplies the resolved k and ``suffix`` tags the disclosed strategy —
+    escalation-ladder pipelines use them for the paper's "regenerating uses
+    more context" rule (§3.2)."""
 
     name = "context"
 
     def __init__(self, default_k: Optional[int] = None, k: Optional[int] = None,
-                 smart: bool = False):
+                 smart: bool = False, scale: int = 1, suffix: str = ""):
         assert (default_k is None) != (k is None), "pass exactly one of default_k/k"
         self.default_k = default_k
         self.k = k
         self.smart = smart
+        self.scale = scale
+        self.suffix = suffix
         if smart:
             self.name = "context[smart]"
 
@@ -125,11 +170,15 @@ class ContextStage(Stage):
         req = state.req
         k = self.k if self.k is not None else int(
             req.params.get("context_k", self.default_k))
+        k *= self.scale
         msgs, strat, gate, dlat = proxy._select_context(req, k, smart=self.smart)
         state.messages = msgs
-        state.strategy = strat
+        state.strategy = strat + self.suffix
         state.gate_usage = gate
         state.decision_latency = dlat
+
+    def decision(self, state: RequestState) -> str:
+        return state.strategy
 
 
 class RouteStage(Stage):
@@ -145,6 +194,9 @@ class RouteStage(Stage):
 
     def run(self, proxy, state: RequestState) -> None:
         state.model = self.select(proxy, state.req)
+
+    def decision(self, state: RequestState) -> str:
+        return state.model.name if state.model is not None else "none"
 
     @classmethod
     def fixed(cls) -> "RouteStage":
@@ -168,12 +220,34 @@ class RouteStage(Stage):
         return cls(lambda p, r: p._param_model(r, "model") or p.pool.cheapest(),
                    "param|cheapest")
 
+    @classmethod
+    def mid(cls) -> "RouteStage":
+        """Median-priced model — the COST preset's escalation step."""
+        def select(p, r):
+            ms = sorted(p.pool.list(), key=lambda m: m.price_in)
+            return ms[len(ms) // 2]
+        return cls(select, "mid")
+
+    @classmethod
+    def m2_or_best(cls) -> "RouteStage":
+        """Straight to the expensive model (§3.3) — MODEL_SELECTOR's
+        escalation step."""
+        return cls(lambda p, r: p._param_model(r, "m2") or p.pool.best(),
+                   "m2|best")
+
+    @classmethod
+    def named(cls, name: str) -> "RouteStage":
+        """Pin a specific pool model — compiled budget-aware plans pick the
+        most capable affordable model at compile time."""
+        return cls(lambda p, r: p.pool.get(name), name)
+
 
 class ModelStage(Stage):
     """Resolve the request against the routed model (or the verification
     triple when ``verification=True``, paper §3.3).  In batch mode, REAL-mode
     pool models decode every request of the batch in one continuous batch via
-    the serving Scheduler before the in-order accounting loop."""
+    the serving Scheduler before the in-order accounting loop; verification
+    routing batches the M1 leg and the M2 leg the same way."""
 
     name = "model"
 
@@ -186,47 +260,185 @@ class ModelStage(Stage):
         state.response = proxy._resolve(
             state.req, state.model, state.messages, state.strategy,
             state.gate_usage, state.decision_latency,
-            verification=self.verification, text_override=state.text_override)
+            verification=self.verification, text_override=state.text_override,
+            resolution_override=state.resolution_override)
 
     def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
         todo = [s for s in states if not s.resolved]
-        if not self.verification:
-            texts = proxy.adapter.generate_batch(
-                [(s.model, s.req.prompt, s.req.query) for s in todo])
-            for s, t in zip(todo, texts):
-                if t is not None:
-                    s.text_override = t
+        if self.verification:
+            self._run_batch_verification(proxy, todo)
+            return
+        texts = proxy.adapter.generate_batch(
+            [(s.model, s.req.prompt, s.req.query, _latency_budget(s.req))
+             for s in todo])
+        for s, t in zip(todo, texts):
+            if t is not None:
+                s.text_override = t
         for s in todo:
             self.run(proxy, s)
+
+    def _run_batch_verification(self, proxy, todo) -> None:
+        """Batched M1 → verifier → M2 (satellite of the batch-first plan).
+
+        Engine-backed M1 decodes run as ONE continuous batch, then the
+        in-order verifier loop scores them, then the sub-threshold subset's
+        M2 decodes run as a second continuous batch.  When no engine is
+        involved (SIM mode) the plain in-order loop is kept so RNG draw
+        sequences match the sequential path bit-for-bit.
+        """
+        triples = [proxy._verification_triple(s.req) for s in todo]
+        if not any(m1.engine is not None or m2.engine is not None
+                   for m1, m2, _ in triples):
+            for s in todo:
+                self.run(proxy, s)
+            return
+        m1_texts = proxy.adapter.generate_batch(
+            [(m1, s.req.prompt, s.req.query, _latency_budget(s.req))
+             for s, (m1, _, _) in zip(todo, triples)])
+        results: List = [None] * len(todo)
+        pendings: List = [None] * len(todo)
+        for i, (s, (m1, _, verifier), t1) in enumerate(
+                zip(todo, triples, m1_texts)):
+            ctx_tokens = ContextManager.token_count(s.messages)
+            res, pending = proxy.adapter.verification_phase1(
+                s.req.prompt, threshold=proxy._verify_threshold(s.req),
+                judge=proxy.judge, m1=m1, verifier=verifier,
+                context_tokens=ctx_tokens, query=s.req.query,
+                has_context=proxy._has_context(s.req, s.messages),
+                m1_text=t1)
+            results[i], pendings[i] = res, pending
+        need = [i for i in range(len(todo)) if results[i] is None]
+        m2_texts = proxy.adapter.generate_batch(
+            [(triples[i][1], todo[i].req.prompt, todo[i].req.query,
+              _latency_budget(todo[i].req)) for i in need])
+        for i, t2 in zip(need, m2_texts):
+            s = todo[i]
+            results[i] = proxy.adapter.verification_phase2(
+                s.req.prompt, pendings[i], m2=triples[i][1],
+                context_tokens=ContextManager.token_count(s.messages),
+                query=s.req.query,
+                has_context=proxy._has_context(s.req, s.messages),
+                m2_text=t2)
+        for s, res in zip(todo, results):
+            s.resolution_override = res
+            self.run(proxy, s)
+
+    def decision(self, state: RequestState) -> str:
+        if state.response is None:
+            return "unresolved"
+        return state.response.metadata.model_used
 
 
 class PrefetchStage(Stage):
     """FAST_THEN_BETTER tail (paper §5.1): prefetch a high-quality answer
-    into the exact-match cache; its cost is charged, its latency hidden."""
+    into the exact-match cache; its cost is charged, its latency hidden.
+
+    With ``background=True`` (the default) the high-quality answer is
+    computed on the proxy's prefetch worker thread, so the user-facing path
+    truly returns after ``ModelStage``; ``proxy.flush_prefetch()`` joins the
+    queue (tests / the escalation ladder's serve-prefetched stage call it).
+    The worker draws from ``adapter.background_rng`` so off-thread work
+    never interleaves draws with the foreground request path.
+    """
 
     name = "prefetch"
     skip_if_resolved = False
 
+    def __init__(self, background: bool = True):
+        self.background = background
+
     def run(self, proxy, state: RequestState) -> None:
-        from repro.core.context_manager import ContextManager
-        req, quick = state.req, state.response
+        req, quick, msgs = state.req, state.response, list(state.messages)
+        if self.background:
+            proxy._prefetch.submit(
+                lambda: self._prefetch(proxy, req, quick, msgs))
+        else:
+            self._prefetch(proxy, req, quick, msgs)
+
+    def _prefetch(self, proxy, req: ProxyRequest, quick: ProxyResponse,
+                  msgs: List[Message]) -> None:
         best = proxy.pool.best()
-        ctx_tokens = ContextManager.token_count(state.messages)
-        better = proxy.adapter.answer(best, req.prompt,
-                                      context_tokens=ctx_tokens, query=req.query)
+        ctx_tokens = ContextManager.token_count(msgs)
+        better = proxy.adapter.answer(
+            best, req.prompt, context_tokens=ctx_tokens, query=req.query,
+            rng=proxy.adapter.background_rng if self.background else None)
         proxy.cache.put_exact(proxy._better_key(req), better.text)
-        # cost is accounted; latency is off the critical path (async prefetch)
-        quick.metadata.usage = quick.metadata.usage.add(
-            Usage(input_tokens=better.usage.input_tokens,
-                  output_tokens=better.usage.output_tokens,
-                  cost=better.usage.cost, latency=0.0))
-        quick.metadata.models_consulted = (
-            quick.metadata.models_consulted + [f"prefetch:{best.name}"])
         proxy._better_quality[proxy._better_key(req)] = better.true_quality
+        # cost is accounted; latency is off the critical path
+        with proxy._ledger_lock:
+            quick.metadata.usage = quick.metadata.usage.add(
+                Usage(input_tokens=better.usage.input_tokens,
+                      output_tokens=better.usage.output_tokens,
+                      cost=better.usage.cost, latency=0.0))
+            quick.metadata.models_consulted = (
+                quick.metadata.models_consulted + [f"prefetch:{best.name}"])
+        proxy._charge_response(quick)
+
+    def decision(self, state: RequestState) -> str:
+        return "queued" if self.background else "inline"
+
+
+class ServePrefetchedStage(Stage):
+    """Escalation-ladder head for latency-centric plans: serve the
+    prefetched high-quality answer from the exact-match cache — zero extra
+    model cost, zero wait (the paper's "Get Better Answer" button).  Falls
+    through (leaves the state unresolved) when nothing was prefetched."""
+
+    name = "serve_prefetched"
+
+    def run(self, proxy, state: RequestState) -> None:
+        key = proxy._better_key(state.req)
+        text = proxy.cache.get_exact(key)
+        if text is None:
+            # only wait on the queue when this key might still be in flight,
+            # and never let another request's failed prefetch poison this one
+            # (its error stays stored for an explicit flush_prefetch())
+            proxy._prefetch.flush(raise_errors=False)
+            text = proxy.cache.get_exact(key)
+        if text is None:
+            return
+        md = Metadata(model_used="cache:prefetched", cache_hit=True,
+                      cache_types=["exact"], usage=Usage())
+        state.response = ProxyResponse(
+            text=text, metadata=md, request=state.req,
+            true_quality=proxy._better_quality.get(key))
+
+    def decision(self, state: RequestState) -> str:
+        if (state.response is not None
+                and state.response.metadata.model_used == "cache:prefetched"):
+            return "served"
+        return "fallthrough"
+
+
+class DeclineStage(Stage):
+    """Terminal stage of a fully depleted budget plan: answer without any
+    model spend so the ledger is never overdrawn.  The response discloses
+    the decline; ``regenerate`` (or a topped-up ledger) is the way out."""
+
+    name = "decline"
+
+    def run(self, proxy, state: RequestState) -> None:
+        md = Metadata(model_used="none", context_strategy="declined")
+        state.response = ProxyResponse(
+            text="[budget-exhausted] request declined by policy; top up the "
+                 "budget or relax constraints and regenerate.",
+            metadata=md, request=state.req)
+
+    def decision(self, state: RequestState) -> str:
+        return "declined"
+
+
+def _latency_budget(req: ProxyRequest) -> Optional[float]:
+    return req.constraints.max_latency if req.constraints is not None else None
 
 
 class PromptPipeline:
-    """An ordered stage composition with sequential and batch execution."""
+    """An ordered stage composition with sequential and batch execution.
+
+    Both modes time every stage and append a ``StageRecord`` per live
+    request — per-stage wall-time, the stage's decision, and the cost delta
+    it caused — feeding ``Metadata.stage_records`` and ``proxy.stats()``.
+    """
 
     def __init__(self, stages: Sequence[Stage]):
         self.stages = list(stages)
@@ -238,46 +450,46 @@ class PromptPipeline:
         for stage in self.stages:
             if state.resolved and stage.skip_if_resolved:
                 continue
+            cost_before = state.cost()
+            t0 = time.perf_counter()
             stage.run(proxy, state)
+            dt = time.perf_counter() - t0
             state.stages_run.append(stage.name)
+            state.records.append(StageRecord(
+                name=stage.name, duration=dt, decision=stage.decision(state),
+                cost_delta=state.cost() - cost_before))
         return state
 
     def run_batch(self, proxy, states: Sequence[RequestState]
                   ) -> Sequence[RequestState]:
         """Stage-major execution: each stage sees every still-live request,
         in submission order, enabling the batched cache/embedding/decode hot
-        paths."""
+        paths.  The stage's batch wall-time is attributed evenly across its
+        live requests in their ``StageRecord``s."""
         for stage in self.stages:
             live = [s for s in states
                     if not (s.resolved and stage.skip_if_resolved)]
             if not live:
                 continue
+            costs_before = [s.cost() for s in live]
+            t0 = time.perf_counter()
             stage.run_batch(proxy, live)
-            for s in live:
+            share = (time.perf_counter() - t0) / len(live)
+            for s, cb in zip(live, costs_before):
                 s.stages_run.append(stage.name)
+                s.records.append(StageRecord(
+                    name=stage.name, duration=share,
+                    decision=stage.decision(s), cost_delta=s.cost() - cb))
         return states
 
 
 def default_pipelines(config) -> Dict[ServiceType, PromptPipeline]:
-    """The seven paper service types as declarative stage compositions."""
-    return {
-        ServiceType.FIXED: PromptPipeline([
-            RouteStage.fixed(), CacheStage(opt_in=True),
-            ContextStage(default_k=0), ModelStage()]),
-        ServiceType.QUALITY: PromptPipeline([
-            ContextStage(default_k=50), RouteStage.best(), ModelStage()]),
-        ServiceType.COST: PromptPipeline([
-            RouteStage.cheapest(), ModelStage()]),
-        ServiceType.MODEL_SELECTOR: PromptPipeline([
-            ContextStage(default_k=config.default_context_k),
-            ModelStage(verification=True)]),
-        ServiceType.SMART_CONTEXT: PromptPipeline([
-            ContextStage(default_k=config.smart_context_k, smart=True),
-            RouteStage.param_or_best(), ModelStage()]),
-        ServiceType.SMART_CACHE: PromptPipeline([
-            CacheStage(), ContextStage(k=1),
-            RouteStage.param_or_cheapest(), ModelStage()]),
-        ServiceType.FAST_THEN_BETTER: PromptPipeline([
-            ContextStage(k=1), RouteStage.cheapest(), ModelStage(),
-            PrefetchStage()]),
-    }
+    """The seven paper service types as compiled stage compositions.
+
+    Back-compat shim: presets now compile through the PolicyCompiler (the
+    same path Constraints/Preference intents take); this returns the
+    compiled pipeline per ServiceType.
+    """
+    from repro.core.policy import PolicyCompiler
+    compiler = PolicyCompiler(config)
+    return {st: compiler.compile_service(st).pipeline for st in ServiceType}

@@ -1,41 +1,54 @@
-"""LLMBridge proxy orchestrator: a stage pipeline over a batched hot path.
+"""LLMBridge proxy orchestrator: compiled pipelines over a batched hot path.
 
-Every service type is a declarative ``PromptPipeline`` composition of
-middlebox stages (``core/pipeline.py``): ② ``CacheStage`` -> ③
-``ContextStage`` -> ``RouteStage`` -> ④ ``ModelStage`` (paper Fig 2), with
-``PrefetchStage`` appended for the latency-centric FAST_THEN_BETTER type.
-``self.pipelines`` maps ``ServiceType -> PromptPipeline``; new policies
-(e.g. cache→route→verify chains) are one-line compositions, not new handler
-methods.
+The request plane is *intent-based* (API v2): a ``ProxyRequest`` either
+names a v1 ``ServiceType`` preset or states ``Constraints`` + ``Preference``
+and lets the ``PolicyCompiler`` (``core/policy.py``) pick the mechanisms.
+Both compile to the same thing — a ``PromptPipeline`` of middlebox stages
+(② ``CacheStage`` -> ③ ``ContextStage`` -> ``RouteStage`` -> ④
+``ModelStage`` (paper Fig 2), with ``PrefetchStage`` appended for
+latency-centric plans) plus an *escalation ladder*: alternate compositions
+that ``regenerate`` walks, so iteration composes with caching and batching.
 
 Two execution modes share the same stages:
 
 * ``request``        — one request through its pipeline, stage by stage;
-* ``request_batch``  — B in-flight requests executed stage-major: one
-  embedder forward pass and one multi-query ``VectorStore.search`` (Pallas
-  ``cache_topk``) answer the whole batch's cache lookups, and REAL-mode pool
-  models decode admitted requests in one continuous batch on the serving
-  ``Scheduler``.  Requests in a batch are concurrently in-flight: context
-  writes commit after the batch completes, in submission order.
+* ``request_batch``  — B in-flight requests executed stage-major, grouped by
+  compiled pipeline: one embedder forward pass and one multi-query
+  ``VectorStore.search`` (Pallas ``cache_topk``) answer the whole batch's
+  cache lookups, and REAL-mode pool models — including verification's M1/M2
+  legs — decode admitted requests in one continuous batch on the serving
+  ``Scheduler``, whose admission serves latency-budgeted requests
+  earliest-deadline-first.  Requests in a batch are concurrently in-flight:
+  context writes commit after the batch completes, in submission order.
 
-The response carries full transparency metadata — including the stage
-trajectory in ``metadata.pipeline_stages`` — and ``regenerate`` implements
-the iterative path (same service type = nudge quality over cost; §3.2).
+Cost governance: a per-user ``BudgetLedger`` meters every response; compiled
+intent plans place a pessimistic hold first, so a constrained run can never
+overdraw, and plans degrade monotonically as the budget depletes.
+
+Transparency: responses carry the compiled policy name, budget tier, stage
+trajectory and per-stage ``StageRecord``s; ``stats()`` aggregates per-stage
+wall-time and hit/decision rates across both execution paths (the paper's
+Fig 6-style CDFs, live), and ``stage_cdf`` exposes the raw curves.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.api import Metadata, ProxyRequest, ProxyResponse, ServiceType, Usage
+from repro.core.api import (Metadata, ProxyRequest, ProxyResponse, ServiceType,
+                            Usage)
 from repro.core.cache import SemanticCache
 from repro.core.context_manager import (ContextManager, LastK, SmartContext,
                                         apply_filters)
-from repro.core.model_adapter import ModelAdapter, ModelPool, PoolModel, _count_tokens
+from repro.core.model_adapter import ModelAdapter, ModelPool, PoolModel
 from repro.core.judge import Judge
-from repro.core.pipeline import PromptPipeline, RequestState, default_pipelines
+from repro.core.pipeline import PromptPipeline, RequestState
+from repro.core.policy import BudgetLedger, CompiledPolicy, PolicyCompiler
 from repro.core.workload import Workload
 
 
@@ -48,11 +61,115 @@ class ProxyConfig:
     smart_context_accuracy: float = 0.90  # planted decider channel accuracy
 
 
+class _PrefetchWorker:
+    """Single background worker draining prefetch jobs in submission order.
+
+    The thread is started lazily on the first job and exits after
+    ``IDLE_TIMEOUT`` seconds without work (a later job restarts it), so a
+    process that builds many bridges does not accumulate parked threads.
+    ``flush`` joins the queue and re-raises the first captured job error —
+    the deterministic-test hook the async-prefetch satellite calls for."""
+
+    IDLE_TIMEOUT = 1.0
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._errors: List[BaseException] = []
+        self._lock = threading.Lock()
+
+    def submit(self, job) -> None:
+        # enqueue under the lock: the worker's idle-exit also holds it, so
+        # a job can never land between its emptiness check and its exit
+        with self._lock:
+            self._q.put(job)
+            if self._thread is None:
+                self._thread = threading.Thread(target=self._loop, daemon=True)
+                self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                job = self._q.get(timeout=self.IDLE_TIMEOUT)
+            except queue.Empty:
+                with self._lock:
+                    if self._q.empty():
+                        self._thread = None
+                        return
+                continue
+            try:
+                job()
+            except BaseException as e:       # surfaced on flush()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def flush(self, raise_errors: bool = True) -> None:
+        self._q.join()
+        if raise_errors and self._errors:
+            raise self._errors.pop(0)
+
+
+class ProxyStats:
+    """Per-stage wall-time + decision aggregation for ``proxy.stats()``.
+
+    Counts/totals/decisions are exact scalars; percentile/CDF material is
+    kept in a bounded ring of the most recent ``WINDOW`` durations per
+    stage so a long-lived proxy's memory stays flat."""
+
+    WINDOW = 4096
+
+    def __init__(self):
+        self._paths: Dict[str, Dict[str, Any]] = {}
+
+    def record(self, path: str, state: RequestState) -> None:
+        p = self._paths.setdefault(path, {"requests": 0, "stages": {}})
+        p["requests"] += 1
+        for rec in state.records:
+            s = p["stages"].setdefault(
+                rec.name, {"count": 0, "total_s": 0.0, "cost": 0.0,
+                           "durations": collections.deque(maxlen=self.WINDOW),
+                           "decisions": {}})
+            s["count"] += 1
+            s["total_s"] += rec.duration
+            s["cost"] += rec.cost_delta
+            s["durations"].append(rec.duration)
+            if rec.decision:
+                s["decisions"][rec.decision] = \
+                    s["decisions"].get(rec.decision, 0) + 1
+
+    def durations(self, path: str, stage: str) -> List[float]:
+        return list(self._paths.get(path, {}).get("stages", {})
+                    .get(stage, {}).get("durations", []))
+
+    def snapshot(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for path, p in self._paths.items():
+            stages = {}
+            for name, s in p["stages"].items():
+                d = np.asarray(s["durations"], dtype=np.float64)
+                n = s["count"]
+                stages[name] = {
+                    "count": n,
+                    "total_s": s["total_s"],
+                    "mean_s": s["total_s"] / n if n else 0.0,
+                    "p50_s": float(np.percentile(d, 50)) if d.size else 0.0,
+                    "p95_s": float(np.percentile(d, 95)) if d.size else 0.0,
+                    "cost": s["cost"],
+                    "decisions": dict(s["decisions"]),
+                    "decision_rates": {k: v / n for k, v
+                                       in s["decisions"].items()},
+                }
+            out[path] = {"requests": p["requests"], "stages": stages}
+        return out
+
+
 class LLMBridge:
     def __init__(self, pool: ModelPool, context: ContextManager,
                  cache: SemanticCache, judge: Judge,
                  workload: Optional[Workload] = None,
-                 config: ProxyConfig = ProxyConfig(), seed: int = 0):
+                 config: ProxyConfig = ProxyConfig(), seed: int = 0,
+                 ledger: Optional[BudgetLedger] = None):
         self.pool = pool
         self.adapter = ModelAdapter(pool, workload=workload, seed=seed)
         self.context = context
@@ -61,13 +178,22 @@ class LLMBridge:
         self.workload = workload
         self.config = config
         self.rng = np.random.default_rng(seed + 1)
-        # ServiceType -> PromptPipeline; mutate/extend to add policies
-        self.pipelines: Dict[ServiceType, PromptPipeline] = default_pipelines(config)
+        self.ledger = ledger if ledger is not None else BudgetLedger()
+        # the compiler: presets AND intents lower through the same path
+        self.compiler = PolicyCompiler(config)
+        self._preset_policies: Dict[ServiceType, CompiledPolicy] = {
+            st: self.compiler.compile_service(st) for st in ServiceType}
+        # back-compat dict view (mutate/extend to add or override policies)
+        self.pipelines: Dict[ServiceType, PromptPipeline] = {
+            st: pol.pipeline for st, pol in self._preset_policies.items()}
         # FAST_THEN_BETTER prefetched qualities, keyed by _better_key
         self._better_quality: Dict[str, Any] = {}
+        self._prefetch = _PrefetchWorker()
+        self._ledger_lock = threading.Lock()
+        self._stats = ProxyStats()
 
     # -- the SmartContext decider (planted channel or real small model) -------
-    def _context_decider(self) -> Callable:
+    def _context_decider(self):
         acc = self.config.smart_context_accuracy
 
         def decide(prompt: str, messages, query=None) -> bool:
@@ -79,41 +205,135 @@ class LLMBridge:
             return any(w in p.split() for w in ("it", "that", "they", "more", "why"))
         return decide
 
+    # -- policy resolution -----------------------------------------------------
+    def _policy_for(self, req: ProxyRequest) -> CompiledPolicy:
+        if req.is_intent:
+            return self.compiler.compile_intent(req, self)
+        pol = self._preset_policies[req.service_type]
+        pipe = self.pipelines.get(req.service_type, pol.pipeline)
+        if pipe is not pol.pipeline:      # user override via the dict view
+            pol = dataclasses.replace(pol, pipeline=pipe)
+        return pol
+
     # -- main entry ------------------------------------------------------------
     def request(self, req: ProxyRequest) -> ProxyResponse:
-        state = RequestState(req=req)
-        self.pipelines[req.service_type].run(self, state)
-        return self._finalize(state)
+        policy = self._policy_for(req)
+        state = RequestState(req=req, policy=policy)
+        try:
+            policy.pipeline.run(self, state)
+        except BaseException:
+            self._release_hold(state)   # a failed request must not leak it
+            raise
+        return self._finalize(state, path="request")
 
     def request_batch(self, reqs: Sequence[ProxyRequest]) -> List[ProxyResponse]:
         """Execute B in-flight requests batch-first.
 
-        Requests are grouped by service type (order preserved within a
-        group) and each group runs stage-major through its pipeline, so the
-        cache stage issues ONE embedder call + ONE multi-query vector search
-        for the group and REAL-mode models decode in one continuous batch.
-        Context appends commit after the batch, in submission order — a
-        batch is a set of concurrently in-flight requests, so members do
-        not observe each other's context writes.
+        Requests are grouped by compiled pipeline (order preserved within a
+        group) and each group runs stage-major, so the cache stage issues
+        ONE embedder call + ONE multi-query vector search for the group and
+        REAL-mode models decode in one continuous batch.  Context appends
+        commit after the batch, in submission order — a batch is a set of
+        concurrently in-flight requests, so members do not observe each
+        other's context writes.
         """
-        states = [RequestState(req=r) for r in reqs]
-        groups: Dict[ServiceType, List[RequestState]] = {}
-        for s in states:
-            groups.setdefault(s.req.service_type, []).append(s)
-        for st_type, group in groups.items():
-            self.pipelines[st_type].run_batch(self, group)
-        return [self._finalize(s) for s in states]
+        states: List[RequestState] = []
+        groups: Dict[int, Tuple[PromptPipeline, List[RequestState]]] = {}
+        try:
+            for r in reqs:
+                pol = self._policy_for(r)
+                st = RequestState(req=r, policy=pol)
+                states.append(st)
+                groups.setdefault(id(pol.pipeline),
+                                  (pol.pipeline, []))[1].append(st)
+            for pipe, group in groups.values():
+                pipe.run_batch(self, group)
+        except BaseException:
+            # a failed compile or batch must not leak earlier requests' holds
+            for s in states:
+                self._release_hold(s)
+            raise
+        return [self._finalize(s, path="request_batch") for s in states]
 
-    def _finalize(self, state: RequestState) -> ProxyResponse:
-        req, resp = state.req, state.response
-        resp.metadata.service_type = req.service_type.value
+    def _finalize(self, state: RequestState, path: str = "request",
+                  query_tokens: bool = True) -> ProxyResponse:
+        """Shared epilogue of request/request_batch/regenerate: disclosure
+        fields, ledger settle, stats, context append.  ``query_tokens=False``
+        preserves the historical regenerate behaviour of appending context
+        without the planted token count."""
+        req, resp, policy = state.req, state.response, state.policy
+        resp.metadata.service_type = ("intent" if req.is_intent
+                                      else req.service_type.value)
         resp.metadata.pipeline_stages = list(state.stages_run)
-        if req.update_context:
+        resp.metadata.stage_records = list(state.records)
+        if policy is not None:
+            resp.metadata.policy = policy.name
+            resp.metadata.budget_tier = policy.tier
+        self._settle(state, resp)
+        resp.metadata.budget_remaining = self.ledger.remaining(req.user)
+        self._stats.record(path, state)
+        # declined responses are policy boilerplate, not conversation — they
+        # must not pollute future context windows
+        if req.update_context and resp.metadata.context_strategy != "declined":
             toks = None
-            if req.query is not None:
+            if query_tokens and req.query is not None:
                 toks = req.query.input_tokens + req.query.output_tokens
             self.context.append(req.conversation, req.prompt, resp.text, tokens=toks)
         return resp
+
+    def _settle(self, state: RequestState, resp: ProxyResponse) -> None:
+        """Release the compile-time hold and post the realised cost — the
+        response usage plus any missed-cache consult spend (kept out of the
+        response usage for v1 compatibility, but real money to the ledger;
+        the compile-time cache reserve covers it)."""
+        self._release_hold(state)
+        if state.miss_usage.cost:
+            self.ledger.charge(state.req.user, state.miss_usage.cost)
+        self._charge_response(resp)
+
+    def _release_hold(self, state: RequestState) -> None:
+        if state.policy is not None and state.policy.reserved:
+            self.ledger.release(state.req.user, state.policy.reserved)
+            state.policy.reserved = 0.0
+
+    def _charge_response(self, resp: ProxyResponse) -> None:
+        """Post ``resp``'s usage cost to the ledger exactly once, even when
+        async prefetch tops the usage up after the response returned."""
+        with self._ledger_lock:
+            delta = resp.metadata.usage.cost - resp._ledger_charged
+            if delta:
+                self.ledger.charge(resp.request.user, delta)
+                resp._ledger_charged += delta
+
+    # -- telemetry -------------------------------------------------------------
+    def flush_prefetch(self) -> None:
+        """Join the background prefetch queue (deterministic-test hook)."""
+        self._prefetch.flush()
+
+    def stats(self) -> Dict[str, Any]:
+        """Proxy-wide transparency aggregate: per-stage wall-time +
+        hit/decision rates for both execution paths, cache counters, and
+        the budget ledger (the paper's Fig 6-style telemetry, live)."""
+        return {
+            "paths": self._stats.snapshot(),
+            "cache": {
+                "hits": self.cache.n_hits,
+                "misses": self.cache.n_misses,
+                "exact_hits": self.cache.n_exact_hits,
+                "hit_rate": (self.cache.n_hits /
+                             max(1, self.cache.n_hits + self.cache.n_misses)),
+            },
+            "ledger": self.ledger.summary(),
+        }
+
+    def stage_cdf(self, path: str, stage: str
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """(sorted wall-times, cumulative fraction) for one stage — plot it
+        and you have the paper's Fig 6 latency CDF for that middlebox hop."""
+        d = np.sort(np.asarray(self._stats.durations(path, stage)))
+        if d.size == 0:
+            return d, d
+        return d, np.arange(1, d.size + 1) / d.size
 
     # -- stage primitives --------------------------------------------------------
     def _select_context(self, req: ProxyRequest, k: int, smart: bool):
@@ -132,16 +352,41 @@ class LLMBridge:
         msgs = apply_filters(LastK(k), self.context.history(req.conversation), req.prompt)
         return msgs, f"last_k(k={k})", gate_usage, 0.0
 
+    def _estimate_context_tokens(self, req: ProxyRequest, k: int) -> int:
+        """Token count of the last-k window the compiled plan would attach —
+        exact for non-smart plans (smart gating can only shrink it)."""
+        if k <= 0:
+            return 0
+        msgs = apply_filters(LastK(k), self.context.history(req.conversation),
+                             req.prompt)
+        return ContextManager.token_count(msgs)
+
+    def _has_context(self, req: ProxyRequest, msgs) -> bool:
+        return len(msgs) > 0 or not (req.query is not None
+                                     and req.query.needs_context)
+
+    def _verification_triple(self, req: ProxyRequest
+                             ) -> Tuple[PoolModel, PoolModel, PoolModel]:
+        """(m1, m2, verifier) for this request, param overrides applied."""
+        return self.adapter.resolve_triple(
+            m1=self._param_model(req, "m1"), m2=self._param_model(req, "m2"),
+            verifier=self._param_model(req, "verifier"))
+
+    def _verify_threshold(self, req: ProxyRequest) -> float:
+        return float(req.params.get("threshold", self.config.verify_threshold))
+
     def _resolve(self, req: ProxyRequest, model: Optional[PoolModel], msgs,
                  strategy: str, gate_usage: Usage, decision_latency: float,
                  *, verification: bool = False,
-                 text_override: Optional[str] = None) -> ProxyResponse:
+                 text_override: Optional[str] = None,
+                 resolution_override=None) -> ProxyResponse:
         ctx_tokens = ContextManager.token_count(msgs)
-        has_ctx = len(msgs) > 0 or not (req.query is not None and req.query.needs_context)
-        if verification:
+        has_ctx = self._has_context(req, msgs)
+        if resolution_override is not None:
+            res = resolution_override
+        elif verification:
             res = self.adapter.verification_select(
-                req.prompt, threshold=float(req.params.get(
-                    "threshold", self.config.verify_threshold)),
+                req.prompt, threshold=self._verify_threshold(req),
                 judge=self.judge, context_tokens=ctx_tokens,
                 query=req.query, has_context=has_ctx,
                 m1=self._param_model(req, "m1"), m2=self._param_model(req, "m2"),
@@ -203,59 +448,38 @@ class LLMBridge:
     # -- iterative refinement -----------------------------------------------------
     def regenerate(self, resp: ProxyResponse,
                    service_type: Optional[ServiceType] = None) -> ProxyResponse:
-        """Same service type => escalate quality (paper §3.2); a different
-        service type re-runs the request under the new policy."""
+        """Same service type / intent => walk the policy's escalation ladder
+        (paper §3.2: regenerate = spend more); a different service type
+        re-runs the request under the new policy.  Each ladder rung is a
+        compiler-produced pipeline composition, so escalation composes with
+        caching and batching instead of living in a per-type if/else."""
         req = resp.request
-        self.context.pop_last(req.conversation)   # initial answer leaves context (§5.1)
-        if service_type is not None and service_type != req.service_type:
-            new_req = dataclasses.replace(req, service_type=service_type)
+        if resp.metadata.context_strategy != "declined":
+            # initial answer leaves context (§5.1); declines never entered it
+            self.context.pop_last(req.conversation)
+        if service_type is not None and (req.is_intent
+                                         or service_type != req.service_type):
+            # an explicit service type takes over: drop the intent fields,
+            # otherwise _policy_for would re-take the constraint path
+            new_req = dataclasses.replace(req, service_type=service_type,
+                                          constraints=None, preference=None)
             out = self.request(new_req)
         else:
-            out = self._escalate(resp)
-            if req.update_context:
-                self.context.append(req.conversation, req.prompt, out.text)
+            attempt = resp.metadata.regeneration + 1
+            if req.is_intent:
+                # budget-checked escalation: better plans, same ceilings —
+                # regenerate can never breach max_cost or overdraw the ledger
+                policy = self.compiler.compile_intent(req, self, escalate=True)
+                pipe = policy.pipeline
+            else:
+                policy = self._policy_for(req)
+                pipe = policy.escalation(attempt)
+            state = RequestState(req=req, policy=policy)
+            try:
+                pipe.run(self, state)
+            except BaseException:
+                self._release_hold(state)
+                raise
+            out = self._finalize(state, path="request", query_tokens=False)
         out.metadata.regeneration = resp.metadata.regeneration + 1
-        return out
-
-    def _escalate(self, resp: ProxyResponse) -> ProxyResponse:
-        req = resp.request
-        st = req.service_type
-        if st == ServiceType.FAST_THEN_BETTER:
-            # "Get Better Answer": the prefetched high-quality response is
-            # already in the cache — zero extra model cost, zero wait
-            key = self._better_key(req)
-            text = self.cache.get_exact(key)
-            if text is not None:
-                md = Metadata(model_used="cache:prefetched", cache_hit=True,
-                              cache_types=["exact"], usage=Usage())
-                md.service_type = st.value
-                return ProxyResponse(text=text, metadata=md, request=req,
-                                     true_quality=self._better_quality.get(key))
-        if st == ServiceType.MODEL_SELECTOR:
-            # route straight to the expensive model (§3.3)
-            model = self._param_model(req, "m2") or self.pool.best()
-            k = int(req.params.get("context_k", self.config.default_context_k))
-            msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
-            out = self._resolve(req, model, msgs, strat, gate, dlat)
-        elif st == ServiceType.SMART_CONTEXT:
-            # more context, no gate (§3.2: regenerating uses more context)
-            k = 2 * int(req.params.get("context_k", self.config.smart_context_k))
-            msgs, strat, gate, dlat = self._select_context(req, k, smart=False)
-            model = self._param_model(req, "model") or self.pool.best()
-            out = self._resolve(req, model, msgs, strat + "+regen", gate, dlat)
-        elif st == ServiceType.SMART_CACHE:
-            # bypass cache entirely, consult a capable model
-            model = self.pool.best()
-            msgs, strat, gate, dlat = self._select_context(
-                req, self.config.default_context_k, smart=False)
-            out = self._resolve(req, model, msgs, strat, gate, dlat)
-        elif st == ServiceType.COST:
-            mid = sorted(self.pool.list(), key=lambda m: m.price_in)
-            model = mid[len(mid) // 2]
-            out = self._resolve(req, model, [], "none", Usage(), 0.0)
-        else:  # fixed / quality -> best model, generous context
-            model = self.pool.best()
-            msgs, strat, gate, dlat = self._select_context(req, 50, smart=False)
-            out = self._resolve(req, model, msgs, strat, gate, dlat)
-        out.metadata.service_type = st.value
         return out

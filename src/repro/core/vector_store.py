@@ -8,7 +8,7 @@ semantic-cache GET hot path the paper's cost model cares about.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Sequence
 
 import numpy as np
 

@@ -27,7 +27,7 @@ import jax
 
 from repro import configs
 from repro.launch import meshctx
-from repro.launch.mesh import make_context, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_case, skip_reason
 from repro.models.config import INPUT_SHAPES
 from repro.roofline import analysis
@@ -55,6 +55,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
              perf=()) -> dict:
     from repro.launch.specs import build_calibration_case, calibration_points
     from repro import configs as _configs
+    del _configs   # imported for its config-registry side effect only
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     tag = f"{arch}__{shape_name}__{mesh_name}"

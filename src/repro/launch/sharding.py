@@ -18,7 +18,7 @@ KV cache's *sequence* axis over `data` (context-parallel decode).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np

@@ -22,7 +22,7 @@ from repro.launch import sharding as sh
 from repro.launch.mesh import make_context, make_production_mesh
 from repro.launch.meshctx import MeshContext
 from repro.models import init_cache, init_model, vlm
-from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.config import INPUT_SHAPES, ModelConfig
 from repro.serving.engine import prefill_step, serve_step
 from repro.training.optimizer import OptConfig, init_opt_state
 from repro.training.train import train_step

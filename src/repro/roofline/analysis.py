@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e per chip
 PEAK_FLOPS = 197e12        # bf16

@@ -18,7 +18,6 @@ reads the baseline record from experiments/dryrun and writes a
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import os
 from typing import Tuple

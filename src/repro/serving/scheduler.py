@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,13 @@ class Request:
     prompt: jax.Array              # (S,) int32
     max_new: int = 32
     eos_id: int = -1
+    # latency budget in seconds from submission (None = best-effort).
+    # Admission serves tight-budget requests earliest-deadline-first against
+    # the arrival-adjusted deadline ``submitted_at + deadline`` (LLMBridge
+    # threads ``Constraints.max_latency`` through ``request_batch`` to here).
+    deadline: Optional[float] = None
     # filled during serving
+    submitted_at: float = 0.0
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pos: int = 0
@@ -62,6 +69,7 @@ class Scheduler:
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        req.submitted_at = time.monotonic()
         if req.user not in self.queues:
             self._users_order.append(req.user)
         self.queues[req.user].append(req)
@@ -75,15 +83,31 @@ class Scheduler:
         """Round-robin over users; respect one-in-flight-per-user FIFO.
 
         The scan start rotates past the last admitted user so users early in
-        ``_users_order`` cannot starve later ones when slots are scarce."""
+        ``_users_order`` cannot starve later ones when slots are scarce.
+        Among eligible users, heads carrying a latency ``deadline`` are
+        admitted earliest-deadline-first (they paid for a latency budget);
+        deadline-free traffic keeps the plain rotation."""
         users = self._users_order
+        eligible = []          # (rotation offset, user)
         for i in range(len(users)):
             user = users[(self._rr_start + i) % len(users)]
             if self.queues[user] and not self.user_inflight[user]:
-                self.user_inflight[user] = True
-                self._rr_start = (self._rr_start + i + 1) % len(users)
-                return self.queues[user].popleft()
-        return None
+                eligible.append((i, user))
+        if not eligible:
+            return None
+        deadlined = [(i, u) for i, u in eligible
+                     if self.queues[u][0].deadline is not None]
+        if deadlined:
+            # arrival-adjusted EDF: a request's urgency grows as it waits
+            def absolute_deadline(t):
+                head = self.queues[t[1]][0]
+                return head.submitted_at + head.deadline
+            i, user = min(deadlined, key=absolute_deadline)
+        else:
+            i, user = eligible[0]
+        self.user_inflight[user] = True
+        self._rr_start = (self._rr_start + i + 1) % len(users)
+        return self.queues[user].popleft()
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):

@@ -8,7 +8,6 @@ from __future__ import annotations
 import os
 from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np

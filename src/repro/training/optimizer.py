@@ -6,7 +6,7 @@ State is a pytree mirroring params; everything jit-friendly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

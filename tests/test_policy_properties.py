@@ -1,0 +1,65 @@
+"""Property tests for the PolicyCompiler's budget guarantees.
+
+Hypothesis-based (skipped at collection by the conftest guard when
+hypothesis is absent): compiled pipelines must never exceed
+``Constraints.max_cost`` and a ledger-constrained user can never be
+overdrawn, for arbitrary constraint draws over the planted workload.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CachedType, Constraints, Preference, ProxyRequest,
+                        Workload, WorkloadConfig, build_bridge)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=8,
+                                   seed=11))
+
+
+def _bridge_with_cache(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    for q in workload.queries[::2]:
+        bridge.cache.put(q.text + " background facts. " * 5,
+                         [(CachedType.CHUNK, q.text)], meta={"topic": q.topic})
+    return bridge
+
+
+# max_cost floor comfortably above the semantic cache's small-model consult
+# bound on this workload, so cache-only degradation also stays inside it
+@settings(max_examples=20, deadline=None)
+@given(max_cost=st.floats(0.005, 2.0),
+       preference=st.sampled_from(list(Preference)),
+       allow_cache=st.booleans())
+def test_compiled_pipelines_never_exceed_max_cost(workload, max_cost,
+                                                  preference, allow_cache):
+    bridge = _bridge_with_cache(workload)
+    cons = Constraints(max_cost=max_cost, allow_cache=allow_cache)
+    for q in workload.queries[:4]:
+        r = bridge.request(ProxyRequest(
+            prompt=q.text, conversation=q.conversation, query=q,
+            preference=preference, constraints=cons))
+        bridge.flush_prefetch()   # prefetch spend settles into usage.cost
+        assert r.metadata.usage.cost <= max_cost + 1e-9
+        assert r.metadata.policy.startswith(f"intent:{preference.value}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(budget=st.floats(0.01, 5.0),
+       preference=st.sampled_from([Preference.COST_FIRST, Preference.BALANCED,
+                                   Preference.QUALITY_FIRST]))
+def test_ledger_is_never_overdrawn(workload, budget, preference):
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.ledger.set_budget("u", budget)
+    tiers, last = [], None
+    for q in workload.queries[:8]:
+        last = bridge.request(ProxyRequest(
+            prompt=q.text, conversation=q.conversation, query=q, user="u",
+            update_context=False, preference=preference,
+            constraints=Constraints(allow_cache=False)))
+        tiers.append(last.metadata.budget_tier)
+    bridge.regenerate(last)   # escalation is budget-fitted too
+    assert bridge.ledger.spent("u") <= budget + 1e-9
+    assert bridge.ledger.remaining("u") >= -1e-9
+    assert tiers == sorted(tiers)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (CachedType, ContextManager, LastK, Message, ProxyRequest,
+from repro.core import (CachedType, LastK, Message, ProxyRequest,
                         ServiceType, SmartContext, Summarize, WorkloadEmbedder,
                         apply_filters, build_bridge, Workload, WorkloadConfig)
 from repro.core.cache import SemanticCache
@@ -206,6 +206,7 @@ def test_fast_then_better_flow(workload):
     q = workload.queries[3]
     r = bridge.request(ProxyRequest(prompt=q.text, conversation=q.conversation,
                                     service_type=ST.FAST_THEN_BETTER, query=q))
+    bridge.flush_prefetch()   # join the background prefetch worker
     fast_model = bridge.pool.cheapest()
     assert r.metadata.model_used == fast_model.name
     assert any(m.startswith("prefetch:") for m in r.metadata.models_consulted)

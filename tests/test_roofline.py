@@ -1,8 +1,5 @@
 """Roofline analysis unit tests: HLO collective parser, term math,
 depth-FD extrapolation arithmetic, kernel-correction shapes."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs

@@ -1,6 +1,5 @@
 """Sharding-rule unit tests (no devices needed: rules are pure functions of
 shapes + mesh sizes; we fake the mesh context)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

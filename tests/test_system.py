@@ -2,8 +2,6 @@
 plus a real-model (reduced-config) serving path — real generation through the
 engine, real embeddings, real vector search, perplexity judging."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs

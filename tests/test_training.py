@@ -3,7 +3,6 @@ decay masking, checkpoint roundtrip, data pipeline structure."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data.tokenizer import ByteTokenizer, HashWordTokenizer, pad_batch
