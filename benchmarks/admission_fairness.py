@@ -1,0 +1,207 @@
+"""Cross-user fairness of the admission front-end: Jain's index, queue wait,
+batch fill.
+
+Three scenarios over the planted workload (SIM-mode pool: cost/latency are
+modelled, wall-clock is real):
+
+* ``skew``   — two users with a 4:1 open-loop arrival skew share a fixed
+  service capacity of 2 requests per round.  The same arrival trace is
+  replayed twice: **naive FIFO** batching (take the next 2 arrivals in
+  global order, whoever sent them) vs the **AdmissionController**'s
+  per-user FIFO rotating round-robin.  Reports per-user completions and
+  Jain's fairness index; the controller must be at least as fair as the
+  baseline (acceptance invariant).
+* ``load``   — 12 users submit open-loop bursts through a controller with
+  ``max_batch=8``: formed batches must fill to ``max_batch`` (the batched
+  embed/search/decode hot path actually engages), reported as a batch-size
+  histogram plus p50/p99 queue wait.
+* ``budget`` — one depleted-ledger user contends with funded users: it
+  yields round-robin turns under contention (``budget_yields`` > 0) but
+  still completes everything within the bounded-wait guarantee.
+
+``--smoke`` shrinks the round counts for the PR gate (same asserts);
+``--json PATH`` writes the full result dict — the nightly CI job uploads it
+as a build artifact next to the proxy-throughput stage CDFs.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+
+from repro.core import (AdmissionController, ProxyRequest, ServiceType,
+                        Workload, WorkloadConfig, build_bridge, jain_index,
+                        jsonable)
+
+ROUNDS_SKEW = 60
+ROUNDS_SMOKE = 12
+HEAVY_RATE, LIGHT_RATE = 4, 1          # 4:1 arrival skew
+CAPACITY = 2                           # served requests per round (skew)
+LOAD_USERS, LOAD_BURST, LOAD_MAX_BATCH = 12, 4, 8
+
+
+def _workload():
+    return Workload(WorkloadConfig(n_conversations=8, turns_per_conversation=8,
+                                   seed=5))
+
+
+def _req(wl, i: int, user: str,
+         service: ServiceType = ServiceType.COST) -> ProxyRequest:
+    q = wl.queries[i % len(wl.queries)]
+    return ProxyRequest(prompt=q.text, user=user, conversation=user,
+                        service_type=service, query=q, update_context=False)
+
+
+def _arrivals(wl, rounds: int):
+    """The shared open-loop trace: per round, HEAVY_RATE requests from the
+    heavy user then LIGHT_RATE from the light one (arrival order)."""
+    i = 0
+    trace = []
+    for _ in range(rounds):
+        batch = []
+        for _ in range(HEAVY_RATE):
+            batch.append(_req(wl, i, "heavy")); i += 1
+        for _ in range(LIGHT_RATE):
+            batch.append(_req(wl, i, "light")); i += 1
+        trace.append(batch)
+    return trace
+
+
+def run_skew(rounds: int = ROUNDS_SKEW) -> dict:
+    wl = _workload()
+
+    # -- naive FIFO baseline: global arrival order, no per-user discipline --
+    bridge = build_bridge(workload=wl, seed=0)
+    backlog = collections.deque()
+    naive_done: collections.Counter = collections.Counter()
+    for arriving in _arrivals(wl, rounds):
+        backlog.extend(arriving)
+        batch = [backlog.popleft() for _ in range(min(CAPACITY, len(backlog)))]
+        for r in bridge.request_batch(batch):
+            naive_done[r.request.user] += 1
+
+    # -- AdmissionController: per-user FIFO, rotating round-robin -----------
+    bridge = build_bridge(workload=wl, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=CAPACITY, max_wait=0.0)
+    bridge.attach_admission(ctrl)
+    adm_done: collections.Counter = collections.Counter()
+    for arriving in _arrivals(wl, rounds):
+        for r in arriving:
+            ctrl.submit(r)
+        for t in ctrl.dispatch():       # one batch per round = same capacity
+            adm_done[t.req.user] += 1
+
+    naive_jain = jain_index(list(naive_done.values()))
+    adm_jain = jain_index(list(adm_done.values()))
+    return {
+        "rounds": rounds,
+        "skew": f"{HEAVY_RATE}:{LIGHT_RATE}",
+        "capacity_per_round": CAPACITY,
+        "naive": {"completed": dict(naive_done), "jain": naive_jain},
+        "admission": {"completed": dict(adm_done), "jain": adm_jain,
+                      "stats": ctrl.stats()},
+    }
+
+
+def run_load(bursts: int = 3) -> dict:
+    """Smart-cache traffic through the front-end: every formed batch must
+    collapse to ONE embedder pass + ONE multi-query vector search (the hot
+    path of PR 1), and under 12-user load batches must fill to max_batch."""
+    wl = _workload()
+    bridge = build_bridge(workload=wl, seed=0)
+    from repro.core import CachedType
+    for q in wl.queries[::2]:
+        bridge.cache.put(q.text + " background facts. " * 5,
+                         [(CachedType.CHUNK, q.text)], meta={"topic": q.topic})
+    bridge.cache.embedder.n_calls = 0
+    bridge.cache.store.n_searches = 0
+    ctrl = AdmissionController(bridge, max_batch=LOAD_MAX_BATCH, max_wait=0.0)
+    bridge.attach_admission(ctrl)
+    i = 0
+    for _ in range(bursts):
+        for _ in range(LOAD_BURST):
+            for u in range(LOAD_USERS):
+                ctrl.submit(_req(wl, i, f"user{u}",
+                                 service=ServiceType.SMART_CACHE))
+                i += 1
+        ctrl.drain()
+    stats = ctrl.stats()
+    stats["embed_calls"] = bridge.cache.embedder.n_calls
+    stats["vector_searches"] = bridge.cache.store.n_searches
+    assert stats["embed_calls"] == stats["batches"], \
+        "batched embed hot path not engaged"
+    return {"users": LOAD_USERS, "max_batch": LOAD_MAX_BATCH,
+            "submitted": i, "stats": stats}
+
+
+def run_budget(rounds: int = 8) -> dict:
+    """One depleted user among funded contenders: deferred, never starved."""
+    wl = _workload()
+    bridge = build_bridge(workload=wl, seed=0)
+    bridge.ledger.set_budget("depleted", 1.0)
+    bridge.ledger.charge("depleted", 0.95)      # fraction left 0.05 -> tier 3
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0,
+                               yield_tier=2, max_yields=3)
+    bridge.attach_admission(ctrl)
+    users = ["depleted", "fund0", "fund1", "fund2"]
+    i = 0
+    order = []                                  # completion order of users
+    for _ in range(rounds):
+        for u in users:
+            ctrl.submit(_req(wl, i, u)); i += 1
+        for t in ctrl.dispatch():
+            order.append(t.req.user)
+    for t in ctrl.drain():
+        order.append(t.req.user)
+    first_depleted = order.index("depleted") if "depleted" in order else -1
+    return {"completion_order_head": order[:12],
+            "first_depleted_completion": first_depleted,
+            "depleted_completed": order.count("depleted"),
+            "submitted_per_user": rounds,
+            "stats": ctrl.stats()}
+
+
+def run(smoke: bool = False) -> dict:
+    rounds = ROUNDS_SMOKE if smoke else ROUNDS_SKEW
+    skew = run_skew(rounds)
+    load = run_load(bursts=1 if smoke else 3)
+    budget = run_budget(rounds=6 if smoke else 12)
+
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert skew["admission"]["jain"] >= skew["naive"]["jain"] - 1e-9, \
+        (skew["admission"]["jain"], skew["naive"]["jain"])
+    hist = load["stats"]["batch_size_hist"]
+    assert LOAD_MAX_BATCH in hist, f"batches never filled: {hist}"
+    assert budget["depleted_completed"] == budget["submitted_per_user"], \
+        "depleted user starved"
+    assert budget["stats"]["budget_yields"] > 0, "depleted user never yielded"
+    return {"skew": skew, "load": load, "budget": budget}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short rounds for the CI PR gate (same asserts)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full result dict as a JSON artifact")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+
+    s = res["skew"]
+    print(f"skew {s['skew']} x{s['rounds']} rounds, C={s['capacity_per_round']}: "
+          f"naive jain={s['naive']['jain']:.3f} {s['naive']['completed']} | "
+          f"admission jain={s['admission']['jain']:.3f} "
+          f"{s['admission']['completed']}")
+    st = res["load"]["stats"]
+    print(f"load {res['load']['users']} users, max_batch="
+          f"{res['load']['max_batch']}: hist={st['batch_size_hist']} "
+          f"wait_p50={st['queue_wait_p50_s'] * 1e6:.0f}us "
+          f"p99={st['queue_wait_p99_s'] * 1e6:.0f}us")
+    b = res["budget"]
+    print(f"budget: depleted completed {b['depleted_completed']}/"
+          f"{b['submitted_per_user']} (first at #{b['first_depleted_completion']}, "
+          f"{b['stats']['budget_yields']} yields) order={b['completion_order_head']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(jsonable(res), f, indent=2)
+        print(f"wrote {args.json}")

@@ -12,10 +12,11 @@ into ONE embedder forward pass and ONE multi-query ``VectorStore.search``
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.core import (CachedType, ProxyRequest, ServiceType, Workload,
-                        WorkloadConfig, build_bridge)
+                        WorkloadConfig, build_bridge, jsonable)
 
 BATCH_SIZES = (1, 8, 32)
 REPEATS = 3
@@ -91,12 +92,40 @@ def run(batch_sizes=BATCH_SIZES, repeats=REPEATS):
     return rows
 
 
+def stage_cdf_artifact(B: int = 32) -> dict:
+    """One batched replay's full telemetry: ``proxy.stats()`` plus the raw
+    per-stage wall-time CDF curves (the paper's Fig 6 material) — the
+    nightly CI job writes this JSON as a build artifact, the first step of
+    the ROADMAP's stats-persistence item."""
+    wl = _workload()
+    bridge = _fresh_bridge(wl)
+    bridge.request_batch(_requests(wl, B))
+    stats = bridge.stats()
+    cdfs = {}
+    for stage in stats["paths"].get("request_batch", {}).get("stages", {}):
+        xs, ys = bridge.stage_cdf("request_batch", stage)
+        cdfs[stage] = {"wall_s": [float(x) for x in xs],
+                       "cum_frac": [float(y) for y in ys]}
+    return {"batch_size": B, "stats": stats, "stage_cdf": cdfs}
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small batch sizes, single repeat (CI regression run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write stats + per-stage CDF curves as JSON")
     args = ap.parse_args()
     kw = (dict(batch_sizes=SMOKE_BATCH_SIZES, repeats=SMOKE_REPEATS)
           if args.smoke else {})
-    for name, us, derived in run(**kw):
+    rows = run(**kw)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        artifact = stage_cdf_artifact(B=max(SMOKE_BATCH_SIZES if args.smoke
+                                            else BATCH_SIZES))
+        artifact["rows"] = [{"name": n, "us_per_req": u, "derived": d}
+                            for n, u, d in rows]
+        with open(args.json, "w") as f:
+            json.dump(jsonable(artifact), f, indent=2)
+        print(f"wrote {args.json}")

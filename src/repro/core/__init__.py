@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.core.admission import AdmissionController, Ticket, jain_index
 from repro.core.api import (Constraints, Metadata, Preference, ProxyRequest,
                             ProxyResponse, ServiceType, StageRecord, Usage)
 from repro.core.cache import CachedType, SemanticCache
@@ -23,19 +24,21 @@ from repro.core.pipeline import (CacheStage, ContextStage, DeclineStage,
                                  default_pipelines)
 from repro.core.policy import (BudgetLedger, CompiledPolicy, PlanSpec,
                                PolicyCompiler)
-from repro.core.proxy import LLMBridge, ProxyConfig, ProxyStats
+from repro.core.proxy import LLMBridge, ProxyConfig, ProxyStats, jsonable
 from repro.core.embeddings import ModelEmbedder, WorkloadEmbedder
 from repro.core.vector_store import VectorStore
 from repro.core.workload import (Query, Workload, WorkloadConfig,
                                  capability_from_params)
 
 __all__ = [
+    "AdmissionController", "Ticket", "jain_index",
     "Constraints", "Metadata", "Preference", "ProxyRequest", "ProxyResponse",
     "ServiceType", "StageRecord", "Usage",
     "CachedType", "SemanticCache", "ContextManager", "LastK", "Message",
     "Similar", "SmartContext", "Summarize", "apply_filters", "Judge",
     "ModelAdapter", "ModelPool", "PoolModel", "Resolution",
     "pool_model_from_config", "LLMBridge", "ProxyConfig", "ProxyStats",
+    "jsonable",
     "ModelEmbedder", "WorkloadEmbedder", "VectorStore", "Query", "Workload",
     "WorkloadConfig", "capability_from_params", "build_bridge", "default_pool",
     "BudgetLedger", "CompiledPolicy", "PlanSpec", "PolicyCompiler",

@@ -1,0 +1,269 @@
+"""Cross-user fair admission: the batch-forming front-end of LLMBridge.
+
+Architecture note (paper §4).  The paper's WhatsApp deployment funnels every
+user through a per-user FIFO queue (AWS SQS): a user has at most one request
+in flight at a time, so a heavy user's backlog waits in *their* queue instead
+of monopolising the service.  The serving ``Scheduler`` already reproduces
+that discipline *inside* one model's continuous batch; this module lifts the
+same discipline to the proxy's front door, where it also decides *what gets
+batched together*:
+
+* ``AdmissionController.submit`` enqueues a request into its user's FIFO.
+  Intent requests compile their policy **at enqueue time**, which places the
+  ``BudgetLedger`` hold immediately — a queued burst degrades progressively
+  and can never overdraw, because each later enqueue sees the earlier holds.
+* ``form_batch`` assembles a cross-user batch under ``max_batch`` using the
+  serving ``Scheduler``'s admission discipline, lifted to the proxy: a
+  rotating round-robin scan over user queues (the scan start rotates past
+  the last admitted user), at most **one request per user per batch** (the
+  SQS one-in-flight rule), with deadline-carrying heads served
+  earliest-deadline-first against their arrival-adjusted deadline.  The
+  head selection is literally the Scheduler's, shared via
+  ``serving/discipline.select_rotating_head``.
+* Budget awareness: under contention (more waiting users than batch slots),
+  users whose ``BudgetLedger`` tier has reached ``yield_tier`` *yield* their
+  round-robin turn to funded users — but only ``max_yields`` consecutive
+  times, so a depleted user is deferred, never starved (bounded wait).
+* ``dispatch`` runs the formed batch through ``LLMBridge``'s batched hot
+  path (one embedder pass + one multi-query vector search + continuous-batch
+  decode), so single-request callers transparently get batched execution.
+
+``max_wait`` bounds batch-forming latency: ``ready()`` turns true once a
+full batch of distinct users is waiting *or* the oldest head has waited
+``max_wait`` seconds (``pump()`` is the poll-driven form of that rule;
+``drain()`` ignores it and empties the queues).  The controller accepts an
+injectable ``clock`` so fairness invariants are testable on virtual time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.api import ProxyRequest, ProxyResponse
+from repro.core.pipeline import RequestState
+from repro.serving.discipline import select_rotating_head
+
+
+def jain_index(values: Sequence[float]) -> float:
+    """Jain's fairness index over per-user allocations: 1.0 = perfectly
+    fair, 1/n = one user holds everything.  Empty/zero input counts as
+    fair (nothing has been allocated unevenly)."""
+    v = np.asarray(list(values), dtype=np.float64)
+    if v.size == 0 or not np.any(v):
+        return 1.0
+    return float(v.sum() ** 2 / (v.size * np.square(v).sum()))
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One queued request: the handle ``submit`` returns.
+
+    The compiled policy (and therefore the ledger hold) lives in ``state``
+    from enqueue; ``response``/``error`` are filled at dispatch."""
+    req: ProxyRequest
+    state: RequestState
+    enqueued_at: float
+    deadline_at: Optional[float]        # enqueued_at + Constraints.max_latency
+    seq: int
+    response: Optional[ProxyResponse] = None
+    error: Optional[BaseException] = None
+    queue_wait: float = 0.0             # filled at dispatch
+    batch_size: int = 0                 # size of the batch that carried it
+
+    @property
+    def done(self) -> bool:
+        return self.response is not None or self.error is not None
+
+    def result(self) -> ProxyResponse:
+        if self.error is not None:
+            raise self.error
+        if self.response is None:
+            raise RuntimeError("ticket not dispatched yet; call drain()/pump()")
+        return self.response
+
+
+class AdmissionController:
+    """Batch-forming front-end over ``LLMBridge`` (see module docstring)."""
+
+    #: bounded ring of realised queue waits for the p50/p99 stats
+    WINDOW = 8192
+
+    def __init__(self, bridge, max_batch: int = 8, max_wait: float = 0.02,
+                 yield_tier: int = 2, max_yields: int = 4,
+                 clock: Callable[[], float] = time.monotonic):
+        assert max_batch >= 1 and max_yields >= 1
+        self.bridge = bridge
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.yield_tier = yield_tier
+        self.max_yields = max_yields
+        self.clock = clock
+        self._queues: Dict[str, collections.deque] = {}
+        self._users_order: List[str] = []
+        self._rr_start = 0
+        self._yields: Dict[str, int] = {}
+        self._seq = 0
+        # stats
+        self._waits: collections.deque = collections.deque(maxlen=self.WINDOW)
+        self._batch_sizes: Dict[int, int] = {}
+        self._submitted = 0
+        self._completed: Dict[str, int] = {}
+        self._yield_total = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: ProxyRequest) -> Ticket:
+        """Enqueue into the user's FIFO.  The policy compiles *now*, so an
+        intent request's ledger hold is placed at enqueue time and
+        ``Constraints.max_latency`` becomes an absolute deadline against
+        arrival (``req.submitted_at`` feeds the arrival-adjusted decode
+        budget downstream)."""
+        now = self.clock()
+        if req.submitted_at is None:
+            # always the time.monotonic domain, NOT self.clock: downstream
+            # decode-budget math (pipeline._latency_budget) subtracts it
+            # from time.monotonic(), so a virtual controller clock must not
+            # leak into it.  Formation/stats use enqueued_at (self.clock).
+            req.submitted_at = time.monotonic()
+        state = RequestState(req=req, policy=self.bridge._policy_for(req))
+        deadline_at = None
+        if (req.constraints is not None
+                and req.constraints.max_latency is not None):
+            deadline_at = now + req.constraints.max_latency
+        ticket = Ticket(req=req, state=state, enqueued_at=now,
+                        deadline_at=deadline_at, seq=self._seq)
+        self._seq += 1
+        self._submitted += 1
+        if req.user not in self._queues:
+            self._queues[req.user] = collections.deque()
+            self._users_order.append(req.user)
+        self._queues[req.user].append(ticket)
+        return ticket
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def ready(self) -> bool:
+        """A batch is due when a full batch of distinct users is waiting or
+        the oldest queued head has waited ``max_wait``."""
+        heads = [q[0] for q in self._queues.values() if q]
+        if not heads:
+            return False
+        if len(heads) >= self.max_batch:
+            return True
+        now = self.clock()
+        return any(now - t.enqueued_at >= self.max_wait
+                   or (t.deadline_at is not None and t.deadline_at <= now)
+                   for t in heads)
+
+    # -- batch formation -----------------------------------------------------
+    def form_batch(self) -> List[Ticket]:
+        """One cross-user batch under the rotating, deadline-aware,
+        budget-aware round-robin (see module docstring).  Pops the chosen
+        tickets; at most one per user."""
+        users = self._users_order
+        excluded = self._yielding_users()
+        batch: List[Ticket] = []
+        taken: Set[str] = set()
+        while len(batch) < self.max_batch:
+            eligible = []                       # (rotation offset, user)
+            for i in range(len(users)):
+                u = users[(self._rr_start + i) % len(users)]
+                if u in taken or u in excluded or not self._queues.get(u):
+                    continue
+                eligible.append((i, u))
+            if not eligible:
+                break
+            # deadline heads EDF-first, else plain rotation — the same
+            # selection the serving Scheduler's slot refill uses
+            i, u = select_rotating_head(
+                eligible, lambda user: self._queues[user][0].deadline_at)
+            batch.append(self._queues[u].popleft())
+            taken.add(u)
+            self._yields[u] = 0     # admitted: reset the bounded-wait counter
+            self._rr_start = (self._rr_start + i + 1) % len(users)
+        return batch
+
+    def _yielding_users(self) -> Set[str]:
+        """Depleted-tier users who give up this round's turn.  Only under
+        contention (more waiting users than slots), only down to a still-full
+        batch, and only ``max_yields`` consecutive times per user."""
+        waiting = [u for u in self._users_order if self._queues.get(u)]
+        over = len(waiting) - self.max_batch
+        if over <= 0:
+            return set()
+        ledger = self.bridge.ledger
+        excluded: Set[str] = set()
+        # scan from the tail of the rotation (furthest from their turn)
+        order = [self._users_order[(self._rr_start + i) % len(self._users_order)]
+                 for i in range(len(self._users_order))]
+        for u in reversed(order):
+            if over <= 0:
+                break
+            if not self._queues.get(u) or u in excluded:
+                continue
+            if (ledger.tier(u) >= self.yield_tier
+                    and self._yields.get(u, 0) < self.max_yields):
+                excluded.add(u)
+                self._yields[u] = self._yields.get(u, 0) + 1
+                self._yield_total += 1
+                over -= 1
+        return excluded
+
+    # -- dispatch ------------------------------------------------------------
+    def dispatch(self) -> List[Ticket]:
+        """Form one batch and run it through the proxy's batched hot path."""
+        batch = self.form_batch()
+        if not batch:
+            return []
+        now = self.clock()
+        for t in batch:
+            t.queue_wait = max(0.0, now - t.enqueued_at)
+            t.batch_size = len(batch)
+        self._batch_sizes[len(batch)] = self._batch_sizes.get(len(batch), 0) + 1
+        try:
+            responses = self.bridge._run_states(
+                [t.state for t in batch], path="admission")
+        except BaseException as e:       # holds already released by the proxy
+            for t in batch:
+                t.error = e
+            raise
+        for t, resp in zip(batch, responses):
+            resp.metadata.queue_wait = t.queue_wait
+            resp.metadata.batch_size = t.batch_size
+            t.response = resp
+            self._waits.append(t.queue_wait)
+            self._completed[t.req.user] = self._completed.get(t.req.user, 0) + 1
+        return batch
+
+    def pump(self) -> List[Ticket]:
+        """Dispatch one batch iff one is due (``ready()``) — the poll-driven
+        serving loop's entry point."""
+        return self.dispatch() if self.ready() else []
+
+    def drain(self) -> List[Ticket]:
+        """Dispatch until every queue is empty (ignores ``max_wait``)."""
+        out: List[Ticket] = []
+        while self.pending():
+            out.extend(self.dispatch())
+        return out
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Queue-wait percentiles, batch-size histogram, fairness index of
+        completed work — ``proxy.stats()['admission']``."""
+        w = np.asarray(self._waits, dtype=np.float64)
+        return {
+            "submitted": self._submitted,
+            "pending": self.pending(),
+            "batches": sum(self._batch_sizes.values()),
+            "batch_size_hist": dict(sorted(self._batch_sizes.items())),
+            "queue_wait_p50_s": float(np.percentile(w, 50)) if w.size else 0.0,
+            "queue_wait_p99_s": float(np.percentile(w, 99)) if w.size else 0.0,
+            "completed_per_user": dict(sorted(self._completed.items())),
+            "jain_index": jain_index(list(self._completed.values())),
+            "budget_yields": self._yield_total,
+        }

@@ -86,6 +86,13 @@ class ProxyRequest:
     # constraint-compilation path and ``service_type`` is ignored ----------
     constraints: Optional[Constraints] = None
     preference: Optional[Preference] = None
+    # arrival timestamp, stamped by the admission front-end at enqueue —
+    # ALWAYS the time.monotonic() domain (even when the controller runs on
+    # a virtual clock).  ``Constraints.max_latency`` counts from HERE:
+    # queue wait consumes the latency budget, so the decode-slot deadline
+    # downstream is arrival-adjusted (a request that waited gets a tighter
+    # decode budget).
+    submitted_at: Optional[float] = None
 
     @property
     def is_intent(self) -> bool:
@@ -149,6 +156,12 @@ class Metadata:
     budget_tier: int = 0             # degradation level (0 = undegraded)
     budget_remaining: float = float("inf")
     stage_records: List[StageRecord] = dataclasses.field(default_factory=list)
+    # -- admission disclosure (batch-forming front-end) ---------------------
+    # BudgetLedger tier of the user at settle time (0 = fully funded;
+    # >= the controller's yield_tier means the user defers under contention)
+    ledger_tier: int = 0
+    queue_wait: float = 0.0          # seconds spent in the admission queue
+    batch_size: int = 0              # size of the formed batch (0 = direct)
 
 
 @dataclasses.dataclass

@@ -221,47 +221,54 @@ class ModelAdapter:
 
     # -- batched decode (the serving substrate) --------------------------------
     def generate_batch(self, items) -> List[Optional[str]]:
-        """items: ``[(model, prompt, query)]`` or ``[(model, prompt, query,
-        deadline)]``.  Engine-backed models decode ALL their prompts in one
-        continuous batch on the serving Scheduler; SIM-mode entries return
-        None (their text is templated in ``answer``).  A non-None deadline
-        (seconds of latency budget) is handed to the Scheduler, whose
-        admission serves tight-budget requests first.
+        """items: ``[(model, prompt, query)]`` with optional trailing
+        ``deadline`` and ``tier`` elements.  Engine-backed models decode ALL
+        their prompts in one continuous batch on the serving Scheduler;
+        SIM-mode entries return None (their text is templated in ``answer``).
+        A non-None deadline (seconds of latency budget) is handed to the
+        Scheduler, whose admission serves tight-budget requests first; a
+        non-zero ``tier`` (BudgetLedger depletion level) makes the request
+        yield decode slots to funded traffic under contention.
         """
         out: List[Optional[str]] = [None] * len(items)
         groups: Dict[str, Tuple[PoolModel, List[tuple]]] = {}
         for i, item in enumerate(items):
             model, prompt, query = item[0], item[1], item[2]
             deadline = item[3] if len(item) > 3 else None
+            tier = item[4] if len(item) > 4 else 0
             if model is None or model.engine is None or model.tokenizer is None:
                 continue
             prompt_tokens = (query.input_tokens if query is not None
                              else _count_tokens(prompt))
             out_tokens = _default_out_tokens(prompt_tokens, query)
             groups.setdefault(model.name, (model, []))[1].append(
-                (i, prompt, out_tokens, deadline))
+                (i, prompt, out_tokens, deadline, tier))
         for model, rows in groups.values():
             texts = self._real_generate_batch(
-                model, [p for _, p, _, _ in rows], [o for _, _, o, _ in rows],
-                deadlines=[d for _, _, _, d in rows])
-            for (i, _, _, _), text in zip(rows, texts):
-                out[i] = text
+                model, [r[1] for r in rows], [r[2] for r in rows],
+                deadlines=[r[3] for r in rows], tiers=[r[4] for r in rows])
+            for row, text in zip(rows, texts):
+                out[row[0]] = text
         return out
 
     def _real_generate_batch(self, model: PoolModel, prompts: List[str],
                              out_tokens: List[int],
-                             deadlines: Optional[List[Optional[float]]] = None
+                             deadlines: Optional[List[Optional[float]]] = None,
+                             tiers: Optional[List[int]] = None
                              ) -> List[str]:
         """Continuous-batch decode: every prompt gets a Scheduler slot (one
         synthetic user per request so admission is concurrent, not per-user
         FIFO-serialized) and the whole batch shares the decode steps.  A
         request with a latency budget is admitted earliest-deadline-first and
-        has its decode length trimmed to what the budget affords."""
+        has its decode length trimmed to what the budget affords; a depleted
+        budget tier weighs against the request in the slot-refill order."""
         import jax.numpy as jnp
         from repro.serving.scheduler import Request, Scheduler
         deadlines = deadlines or [None] * len(prompts)
+        tiers = tiers or [0] * len(prompts)
         sched = Scheduler(model.engine, n_slots=min(len(prompts), 8))
-        for i, (prompt, ot, dl) in enumerate(zip(prompts, out_tokens, deadlines)):
+        for i, (prompt, ot, dl, tier) in enumerate(
+                zip(prompts, out_tokens, deadlines, tiers)):
             if dl is not None:
                 affordable = int((dl - model.base_latency) /
                                  model.per_token_latency)
@@ -269,7 +276,7 @@ class ModelAdapter:
             ids = model.tokenizer.encode(prompt)[-64:]
             sched.submit(Request(rid=i, user=f"__batch__{i}",
                                  prompt=jnp.asarray(ids, jnp.int32),
-                                 max_new=min(ot, 32), deadline=dl))
+                                 max_new=min(ot, 32), deadline=dl, tier=tier))
         done = sched.run_to_completion()
         texts = {r.rid: model.tokenizer.decode(r.generated) for r in done}
         return [texts[i] for i in range(len(prompts))]

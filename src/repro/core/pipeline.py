@@ -61,6 +61,8 @@ class RequestState:
     # response usage (v1-compatible disclosure) but metered to the ledger
     # and visible in the cache StageRecord's cost_delta
     miss_usage: Usage = dataclasses.field(default_factory=Usage)
+    # per-stage disclosure scratch (e.g. the prefetch budget gate's verdict)
+    notes: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def resolved(self) -> bool:
@@ -269,8 +271,8 @@ class ModelStage(Stage):
             self._run_batch_verification(proxy, todo)
             return
         texts = proxy.adapter.generate_batch(
-            [(s.model, s.req.prompt, s.req.query, _latency_budget(s.req))
-             for s in todo])
+            [(s.model, s.req.prompt, s.req.query, _latency_budget(s.req),
+              _ledger_tier(proxy, s.req)) for s in todo])
         for s, t in zip(todo, texts):
             if t is not None:
                 s.text_override = t
@@ -293,8 +295,8 @@ class ModelStage(Stage):
                 self.run(proxy, s)
             return
         m1_texts = proxy.adapter.generate_batch(
-            [(m1, s.req.prompt, s.req.query, _latency_budget(s.req))
-             for s, (m1, _, _) in zip(todo, triples)])
+            [(m1, s.req.prompt, s.req.query, _latency_budget(s.req),
+              _ledger_tier(proxy, s.req)) for s, (m1, _, _) in zip(todo, triples)])
         results: List = [None] * len(todo)
         pendings: List = [None] * len(todo)
         for i, (s, (m1, _, verifier), t1) in enumerate(
@@ -310,7 +312,8 @@ class ModelStage(Stage):
         need = [i for i in range(len(todo)) if results[i] is None]
         m2_texts = proxy.adapter.generate_batch(
             [(triples[i][1], todo[i].req.prompt, todo[i].req.query,
-              _latency_budget(todo[i].req)) for i in need])
+              _latency_budget(todo[i].req), _ledger_tier(proxy, todo[i].req))
+             for i in need])
         for i, t2 in zip(need, m2_texts):
             s = todo[i]
             results[i] = proxy.adapter.verification_phase2(
@@ -339,6 +342,14 @@ class PrefetchStage(Stage):
     queue (tests / the escalation ladder's serve-prefetched stage call it).
     The worker draws from ``adapter.background_rng`` so off-thread work
     never interleaves draws with the foreground request path.
+
+    Budget governance: the stage places a ledger *hold* for the estimated
+    prefetch spend BEFORE the background decode is queued — not charging
+    after the fact — so a nearly-empty ledger cannot be overdrawn between
+    the foreground settle and the background charge.  A compiled intent
+    plan's own reserve (which already includes the prefetch leg) counts as
+    slack, so one decode is never double-booked; when the hold does not fit,
+    the prefetch is skipped and disclosed as ``skip(budget)``.
     """
 
     name = "prefetch"
@@ -349,33 +360,50 @@ class PrefetchStage(Stage):
 
     def run(self, proxy, state: RequestState) -> None:
         req, quick, msgs = state.req, state.response, list(state.messages)
+        best = proxy.pool.best()
+        hold = proxy.adapter.estimate_answer(
+            best, req.prompt,
+            context_tokens=ContextManager.token_count(msgs),
+            query=req.query).cost
+        slack = state.policy.reserved if state.policy is not None else 0.0
+        if not proxy.ledger.try_hold(req.user, hold, slack=slack):
+            state.notes["prefetch"] = "skip(budget)"
+            return
+        state.notes["prefetch"] = "queued" if self.background else "inline"
         if self.background:
             proxy._prefetch.submit(
-                lambda: self._prefetch(proxy, req, quick, msgs))
+                lambda: self._prefetch(proxy, req, quick, msgs, hold=hold))
         else:
-            self._prefetch(proxy, req, quick, msgs)
+            self._prefetch(proxy, req, quick, msgs, hold=hold)
 
     def _prefetch(self, proxy, req: ProxyRequest, quick: ProxyResponse,
-                  msgs: List[Message]) -> None:
-        best = proxy.pool.best()
-        ctx_tokens = ContextManager.token_count(msgs)
-        better = proxy.adapter.answer(
-            best, req.prompt, context_tokens=ctx_tokens, query=req.query,
-            rng=proxy.adapter.background_rng if self.background else None)
-        proxy.cache.put_exact(proxy._better_key(req), better.text)
-        proxy._better_quality[proxy._better_key(req)] = better.true_quality
-        # cost is accounted; latency is off the critical path
-        with proxy._ledger_lock:
-            quick.metadata.usage = quick.metadata.usage.add(
-                Usage(input_tokens=better.usage.input_tokens,
-                      output_tokens=better.usage.output_tokens,
-                      cost=better.usage.cost, latency=0.0))
-            quick.metadata.models_consulted = (
-                quick.metadata.models_consulted + [f"prefetch:{best.name}"])
-        proxy._charge_response(quick)
+                  msgs: List[Message], hold: float = 0.0) -> None:
+        try:
+            best = proxy.pool.best()
+            ctx_tokens = ContextManager.token_count(msgs)
+            better = proxy.adapter.answer(
+                best, req.prompt, context_tokens=ctx_tokens, query=req.query,
+                rng=proxy.adapter.background_rng if self.background else None)
+            proxy.cache.put_exact(proxy._better_key(req), better.text)
+            proxy._better_quality[proxy._better_key(req)] = better.true_quality
+            # cost is accounted; latency is off the critical path
+            with proxy._ledger_lock:
+                quick.metadata.usage = quick.metadata.usage.add(
+                    Usage(input_tokens=better.usage.input_tokens,
+                          output_tokens=better.usage.output_tokens,
+                          cost=better.usage.cost, latency=0.0))
+                quick.metadata.models_consulted = (
+                    quick.metadata.models_consulted + [f"prefetch:{best.name}"])
+            proxy._charge_response(quick)
+        finally:
+            # the realised charge replaces the hold (charge first, then
+            # release: remaining dips pessimistically, never optimistically)
+            if hold:
+                proxy.ledger.release(req.user, hold)
 
     def decision(self, state: RequestState) -> str:
-        return "queued" if self.background else "inline"
+        return state.notes.get("prefetch",
+                               "queued" if self.background else "inline")
 
 
 class ServePrefetchedStage(Stage):
@@ -429,7 +457,20 @@ class DeclineStage(Stage):
 
 
 def _latency_budget(req: ProxyRequest) -> Optional[float]:
-    return req.constraints.max_latency if req.constraints is not None else None
+    """Remaining decode latency budget: ``Constraints.max_latency`` minus
+    time already spent waiting since admission enqueue (arrival-adjusted —
+    the deadline is absolute, queue wait consumes it).  Floored at 1ms so a
+    blown deadline still decodes a minimal answer instead of going negative."""
+    if req.constraints is None or req.constraints.max_latency is None:
+        return None
+    budget = req.constraints.max_latency
+    if req.submitted_at is not None:
+        budget -= max(0.0, time.monotonic() - req.submitted_at)
+    return max(budget, 1e-3)
+
+
+def _ledger_tier(proxy, req: ProxyRequest) -> int:
+    return proxy.ledger.tier(req.user)
 
 
 class PromptPipeline:

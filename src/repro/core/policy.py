@@ -154,6 +154,21 @@ class BudgetLedger:
         with self._lock:
             self._held[user] = self._held.get(user, 0.0) + amount
 
+    def try_hold(self, user: str, amount: float, slack: float = 0.0) -> bool:
+        """Place a hold only if the remaining budget covers it; atomic with
+        the remaining-balance check, so concurrent holders cannot jointly
+        overdraw.  ``slack`` credits budget already held for this same work
+        (e.g. a compiled plan's reserve that includes the prefetch leg), so
+        the gate does not double-book one decode."""
+        with self._lock:
+            remaining = (self._budgets.get(user, self.default_budget)
+                         - self._spent.get(user, 0.0)
+                         - self._held.get(user, 0.0))
+            if remaining + slack < amount - 1e-9:
+                return False
+            self._held[user] = self._held.get(user, 0.0) + amount
+            return True
+
     def release(self, user: str, amount: float) -> None:
         with self._lock:
             self._held[user] = self._held.get(user, 0.0) - amount

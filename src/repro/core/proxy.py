@@ -25,6 +25,13 @@ Cost governance: a per-user ``BudgetLedger`` meters every response; compiled
 intent plans place a pessimistic hold first, so a constrained run can never
 overdraw, and plans degrade monotonically as the budget depletes.
 
+Fair admission: ``submit()``/``drain()`` front the proxy with the
+``AdmissionController`` (``core/admission.py``) — per-user FIFO queues
+(the paper's SQS discipline, §4), cross-user batch formation by rotating,
+deadline- and budget-aware round-robin, holds placed at enqueue — so
+single-request callers transparently share the batched hot path and heavy
+users cannot monopolize it.
+
 Transparency: responses carry the compiled policy name, budget tier, stage
 trajectory and per-stage ``StageRecord``s; ``stats()`` aggregates per-stage
 wall-time and hit/decision rates across both execution paths (the paper's
@@ -110,6 +117,21 @@ class _PrefetchWorker:
             raise self._errors.pop(0)
 
 
+def jsonable(obj):
+    """Recursively make a stats/telemetry dict JSON-serializable: NaN and
+    +/-inf (e.g. the ledger's unlimited default budget) become null, tuples
+    become lists, keys become strings.  The benchmark JSON artifact
+    exporters run ``proxy.stats()`` output through this."""
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, float) and (obj != obj
+                                   or obj in (float("inf"), float("-inf"))):
+        return None
+    return obj
+
+
 class ProxyStats:
     """Per-stage wall-time + decision aggregation for ``proxy.stats()``.
 
@@ -191,6 +213,7 @@ class LLMBridge:
         self._prefetch = _PrefetchWorker()
         self._ledger_lock = threading.Lock()
         self._stats = ProxyStats()
+        self._admission = None          # lazy AdmissionController (submit())
 
     # -- the SmartContext decider (planted channel or real small model) -------
     def _context_decider(self):
@@ -238,22 +261,34 @@ class LLMBridge:
         other's context writes.
         """
         states: List[RequestState] = []
-        groups: Dict[int, Tuple[PromptPipeline, List[RequestState]]] = {}
         try:
             for r in reqs:
-                pol = self._policy_for(r)
-                st = RequestState(req=r, policy=pol)
-                states.append(st)
-                groups.setdefault(id(pol.pipeline),
-                                  (pol.pipeline, []))[1].append(st)
-            for pipe, group in groups.values():
-                pipe.run_batch(self, group)
+                states.append(RequestState(req=r, policy=self._policy_for(r)))
         except BaseException:
-            # a failed compile or batch must not leak earlier requests' holds
+            # a failed compile must not leak earlier requests' holds
             for s in states:
                 self._release_hold(s)
             raise
-        return [self._finalize(s, path="request_batch") for s in states]
+        return self._run_states(states)
+
+    def _run_states(self, states: Sequence[RequestState],
+                    path: str = "request_batch") -> List[ProxyResponse]:
+        """Batched execution over pre-compiled states: the shared engine
+        under ``request_batch`` (compile here) and the admission front-end
+        (compiles — and places ledger holds — at enqueue time)."""
+        groups: Dict[int, Tuple[PromptPipeline, List[RequestState]]] = {}
+        try:
+            for st in states:
+                pipe = st.policy.pipeline
+                groups.setdefault(id(pipe), (pipe, []))[1].append(st)
+            for pipe, group in groups.values():
+                pipe.run_batch(self, group)
+        except BaseException:
+            # a failed batch must not leak any member's hold
+            for s in states:
+                self._release_hold(s)
+            raise
+        return [self._finalize(s, path=path) for s in states]
 
     def _finalize(self, state: RequestState, path: str = "request",
                   query_tokens: bool = True) -> ProxyResponse:
@@ -271,6 +306,7 @@ class LLMBridge:
             resp.metadata.budget_tier = policy.tier
         self._settle(state, resp)
         resp.metadata.budget_remaining = self.ledger.remaining(req.user)
+        resp.metadata.ledger_tier = self.ledger.tier(req.user)
         self._stats.record(path, state)
         # declined responses are policy boilerplate, not conversation — they
         # must not pollute future context windows
@@ -305,6 +341,35 @@ class LLMBridge:
                 self.ledger.charge(resp.request.user, delta)
                 resp._ledger_charged += delta
 
+    # -- fair admission (batch-forming front-end) ------------------------------
+    @property
+    def admission(self):
+        """The attached ``AdmissionController`` (created on first use with
+        defaults; ``attach_admission`` installs a tuned one)."""
+        if self._admission is None:
+            from repro.core.admission import AdmissionController
+            self._admission = AdmissionController(self)
+        return self._admission
+
+    def attach_admission(self, controller) -> None:
+        """Install a configured ``AdmissionController`` (max_batch/max_wait/
+        yield policy).  Refuses to drop queued work."""
+        if self._admission is not None and self._admission.pending():
+            raise RuntimeError("admission controller has queued requests")
+        self._admission = controller
+
+    def submit(self, req: ProxyRequest):
+        """Enqueue ``req`` into its user's FIFO on the admission front-end
+        and return a ``Ticket``.  The request's policy compiles now, so
+        intent holds land on the ledger at enqueue time; the batched hot
+        path executes it when ``drain()``/``pump()`` forms its batch."""
+        return self.admission.submit(req)
+
+    def drain(self) -> List[ProxyResponse]:
+        """Form and dispatch batches until the admission queues are empty;
+        responses in dispatch order."""
+        return [t.result() for t in self.admission.drain()]
+
     # -- telemetry -------------------------------------------------------------
     def flush_prefetch(self) -> None:
         """Join the background prefetch queue (deterministic-test hook)."""
@@ -314,7 +379,7 @@ class LLMBridge:
         """Proxy-wide transparency aggregate: per-stage wall-time +
         hit/decision rates for both execution paths, cache counters, and
         the budget ledger (the paper's Fig 6-style telemetry, live)."""
-        return {
+        out = {
             "paths": self._stats.snapshot(),
             "cache": {
                 "hits": self.cache.n_hits,
@@ -325,6 +390,9 @@ class LLMBridge:
             },
             "ledger": self.ledger.summary(),
         }
+        if self._admission is not None:
+            out["admission"] = self._admission.stats()
+        return out
 
     def stage_cdf(self, path: str, stage: str
                   ) -> Tuple[np.ndarray, np.ndarray]:

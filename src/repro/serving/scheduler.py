@@ -24,7 +24,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.serving import kv_cache
+from repro.serving import discipline, kv_cache
 from repro.serving.engine import Engine
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -41,6 +41,10 @@ class Request:
     # the arrival-adjusted deadline ``submitted_at + deadline`` (LLMBridge
     # threads ``Constraints.max_latency`` through ``request_batch`` to here).
     deadline: Optional[float] = None
+    # BudgetLedger depletion tier (0 = fully funded).  Slot refill weighs it
+    # alongside EDF: depleted traffic yields decode slots under contention,
+    # until the starvation guard ages the request back to full priority.
+    tier: int = 0
     # filled during serving
     submitted_at: float = 0.0
     generated: List[int] = dataclasses.field(default_factory=list)
@@ -52,10 +56,16 @@ class Request:
 class Scheduler:
     def __init__(self, engine: Engine, n_slots: int = 8,
                  sampler: SamplerConfig = SamplerConfig(),
-                 max_len: Optional[int] = None, seed: int = 0):
+                 max_len: Optional[int] = None, seed: int = 0,
+                 tier_penalty: float = 0.25, starvation_s: float = 2.0):
         self.engine = engine
         self.n_slots = n_slots
         self.sampler = sampler
+        # budget-aware refill: each depletion tier costs ``tier_penalty``
+        # seconds of effective deadline slack; a head that has waited
+        # ``starvation_s`` regains full priority (bounded wait, no starvation)
+        self.tier_penalty = tier_penalty
+        self.starvation_s = starvation_s
         self.max_len = max_len or engine.max_len
         self.queues: Dict[str, collections.deque] = collections.defaultdict(collections.deque)
         self.user_inflight: Dict[str, bool] = collections.defaultdict(bool)
@@ -86,7 +96,12 @@ class Scheduler:
         ``_users_order`` cannot starve later ones when slots are scarce.
         Among eligible users, heads carrying a latency ``deadline`` are
         admitted earliest-deadline-first (they paid for a latency budget);
-        deadline-free traffic keeps the plain rotation."""
+        deadline-free traffic keeps the plain rotation.  Both orders weigh
+        the head's BudgetLedger ``tier``: each depletion level adds
+        ``tier_penalty`` seconds of effective deadline slack (deadlined) or
+        demotes the head behind funded users (deadline-free) — but a head
+        that has waited ``starvation_s`` ages back to tier 0, so depleted
+        traffic is deferred, never starved."""
         users = self._users_order
         eligible = []          # (rotation offset, user)
         for i in range(len(users)):
@@ -95,16 +110,23 @@ class Scheduler:
                 eligible.append((i, user))
         if not eligible:
             return None
-        deadlined = [(i, u) for i, u in eligible
-                     if self.queues[u][0].deadline is not None]
-        if deadlined:
-            # arrival-adjusted EDF: a request's urgency grows as it waits
-            def absolute_deadline(t):
-                head = self.queues[t[1]][0]
-                return head.submitted_at + head.deadline
-            i, user = min(deadlined, key=absolute_deadline)
-        else:
-            i, user = eligible[0]
+        now = time.monotonic()
+
+        def deadline_of(user):
+            head = self.queues[user][0]
+            if head.deadline is None:
+                return None
+            # arrival-adjusted EDF: urgency grows as a request waits
+            return head.submitted_at + head.deadline
+
+        def tier_of(user):
+            head = self.queues[user][0]
+            if now - head.submitted_at >= self.starvation_s:
+                return 0       # aged past the guard: full priority again
+            return head.tier
+
+        i, user = discipline.select_rotating_head(
+            eligible, deadline_of, tier_of, self.tier_penalty)
         self.user_inflight[user] = True
         self._rr_start = (self._rr_start + i + 1) % len(users)
         return self.queues[user].popleft()

@@ -1,0 +1,309 @@
+"""Fair admission front-end: per-user FIFO batch formation, budget-aware
+yielding with bounded wait, holds-at-enqueue, deadline EDF, the proxy
+submit()/drain() API, and the prefetch ledger gate."""
+import dataclasses
+
+import pytest
+
+from repro.core import (AdmissionController, Constraints, Preference,
+                        ProxyRequest, ServiceType, Workload, WorkloadConfig,
+                        build_bridge, jain_index)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=6, turns_per_conversation=10,
+                                   seed=9))
+
+
+def _req(workload, i, user, service=ServiceType.COST, **kw):
+    q = workload.queries[i % len(workload.queries)]
+    return ProxyRequest(prompt=q.text, user=user, conversation=user,
+                        service_type=service, query=q, update_context=False,
+                        **kw)
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- batch formation ----------------------------------------------------------
+def test_batch_never_mixes_same_user_and_keeps_fifo(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=4, max_wait=0.0)
+    tickets = []
+    for i in range(17):
+        tickets.append(ctrl.submit(_req(workload, i, f"u{i % 3}")))
+    seen_per_user = {}
+    while ctrl.pending():
+        batch = ctrl.form_batch()
+        users = [t.req.user for t in batch]
+        assert len(users) == len(set(users)), "two requests from one user"
+        assert len(batch) <= 4
+        for t in batch:
+            # per-user FIFO: seq strictly increasing within a user
+            prev = seen_per_user.get(t.req.user, -1)
+            assert t.seq > prev
+            seen_per_user[t.req.user] = t.seq
+
+
+def test_round_robin_serves_light_user_every_batch(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0)
+    for i in range(8):
+        ctrl.submit(_req(workload, i, "heavy"))
+    for i in range(4):
+        ctrl.submit(_req(workload, 100 + i, "light"))
+    for _ in range(4):
+        batch = ctrl.form_batch()
+        assert {t.req.user for t in batch} == {"heavy", "light"}
+
+
+def test_jain_index_helper():
+    assert jain_index([]) == 1.0
+    assert jain_index([3, 3, 3]) == pytest.approx(1.0)
+    assert jain_index([1, 0, 0]) == pytest.approx(1 / 3)
+
+
+def test_admission_fairer_than_naive_fifo_under_skew(workload):
+    """4:1 skewed two-user open loop, capacity 2/round: the front-end's
+    Jain index must beat (or match) naive arrival-order batching."""
+    def arrivals(n_rounds):
+        i, out = 0, []
+        for _ in range(n_rounds):
+            batch = [("heavy", i), ("heavy", i + 1), ("heavy", i + 2),
+                     ("heavy", i + 3), ("light", i + 4)]
+            i += 5
+            out.append(batch)
+        return out
+
+    rounds = 10
+    # naive: global FIFO, take 2 per round
+    bridge = build_bridge(workload=workload, seed=0)
+    import collections
+    backlog = collections.deque()
+    naive = collections.Counter()
+    for arr in arrivals(rounds):
+        backlog.extend(arr)
+        take = [backlog.popleft() for _ in range(min(2, len(backlog)))]
+        for r in bridge.request_batch([_req(workload, i, u) for u, i in take]):
+            naive[r.request.user] += 1
+    # admission front-end, same trace and capacity
+    bridge = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0)
+    adm = collections.Counter()
+    for arr in arrivals(rounds):
+        for u, i in arr:
+            ctrl.submit(_req(workload, i, u))
+        for t in ctrl.dispatch():
+            adm[t.req.user] += 1
+    assert jain_index(list(adm.values())) >= \
+        jain_index(list(naive.values())) - 1e-9
+    assert adm["light"] > naive["light"]     # the light user got more service
+
+
+# -- budget-aware yielding ----------------------------------------------------
+def _deplete(bridge, user, budget=1.0, frac=0.95):
+    bridge.ledger.set_budget(user, budget)
+    bridge.ledger.charge(user, budget * frac)   # fraction left < 0.1 -> tier 3
+
+
+def test_depleted_user_yields_under_contention(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    _deplete(bridge, "poor")
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0,
+                               yield_tier=2, max_yields=3)
+    users = ["poor", "a", "b", "c"]           # 4 waiting > 2 slots
+    for i, u in enumerate(users):
+        for j in range(4):
+            ctrl.submit(_req(workload, i * 4 + j, u))
+    first = ctrl.form_batch()
+    assert "poor" not in {t.req.user for t in first}
+    assert ctrl.stats()["budget_yields"] == 1
+
+
+def test_depleted_user_bounded_wait_never_starved(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    _deplete(bridge, "poor")
+    max_yields = 3
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0,
+                               yield_tier=2, max_yields=max_yields)
+    users = ["poor", "a", "b", "c"]
+    for i, u in enumerate(users):
+        for j in range(8):
+            ctrl.submit(_req(workload, i * 8 + j, u))
+    batches, poor_at = [], None
+    while ctrl.pending():
+        batch = ctrl.form_batch()
+        batches.append(batch)
+        if poor_at is None and "poor" in {t.req.user for t in batch}:
+            poor_at = len(batches) - 1
+    # deferred (not in the first batch) but admitted within max_yields+1
+    assert poor_at is not None, "depleted user starved"
+    assert 1 <= poor_at <= max_yields
+    # and everything the depleted user queued eventually forms
+    poor_total = sum(1 for b in batches for t in b if t.req.user == "poor")
+    assert poor_total == 8
+
+
+def test_no_yield_without_contention(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    _deplete(bridge, "poor")
+    ctrl = AdmissionController(bridge, max_batch=4, max_wait=0.0)
+    for i, u in enumerate(["poor", "a"]):     # 2 waiting <= 4 slots
+        ctrl.submit(_req(workload, i, u))
+    batch = ctrl.form_batch()
+    assert "poor" in {t.req.user for t in batch}
+    assert ctrl.stats()["budget_yields"] == 0
+
+
+# -- deadlines ----------------------------------------------------------------
+def test_deadline_head_admitted_edf(workload):
+    clock = VirtualClock()
+    bridge = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=1, max_wait=10.0, clock=clock)
+    ctrl.submit(_req(workload, 0, "a"))
+    ctrl.submit(_req(workload, 1, "b",
+                     constraints=Constraints(max_latency=5.0)))
+    ctrl.submit(_req(workload, 2, "c",
+                     constraints=Constraints(max_latency=1.0)))
+    order = [ctrl.form_batch()[0].req.user for _ in range(3)]
+    # tightest deadline first, then the looser one, then best-effort
+    assert order == ["c", "b", "a"]
+
+
+def test_max_wait_makes_partial_batch_ready(workload):
+    clock = VirtualClock()
+    bridge = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(bridge, max_batch=8, max_wait=0.5, clock=clock)
+    ctrl.submit(_req(workload, 0, "a"))
+    assert not ctrl.ready()          # under max_batch, nobody waited max_wait
+    clock.advance(0.6)
+    assert ctrl.ready()
+    assert ctrl.pump()               # dispatches the partial batch
+    assert ctrl.pending() == 0
+
+
+# -- budget holds at enqueue --------------------------------------------------
+def test_intent_holds_land_at_enqueue(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.ledger.set_budget("u", 5.0)
+    ctrl = AdmissionController(bridge, max_batch=8, max_wait=0.0)
+    before = bridge.ledger.remaining("u")
+    ctrl.submit(_req(workload, 0, "u", preference=Preference.QUALITY_FIRST,
+                     constraints=Constraints(allow_cache=False)))
+    held = before - bridge.ledger.remaining("u")
+    assert held > 0, "no hold placed at enqueue"
+    ctrl.drain()
+    # settled: hold released, realised cost charged
+    assert bridge.ledger.remaining("u") == pytest.approx(
+        5.0 - bridge.ledger.spent("u"))
+
+
+def test_queued_burst_cannot_overdraw(workload):
+    """A burst enqueued before ANY dispatch: each enqueue sees earlier
+    holds, so compiled plans degrade and the ledger is never overdrawn."""
+    bridge = build_bridge(workload=workload, seed=0)
+    budget = 0.2
+    bridge.ledger.set_budget("u", budget)
+    ctrl = AdmissionController(bridge, max_batch=1, max_wait=0.0)
+    tickets = [ctrl.submit(_req(
+        workload, i, "u", preference=Preference.QUALITY_FIRST,
+        constraints=Constraints(allow_cache=False))) for i in range(12)]
+    assert bridge.ledger.remaining("u") >= -1e-9   # holds already bounded
+    ctrl.drain()
+    assert bridge.ledger.spent("u") <= budget + 1e-9
+    assert bridge.ledger.remaining("u") >= -1e-9
+    # the tail of the burst degraded (eventually to decline), never errored
+    assert all(t.response is not None for t in tickets)
+
+
+# -- the proxy-level API ------------------------------------------------------
+def test_submit_drain_matches_request_batch(workload):
+    reqs = [dataclasses.replace(_req(workload, i, f"u{i}")) for i in range(4)]
+    b1 = build_bridge(workload=workload, seed=0)
+    direct = b1.request_batch([dataclasses.replace(r) for r in reqs])
+    b2 = build_bridge(workload=workload, seed=0)
+    for r in reqs:
+        b2.submit(r)
+    queued = b2.drain()
+    assert [r.text for r in queued] == [r.text for r in direct]
+    assert [r.metadata.usage.cost for r in queued] == \
+        [r.metadata.usage.cost for r in direct]
+
+
+def test_admission_disclosure_and_stats(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    for i in range(6):
+        bridge.submit(_req(workload, i, f"u{i % 3}"))
+    out = bridge.drain()
+    assert all(r.metadata.batch_size == 3 for r in out)
+    assert all(r.metadata.queue_wait >= 0.0 for r in out)
+    stats = bridge.stats()["admission"]
+    assert stats["submitted"] == 6 and stats["pending"] == 0
+    assert stats["batch_size_hist"] == {3: 2}
+    assert stats["completed_per_user"] == {"u0": 2, "u1": 2, "u2": 2}
+    assert stats["jain_index"] == pytest.approx(1.0)
+    assert stats["queue_wait_p99_s"] >= stats["queue_wait_p50_s"] >= 0.0
+
+
+def test_attach_admission_refuses_to_drop_queued_work(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.submit(_req(workload, 0, "u"))
+    with pytest.raises(RuntimeError):
+        bridge.attach_admission(AdmissionController(bridge))
+    bridge.drain()
+    bridge.attach_admission(AdmissionController(bridge, max_batch=2))
+    assert bridge.admission.max_batch == 2
+
+
+# -- prefetch ledger gate -----------------------------------------------------
+def test_prefetch_gate_skips_when_budget_cannot_cover(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    q = workload.queries[0]
+    quick_cost = bridge.adapter.estimate_answer(
+        bridge.pool.cheapest(), q.text, context_tokens=0, query=q).cost
+    best_cost = bridge.adapter.estimate_answer(
+        bridge.pool.best(), q.text, context_tokens=0, query=q).cost
+    # enough for the quick answer, NOT for the background prefetch
+    bridge.ledger.set_budget("u", quick_cost * 3 + best_cost * 0.5)
+    r = bridge.request(ProxyRequest(
+        prompt=q.text, user="u", conversation="c", query=q,
+        service_type=ServiceType.FAST_THEN_BETTER, update_context=False))
+    bridge.flush_prefetch()
+    pf = [rec for rec in r.metadata.stage_records if rec.name == "prefetch"]
+    assert pf and pf[0].decision == "skip(budget)"
+    assert not any(m.startswith("prefetch:")
+                   for m in r.metadata.models_consulted)
+    assert bridge.ledger.remaining("u") >= -1e-9, "ledger overdrawn"
+
+
+def test_prefetch_gate_holds_then_settles(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.ledger.set_budget("u", 50.0)
+    q = workload.queries[1]
+    r = bridge.request(ProxyRequest(
+        prompt=q.text, user="u", conversation="c", query=q,
+        service_type=ServiceType.FAST_THEN_BETTER, update_context=False))
+    bridge.flush_prefetch()
+    assert any(m.startswith("prefetch:") for m in r.metadata.models_consulted)
+    # hold fully released after settle: remaining + spent == budget
+    assert bridge.ledger.remaining("u") + bridge.ledger.spent("u") == \
+        pytest.approx(50.0)
+    assert bridge.ledger.spent("u") == pytest.approx(r.metadata.usage.cost)
+
+
+def test_ledger_tier_disclosed(workload):
+    bridge = build_bridge(workload=workload, seed=0)
+    _deplete(bridge, "poor")
+    r = bridge.request(_req(workload, 0, "poor"))
+    assert r.metadata.ledger_tier == 3
+    r2 = bridge.request(_req(workload, 1, "rich"))
+    assert r2.metadata.ledger_tier == 0

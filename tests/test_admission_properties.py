@@ -1,0 +1,129 @@
+"""Property tests for the admission front-end's fairness invariants.
+
+Hypothesis-based (skipped at collection by the conftest guard when
+hypothesis is absent):
+
+* a formed batch never contains two requests from the same user, and
+  per-user FIFO order survives batch formation, for arbitrary arrival
+  sequences and batch sizes;
+* on the synthetic skewed two-user workload, Jain's fairness index under
+  the AdmissionController is never worse than naive arrival-order batching;
+* a depleted-tier user under contention is deferred but never starved:
+  admitted within ``max_yields`` deferrals plus one round-robin sweep, and
+  all their queued work eventually forms.
+"""
+import collections
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdmissionController, ProxyRequest, ServiceType,
+                        Workload, WorkloadConfig, build_bridge, jain_index)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=8,
+                                   seed=13))
+
+
+@pytest.fixture(scope="module")
+def bridge(workload):
+    # batch formation never runs a pipeline, so one bridge serves all draws
+    return build_bridge(workload=workload, seed=0)
+
+
+def _req(workload, i, user):
+    q = workload.queries[i % len(workload.queries)]
+    return ProxyRequest(prompt=q.text, user=user, conversation=user,
+                        service_type=ServiceType.COST, query=q,
+                        update_context=False)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrivals=st.lists(st.integers(0, 4), min_size=1, max_size=40),
+       max_batch=st.integers(1, 6))
+def test_batches_never_mix_users_and_keep_fifo(workload, bridge, arrivals,
+                                               max_batch):
+    ctrl = AdmissionController(bridge, max_batch=max_batch, max_wait=0.0)
+    for i, uid in enumerate(arrivals):
+        ctrl.submit(_req(workload, i, f"u{uid}"))
+    formed, last_seq = 0, {}
+    while ctrl.pending():
+        batch = ctrl.form_batch()
+        assert batch, "pending work but empty batch (livelock)"
+        assert len(batch) <= max_batch
+        users = [t.req.user for t in batch]
+        assert len(users) == len(set(users)), "two requests from one user"
+        for t in batch:
+            assert t.seq > last_seq.get(t.req.user, -1), "per-user FIFO broken"
+            last_seq[t.req.user] = t.seq
+        formed += len(batch)
+    assert formed == len(arrivals), "requests lost in formation"
+
+
+@settings(max_examples=10, deadline=None)
+@given(heavy_rate=st.integers(2, 6), rounds=st.integers(4, 8))
+def test_jain_at_least_naive_fifo_on_skewed_workload(workload, heavy_rate,
+                                                     rounds):
+    capacity = 2
+
+    def arrivals():
+        i, out = 0, []
+        for _ in range(rounds):
+            batch = [("heavy", i + k) for k in range(heavy_rate)]
+            batch.append(("light", i + heavy_rate))
+            i += heavy_rate + 1
+            out.append(batch)
+        return out
+
+    b1 = build_bridge(workload=workload, seed=0)
+    backlog, naive = collections.deque(), collections.Counter()
+    for arr in arrivals():
+        backlog.extend(arr)
+        take = [backlog.popleft() for _ in range(min(capacity, len(backlog)))]
+        for r in b1.request_batch([_req(workload, i, u) for u, i in take]):
+            naive[r.request.user] += 1
+
+    b2 = build_bridge(workload=workload, seed=0)
+    ctrl = AdmissionController(b2, max_batch=capacity, max_wait=0.0)
+    adm = collections.Counter()
+    for arr in arrivals():
+        for u, i in arr:
+            ctrl.submit(_req(workload, i, u))
+        for t in ctrl.dispatch():
+            adm[t.req.user] += 1
+
+    assert jain_index(list(adm.values())) >= \
+        jain_index(list(naive.values())) - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(max_yields=st.integers(1, 5), n_funded=st.integers(2, 5),
+       backlog=st.integers(2, 6))
+def test_depleted_user_deferred_never_starved(workload, max_yields, n_funded,
+                                              backlog):
+    bridge = build_bridge(workload=workload, seed=0)
+    bridge.ledger.set_budget("poor", 1.0)
+    bridge.ledger.charge("poor", 0.95)          # tier 3: yields under contention
+    ctrl = AdmissionController(bridge, max_batch=2, max_wait=0.0,
+                               yield_tier=2, max_yields=max_yields)
+    users = ["poor"] + [f"f{k}" for k in range(n_funded)]
+    for ui, u in enumerate(users):
+        for j in range(backlog):
+            ctrl.submit(_req(workload, ui * backlog + j, u))
+    batches, poor_at, poor_total = 0, None, 0
+    while ctrl.pending():
+        batch = ctrl.form_batch()
+        assert batch, "pending work but empty batch (livelock)"
+        batches += 1
+        got = sum(1 for t in batch if t.req.user == "poor")
+        poor_total += got
+        if got and poor_at is None:
+            poor_at = batches
+    # bounded wait: at most max_yields deferrals, then one rotation sweep
+    # (ceil(users / max_batch) batches) until the turn comes around
+    bound = max_yields + -(-(n_funded + 1) // 2)
+    assert poor_at is not None and poor_at <= bound, \
+        f"depleted user waited {poor_at} batches (bound {bound})"
+    assert poor_total == backlog, "depleted user's work lost"

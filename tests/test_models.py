@@ -39,6 +39,7 @@ def test_forward_shapes_and_finite(arch, key):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_reduces_loss(arch, key):
     from repro.data.pipeline import DataConfig, SyntheticCorpus
@@ -61,6 +62,7 @@ def test_train_step_reduces_loss(arch, key):
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [
     "gemma-2b",            # dense MQA + geglu
     "gemma3-27b",          # sliding-window local:global

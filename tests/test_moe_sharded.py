@@ -6,6 +6,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 
 _SCRIPT = r"""
 import dataclasses, jax, jax.numpy as jnp
@@ -43,6 +45,7 @@ print("SHARDED_MOE_OK")
 """
 
 
+@pytest.mark.slow
 def test_sharded_moe_matches_oracle():
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",

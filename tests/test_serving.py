@@ -47,6 +47,44 @@ def test_scheduler_fifo_per_user(engine):
         assert rids == sorted(rids), "per-user FIFO violated"
 
 
+def test_scheduler_tier_weighted_refill(engine):
+    """Budget-aware decode slots: with one slot contended, a depleted-tier
+    head yields to funded users, regardless of submit order."""
+    sch = Scheduler(engine, n_slots=1, starvation_s=60.0)
+    for rid, (user, tier) in enumerate([("rich", 0), ("poor", 3),
+                                        ("rich2", 0)]):
+        sch.submit(Request(rid=rid, user=user, tier=tier, max_new=2,
+                           prompt=jnp.arange(4, dtype=jnp.int32) + 3))
+    done = sch.run_to_completion()
+    assert [r.rid for r in done] == [0, 2, 1], "depleted head did not yield"
+
+
+def test_scheduler_tier_starvation_guard(engine):
+    """The aged depleted head regains full priority: with starvation_s=0 it
+    is already 'aged', so plain rotation order is preserved."""
+    sch = Scheduler(engine, n_slots=1, starvation_s=0.0)
+    for rid, (user, tier) in enumerate([("rich", 0), ("poor", 3),
+                                        ("rich2", 0)]):
+        sch.submit(Request(rid=rid, user=user, tier=tier, max_new=2,
+                           prompt=jnp.arange(4, dtype=jnp.int32) + 3))
+    done = sch.run_to_completion()
+    assert [r.rid for r in done] == [0, 1, 2], "starvation guard inactive"
+
+
+def test_scheduler_tier_weighs_into_edf(engine):
+    """Among deadlined heads, each depletion tier costs tier_penalty seconds
+    of effective deadline slack."""
+    sch = Scheduler(engine, n_slots=1, tier_penalty=10.0, starvation_s=60.0)
+    # poor's deadline is nominally tighter, but 3 tiers * 10s of penalty
+    # push its effective deadline past rich's
+    sch.submit(Request(rid=0, user="poor", tier=3, deadline=5.0, max_new=2,
+                       prompt=jnp.arange(4, dtype=jnp.int32) + 3))
+    sch.submit(Request(rid=1, user="rich", tier=0, deadline=8.0, max_new=2,
+                       prompt=jnp.arange(4, dtype=jnp.int32) + 3))
+    done = sch.run_to_completion()
+    assert [r.rid for r in done] == [1, 0]
+
+
 def test_scheduler_batches_multiple_users(engine):
     sch = Scheduler(engine, n_slots=4)
     for i in range(4):

@@ -40,6 +40,7 @@ def test_full_workload_replay_all_service_types(workload):
                         m.name for m in bridge.pool.list()]
 
 
+@pytest.mark.slow
 def test_real_reduced_model_pool_end_to_end():
     """Two real (randomly initialised, reduced) models behind the proxy:
     actual engine generation + perplexity judging, no planted quality."""
