@@ -37,6 +37,21 @@ def run() -> List[Row]:
     rows.append(("kernel.cache_topk.64x2048xd64k8", us,
                  f"maxerr={np.abs(s_ref - s_pl).max():.1e} idx_match={np.array_equal(i_ref, i_pl)}"))
 
+    codes = jnp.asarray(rng.integers(0, 7, 2048), jnp.int32)
+    sl = jnp.asarray(rng.integers(-1, 2048, size=(64, 512)), jnp.int32)
+    tm = jnp.asarray(rng.integers(1, 2 ** 7, 64), jnp.int32)
+    th = jnp.asarray(rng.uniform(-0.5, 0.3, 64), jnp.float32)
+    s_ref, i_ref = topk_ops.shortlist_topk(q, db, codes, sl, tm, th, 8,
+                                           use_pallas=False)
+    s_pl, i_pl = topk_ops.shortlist_topk(q, db, codes, sl, tm, th, 8,
+                                         use_pallas=True)
+    us = _time(lambda: topk_ops.shortlist_topk(q, db, codes, sl, tm, th, 8,
+                                               use_pallas=False))
+    live = np.asarray(i_ref) >= 0
+    rows.append(("kernel.shortlist_topk.64x512of2048xd64k8", us,
+                 f"maxerr={np.abs(s_ref[live] - s_pl[live]).max():.1e} "
+                 f"idx_match={np.array_equal(i_ref, i_pl)}"))
+
     qa = jax.random.normal(jax.random.PRNGKey(0), (2, 256, 8, 64))
     ka = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 2, 64))
     va = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 2, 64))

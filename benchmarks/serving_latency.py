@@ -51,4 +51,27 @@ def run() -> List[Row]:
         us = (time.perf_counter() - t0) / n * 1e6
         rows.append((f"latency.cpu_smoke.decode_step.{arch}", us,
                      "reduced-config real engine step"))
+
+    # batched admission: a full slot refill pads the admitted prompts into
+    # ONE prefill + ONE insert_slots (vs one prefill and one batched-pytree
+    # rebuild per request before) — the derived column discloses the
+    # engine-level prefill-call count for a 6-request mixed-length refill
+    from repro.serving.scheduler import Request, Scheduler
+    cfg = configs.get_reduced("qwen2-1.5b")
+    eng = Engine(cfg, init_model(cfg, jax.random.PRNGKey(0)), max_len=64)
+    prompts = [jnp.arange(4 + (i % 3), dtype=jnp.int32) + 3 for i in range(6)]
+    sch = Scheduler(eng, n_slots=6)      # warm the padded-prefill compile
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=1))
+    sch.step()
+    sch2 = Scheduler(eng, n_slots=6)
+    for i, p in enumerate(prompts):
+        sch2.submit(Request(rid=i, user=f"w{i}", prompt=p, max_new=1))
+    calls0 = eng.n_prefill_calls
+    t0 = time.perf_counter()
+    sch2._admit()
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("latency.cpu_smoke.admit_refill.qwen2-1.5b", us,
+                 f"6 mixed-length admits; prefill_calls="
+                 f"{eng.n_prefill_calls - calls0} (was 6 pre-batching)"))
     return rows

@@ -39,6 +39,11 @@ class CachedType(str, enum.Enum):
     FACTS = "facts"
 
 
+# per-row uint8 type codes: the VectorStore predicate-pushdown alphabet —
+# typed GET filters compile to bitmasks over these instead of Python lambdas
+TYPE_CODE: Dict[CachedType, int] = {t: i for i, t in enumerate(CachedType)}
+
+
 @dataclasses.dataclass
 class CacheEntry:
     eid: int
@@ -141,7 +146,8 @@ class SemanticCache:
                            key_type=ktype, key_text=ktext)
             self._entries.append(e)
             entries.append(e)
-        self.store.add(vecs, entries)
+        self.store.add(vecs, entries,
+                       codes=[TYPE_CODE[e.key_type] for e in entries])
         return [e.eid for e in entries]
 
     def put_exact(self, prompt: str, response: str) -> None:
@@ -155,16 +161,26 @@ class SemanticCache:
     def get(self, key_text: str,
             filters: Optional[Sequence[Tuple[CachedType, float, int]]] = None
             ) -> List[SearchHit]:
-        """filters: [(type, min_similarity, max_items)]; None = top-4 any type."""
+        """filters: [(type, min_similarity, max_items)]; None = top-4 any type.
+
+        The F typed filters compile to ONE multi-filter masked search: one
+        query row per filter (same embedding, per-row type bitmask + score
+        threshold), pushed down into the ``shortlist_topk`` kernel — not F
+        sequential searches with Python lambdas.
+        """
         q = self.embedder.embed([key_text])[0]
         if not filters:
             return self.store.search(q, top_k=4)[0]
+        filters = [(CachedType(kt), th, k) for kt, th, k in filters]
+        rows = np.broadcast_to(q, (len(filters), q.shape[0]))
+        masks = [1 << TYPE_CODE[kt] for kt, _, _ in filters]
+        thresholds = [th for _, th, _ in filters]
+        hit_lists = self.store.search(
+            rows, top_k=max(k for _, _, k in filters),
+            threshold=thresholds, type_mask=masks)
         out: List[SearchHit] = []
-        for ktype, thresh, k in filters:
-            hits = self.store.search(
-                q, top_k=k, threshold=thresh,
-                predicate=lambda e, kt=ktype: e.key_type == kt)[0]
-            out.extend(hits)
+        for (_, _, k), hits in zip(filters, hit_lists):
+            out.extend(hits[:k])
         out.sort(key=lambda h: -h.score)
         return out
 

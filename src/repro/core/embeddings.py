@@ -9,6 +9,7 @@
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 from typing import List, Optional
 
@@ -55,16 +56,47 @@ class ModelEmbedder:
 
 
 class WorkloadEmbedder:
-    """Planted embeddings for workload queries; hashed BoW elsewhere."""
+    """Planted embeddings for workload queries; hashed BoW elsewhere.
+
+    Unregistered text inherits the geometry of registered texts related to it
+    by containment (``k in t or t in k``).  Candidates come from a
+    token-keyed inverted index over registered texts (rows sharing at least
+    one whitespace token), then the exact containment check runs only on
+    those — O(tokens) per lookup instead of O(planted) — and resolved
+    embeddings are memoised in a bounded LRU.  (Containment that crosses
+    token boundaries mid-word is no longer discovered; workload keys are
+    word-joined, so token overlap subsumes it in practice.)
+    """
+
+    _MEMO_CAP = 65536
 
     def __init__(self, dim: int = 64):
         self.dim = dim
         self._planted: dict[str, np.ndarray] = {}
+        self._order: dict[str, int] = {}
+        self._token_index: dict[str, set] = {}
+        self._memo: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
         self.n_calls = 0
         self.n_texts = 0
+        self.n_memo_hits = 0
 
     def register(self, text: str, embedding: np.ndarray) -> None:
+        if text not in self._order:
+            self._order[text] = len(self._order)
         self._planted[text] = embedding / max(np.linalg.norm(embedding), 1e-9)
+        for tok in set(text.lower().split()):
+            self._token_index.setdefault(tok, set()).add(text)
+        self._memo.clear()      # geometry changed; memoised blends are stale
+
+    def _planted_hits(self, t: str):
+        """Registered texts related to ``t`` by containment, in registration
+        order (mean() below is order-insensitive, but keep it deterministic)."""
+        cands = set()
+        for tok in set(t.lower().split()):
+            cands.update(self._token_index.get(tok, ()))
+        return [self._planted[k] for k in sorted(cands, key=self._order.get)
+                if k and (k in t or t in k)]
 
     def _bow(self, text: str) -> np.ndarray:
         v = np.zeros(self.dim, np.float32)
@@ -83,13 +115,22 @@ class WorkloadEmbedder:
         for i, t in enumerate(texts):
             if t in self._planted:
                 out[i] = self._planted[t]
+                continue
+            memo = self._memo.get(t)
+            if memo is not None:
+                self.n_memo_hits += 1
+                self._memo.move_to_end(t)
+                out[i] = memo
+                continue
+            # blend planted vectors of any registered related texts (chunk
+            # keys derived from a registered text inherit its geometry)
+            hits = self._planted_hits(t)
+            if hits:
+                v = np.mean(hits, axis=0) + 0.15 * self._bow(t)
+                out[i] = v / max(np.linalg.norm(v), 1e-9)
             else:
-                # blend planted vectors of any registered substrings (chunk
-                # keys derived from a registered text inherit its geometry)
-                hits = [v for k, v in self._planted.items() if k and (k in t or t in k)]
-                if hits:
-                    v = np.mean(hits, axis=0) + 0.15 * self._bow(t)
-                    out[i] = v / max(np.linalg.norm(v), 1e-9)
-                else:
-                    out[i] = self._bow(t)
+                out[i] = self._bow(t)
+            self._memo[t] = out[i].copy()
+            if len(self._memo) > self._MEMO_CAP:
+                self._memo.popitem(last=False)
         return out

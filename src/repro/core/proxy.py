@@ -387,6 +387,9 @@ class LLMBridge:
                 "exact_hits": self.cache.n_exact_hits,
                 "hit_rate": (self.cache.n_hits /
                              max(1, self.cache.n_hits + self.cache.n_misses)),
+                # retrieval-index transparency: flat-vs-IVF dispatch counts,
+                # probes + shortlist rows scored, and index build wall-time
+                "index": self.cache.store.index_stats(),
             },
             "ledger": self.ledger.summary(),
         }

@@ -1,18 +1,43 @@
 """In-JAX vector store: the RDS-with-vector-search analogue (paper §4).
 
-Append-only matrix of unit vectors + parallel payload list.  Search is
-batched cosine similarity -> top-k, dispatched to the Pallas ``cache_topk``
-kernel when enabled (TPU target) or its jnp oracle otherwise — this is the
-semantic-cache GET hot path the paper's cost model cares about.
+The semantic-cache GET hot path (paper §3.5) — now sublinear.  Rows live in
+an append-only unit-vector matrix with a parallel payload list and a per-row
+``uint8`` type code.  Retrieval has two regimes:
+
+* **flat scan** below ``crossover`` rows (or while no index exists): batched
+  cosine top-k over the whole matrix via the ``cache_topk`` kernel/oracle —
+  small caches pay zero index overhead;
+* **IVF probe** above it: coarse centroids fit by mini-batch spherical
+  k-means, with inverted lists stored *contiguously* (faiss-style: one
+  re-ordered copy of the matrix, so probing a list is a block read, not a
+  random gather).  Each query scores only the ``nprobe`` nearest lists.  On
+  TPU the shortlist is scored by the fused ``shortlist_topk`` Pallas kernel
+  (gather + cosine + per-query threshold + type-masked top-k in one pass);
+  the CPU fallback runs the same math as contiguous block matvecs.  Rows
+  added after a build go to per-list overflow tails (nudging their centroid,
+  mini-batch k-means style) and are folded in at the next re-cluster, which
+  fires when list-size imbalance crosses ``imbalance_bound``.
+
+Predicates are *pushed down*: pass ``type_mask`` (per-query bitmask over type
+codes) instead of a Python ``predicate`` and the filter is applied inside the
+scoring kernel, so a typed multi-filter GET compiles to ONE search.  Opaque
+Python ``predicate`` callables are still honoured on a flat scan with
+geometric candidate widening (never silently under-filled).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence
+import time
+from typing import Any, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.kernels.cache_topk import ops as topk_ops
+from repro.kernels.cache_topk.ref import NEG as _NEG
+
+MAX_TYPE_CODES = 32          # type codes are bits of an int32 mask
+_ALL_TYPES = (1 << MAX_TYPE_CODES) - 1
+NEG = np.float32(_NEG)       # shared dead-slot sentinel (kernel/oracle/host)
 
 
 @dataclasses.dataclass
@@ -23,20 +48,56 @@ class SearchHit:
 
 
 class VectorStore:
-    def __init__(self, dim: int, capacity: int = 1024, use_pallas: bool = False):
+    def __init__(self, dim: int, capacity: int = 1024, use_pallas: bool = False,
+                 n_lists: Optional[int] = None, nprobe: int = 8,
+                 crossover: int = 4096, imbalance_bound: float = 4.0,
+                 kmeans_iters: int = 4, kmeans_sample: int = 32768,
+                 seed: int = 0):
         self.dim = dim
         self._vecs = np.zeros((capacity, dim), np.float32)
+        self._codes = np.zeros(capacity, np.uint8)
         self._payloads: List[Any] = []
         self.use_pallas = use_pallas
-        # stage telemetry: kernel dispatches vs query rows served by them —
-        # the batched proxy path drives n_queries/n_searches up
+        # -- IVF knobs (see ROADMAP "Sublinear cache retrieval") ---------------
+        self.n_lists = n_lists          # None = auto (~sqrt(N) at build time)
+        self.nprobe = nprobe
+        self.crossover = crossover
+        self.imbalance_bound = imbalance_bound
+        self.kmeans_iters = kmeans_iters
+        self.kmeans_sample = kmeans_sample
+        self._rng = np.random.default_rng(seed)
+        # -- IVF state: contiguous re-ordered copy + per-list overflow tails ---
+        self._centroids: Optional[np.ndarray] = None      # (L, dim) unit rows
+        self._ivf_order: Optional[np.ndarray] = None      # (built_n,) row ids
+        self._ivf_bounds: Optional[np.ndarray] = None     # (L+1,) offsets
+        self._ivf_vecs: Optional[np.ndarray] = None       # rows in list order
+        self._ivf_codes: Optional[np.ndarray] = None
+        self._overflow: List[List[int]] = []              # rows since build
+        self._built_n = 0                                 # rows at last build
+        # device-array cache for the kernel operands: rows [0, n) are
+        # immutable once written, so (n,) keys the cache
+        self._dev: Optional[tuple] = None
+        # -- stage telemetry: kernel dispatches vs query rows served by them —
+        # the batched proxy path drives n_queries/n_searches up; the IVF path
+        # additionally discloses probes and shortlist sizes (proxy.stats())
         self.n_searches = 0
         self.n_queries = 0
+        self.n_flat_searches = 0
+        self.n_ivf_searches = 0
+        self.n_probes_total = 0           # inverted lists visited
+        self.n_shortlist_rows = 0         # candidate rows scored on IVF path
+        self.n_reclusters = 0
+        self.last_build_s = 0.0
 
     def __len__(self) -> int:
         return len(self._payloads)
 
-    def add(self, vecs: np.ndarray, payloads: Sequence[Any]) -> None:
+    # -- PUT -------------------------------------------------------------------
+    def add(self, vecs: np.ndarray, payloads: Sequence[Any],
+            codes: Optional[Sequence[int]] = None) -> None:
+        """codes: per-row type codes (< MAX_TYPE_CODES) for ``type_mask``
+        filtering; omitted rows default to code 0 — callers mixing typed and
+        untyped rows in one store should reserve a code for untyped."""
         vecs = np.atleast_2d(np.asarray(vecs, np.float32))
         assert vecs.shape[0] == len(payloads) and vecs.shape[1] == self.dim
         n = len(self._payloads)
@@ -46,36 +107,326 @@ class VectorStore:
             grown = np.zeros((cap, self.dim), np.float32)
             grown[:n] = self._vecs[:n]
             self._vecs = grown
+            grown_c = np.zeros(cap, np.uint8)
+            grown_c[:n] = self._codes[:n]
+            self._codes = grown_c
         norms = np.linalg.norm(vecs, axis=1, keepdims=True)
         self._vecs[n:need] = vecs / np.maximum(norms, 1e-9)
+        if codes is not None:
+            c = np.asarray(codes, np.uint8)
+            assert c.shape == (vecs.shape[0],) and int(c.max(initial=0)) < MAX_TYPE_CODES
+            self._codes[n:need] = c
         self._payloads.extend(payloads)
+        self._index_rows(n, need)
 
+    # -- IVF maintenance -------------------------------------------------------
+    def _auto_n_lists(self, n: int) -> int:
+        return max(8, min(n // 8, int(round(np.sqrt(n)))))
+
+    def _list_sizes(self) -> np.ndarray:
+        built = np.diff(self._ivf_bounds)
+        return built + np.array([len(o) for o in self._overflow])
+
+    def _index_rows(self, lo: int, hi: int) -> None:
+        """Incremental index maintenance for rows [lo, hi)."""
+        n = hi
+        if self._centroids is None:
+            if n >= self.crossover:
+                self._build_index()
+            return
+        # assign new rows to the nearest centroid: overflow tail + mini-batch
+        # centroid nudge (weighted running mean, re-normalised — spherical)
+        new = self._vecs[lo:hi]
+        assign = np.argmax(new @ self._centroids.T, axis=1)
+        sizes = self._list_sizes()
+        for li in np.unique(assign):
+            sel = assign == li
+            self._overflow[li].extend((lo + np.nonzero(sel)[0]).tolist())
+            c = self._centroids[li] * max(int(sizes[li]), 1) + new[sel].sum(axis=0)
+            self._centroids[li] = c / max(np.linalg.norm(c), 1e-9)
+        sizes = self._list_sizes()
+        imbalance = sizes.max() / max(sizes.mean(), 1.0)
+        if imbalance > self.imbalance_bound and n > self._built_n * 1.1:
+            self.n_reclusters += 1
+            self._build_index()
+
+    def _build_index(self) -> None:
+        """(Re)cluster: mini-batch spherical k-means on a sample, a full
+        chunked assignment pass, then the contiguous list layout — probing a
+        list becomes a block read (one extra copy of the matrix, no random
+        gather on the hot path)."""
+        t0 = time.perf_counter()
+        n = len(self._payloads)
+        L = self.n_lists or self._auto_n_lists(n)
+        L = max(1, min(L, n))
+        X = self._vecs[:n]
+        sample = X[self._rng.choice(n, size=min(n, self.kmeans_sample),
+                                    replace=False)]
+        cent = X[self._rng.choice(n, size=L, replace=False)].copy()
+        for _ in range(self.kmeans_iters):
+            a = np.argmax(sample @ cent.T, axis=1)
+            for li in range(L):
+                pts = sample[a == li]
+                if pts.size:
+                    c = pts.sum(axis=0)
+                    cent[li] = c / max(np.linalg.norm(c), 1e-9)
+        # full assignment, chunked so the (N, L) sim matrix stays bounded
+        assign = np.empty(n, np.int32)
+        step = max(1, (1 << 22) // max(L, 1))
+        for lo in range(0, n, step):
+            hi = min(n, lo + step)
+            assign[lo:hi] = np.argmax(X[lo:hi] @ cent.T, axis=1)
+        order = np.argsort(assign, kind="stable").astype(np.int32)
+        bounds = np.searchsorted(assign[order], np.arange(L + 1))
+        self._centroids = cent
+        self._ivf_order = order
+        self._ivf_bounds = bounds
+        self._ivf_vecs = np.ascontiguousarray(X[order])
+        self._ivf_codes = np.ascontiguousarray(self._codes[:n][order])
+        self._overflow = [[] for _ in range(L)]
+        self._built_n = n
+        self.last_build_s = time.perf_counter() - t0
+
+    def index_stats(self) -> dict:
+        """Retrieval-index transparency (surfaced via ``proxy.stats()``)."""
+        ivf = self._centroids is not None
+        sizes = self._list_sizes() if ivf else np.zeros(1)
+        return {
+            "rows": len(self._payloads),
+            "backend": "ivf" if ivf else "flat",
+            "n_lists": len(self._centroids) if ivf else 0,
+            "nprobe": self.nprobe,
+            "crossover": self.crossover,
+            "imbalance": float(sizes.max() / max(sizes.mean(), 1.0)),
+            "n_searches": self.n_searches,
+            "n_queries": self.n_queries,
+            "n_flat_searches": self.n_flat_searches,
+            "n_ivf_searches": self.n_ivf_searches,
+            "n_probes_total": self.n_probes_total,
+            "n_shortlist_rows": self.n_shortlist_rows,
+            "n_reclusters": self.n_reclusters,
+            "last_build_s": self.last_build_s,
+        }
+
+    # -- GET -------------------------------------------------------------------
     def search(self, queries: np.ndarray, top_k: int = 4,
-               threshold: float = -1.0,
-               predicate=None) -> List[List[SearchHit]]:
-        """queries: (Q, dim) or (dim,). Returns per-query hits sorted by score."""
+               threshold: Union[float, Sequence[float]] = -1.0,
+               predicate=None,
+               type_mask: Optional[Union[int, Sequence[int]]] = None,
+               nprobe: Optional[int] = None) -> List[List[SearchHit]]:
+        """queries: (Q, dim) or (dim,). Returns per-query hits sorted by score.
+
+        ``threshold`` is a scalar or per-query array of minimum scores.
+        ``type_mask`` (int bitmask over row type codes, scalar or per-query)
+        is the pushed-down filter — it rides the fused kernel in ONE search.
+        ``predicate`` (opaque Python callable over payloads) forces a flat
+        scan with geometric candidate widening; prefer ``type_mask``.
+        ``nprobe`` overrides the store default; ``nprobe >= n_lists`` makes
+        the search exhaustive (exact brute-force equivalence).
+        """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         self.n_searches += 1
-        self.n_queries += queries.shape[0]
+        Q = queries.shape[0]
+        self.n_queries += Q
         n = len(self._payloads)
         if n == 0:
-            return [[] for _ in range(queries.shape[0])]
+            return [[] for _ in range(Q)]
         qn = queries / np.maximum(np.linalg.norm(queries, axis=1, keepdims=True), 1e-9)
-        k = min(top_k if predicate is None else min(4 * top_k, n), n)
-        scores, idx = topk_ops.similarity_topk(
-            qn, self._vecs[:n], k, use_pallas=self.use_pallas)
+        thr = np.broadcast_to(np.asarray(threshold, np.float32), (Q,)).copy()
+
+        if predicate is not None:
+            return self._search_predicate(qn, top_k, thr, predicate)
+
+        tmask = np.broadcast_to(
+            np.asarray(_ALL_TYPES if type_mask is None else type_mask,
+                       np.int64).astype(np.int32), (Q,)).copy()
+        k = min(top_k, n)
+        probe = self.nprobe if nprobe is None else nprobe
+        if (self._centroids is None or n < self.crossover
+                or probe >= len(self._centroids)):
+            self.n_flat_searches += 1
+            if type_mask is None:
+                # untyped flat scan: dense kernel, thresholds applied host-side
+                db, _ = self._db_arrays(n)
+                scores, idx = topk_ops.similarity_topk(
+                    qn, db, k, use_pallas=self.use_pallas)
+                idx = np.where(scores >= thr[:, None], idx, -1)
+                return self._gather_hits(scores, idx)
+            if self.use_pallas:
+                # typed flat scan on the kernel path: every row shortlisted
+                # (a dense MXU matmul + in-kernel code mask would avoid the
+                # (Q, N) index traffic — fold into the similarity kernel if
+                # this path ever dominates a profile)
+                db, codes = self._db_arrays(n)
+                shortlist = np.broadcast_to(np.arange(n, dtype=np.int32),
+                                            (Q, n))
+                scores, idx = topk_ops.shortlist_topk(
+                    qn, db, codes, shortlist, tmask, thr, k, use_pallas=True)
+            else:
+                # dense masked scan: one (Q, N) matmul + code-mask, no (Q, N)
+                # shortlist materialisation and no per-growth jit retrace
+                scores, idx = self._dense_masked_host(qn, tmask, thr, k)
+            return self._gather_hits(scores, idx)
+
+        self.n_ivf_searches += 1
+        probed = self._probe_lists(qn, probe)            # (Q, nprobe) list ids
+        if self.use_pallas:
+            db, codes = self._db_arrays(n)
+            shortlist = self._shortlist(probed)
+            scores, idx = topk_ops.shortlist_topk(
+                qn, db, codes, shortlist, tmask, thr, k, use_pallas=True)
+        else:
+            scores, idx = self._score_probed_host(qn, probed, tmask, thr, k)
+        return self._gather_hits(scores, idx)
+
+    # -- IVF probing -----------------------------------------------------------
+    def _probe_lists(self, qn: np.ndarray, nprobe: int) -> np.ndarray:
+        """(Q, nprobe) ids of the nearest inverted lists per query."""
+        nprobe = max(1, min(nprobe, len(self._centroids)))
+        csims = qn @ self._centroids.T
+        probed = np.argpartition(-csims, nprobe - 1, axis=1)[:, :nprobe]
+        self.n_probes_total += probed.size
+        return probed
+
+    def _shortlist(self, probed: np.ndarray) -> np.ndarray:
+        """Materialised candidate-row-id rectangle for the fused kernel,
+        -1-padded, width rounded to a power of two for stable jit shapes."""
+        Q = probed.shape[0]
+        rows = [np.concatenate(
+            [self._ivf_order[self._ivf_bounds[li]:self._ivf_bounds[li + 1]]
+             for li in probed[qi]] +
+            [np.asarray(sum((self._overflow[li] for li in probed[qi]), []),
+                        np.int32)])
+            for qi in range(Q)]
+        lens = [r.size for r in rows]
+        self.n_shortlist_rows += int(sum(lens))
+        width = max(128, 1 << (max(max(lens), 1) - 1).bit_length())
+        out = np.full((Q, width), -1, np.int32)
+        for qi, r in enumerate(rows):
+            out[qi, :r.size] = r
+        return out
+
+    def _score_probed_host(self, qn: np.ndarray, probed: np.ndarray,
+                           tmask: np.ndarray, thr: np.ndarray, k: int):
+        """CPU fallback for the fused kernel: the loop runs over *unique
+        probed lists*, scoring each contiguous block against every query that
+        probes it in ONE gemm (queries on clustered workloads share lists, so
+        this is far fewer BLAS calls than per-(query, list) matvecs), then
+        per-query masking + top-k over the concatenated candidates.  Same
+        math as ``shortlist_topk`` without materialising a gather."""
+        Q = qn.shape[0]
+        by_list: dict = {}
+        for qi in range(Q):
+            for li in probed[qi]:
+                by_list.setdefault(int(li), []).append(qi)
+        per_q_s: List[List[np.ndarray]] = [[] for _ in range(Q)]
+        per_q_r: List[List[np.ndarray]] = [[] for _ in range(Q)]
+        per_q_c: List[List[np.ndarray]] = [[] for _ in range(Q)]
+        bounds, order = self._ivf_bounds, self._ivf_order
+        for li, qis in by_list.items():
+            s0, s1 = bounds[li], bounds[li + 1]
+            blocks = [(self._ivf_vecs[s0:s1], order[s0:s1],
+                       self._ivf_codes[s0:s1])]
+            if self._overflow[li]:
+                rid = np.asarray(self._overflow[li], np.int32)
+                blocks.append((self._vecs[rid], rid, self._codes[rid]))
+            for vecs, rid, cb in blocks:
+                sc = vecs @ qn[qis].T                    # (m, |qis|) one gemm
+                for j, qi in enumerate(qis):
+                    per_q_s[qi].append(sc[:, j])
+                    per_q_r[qi].append(rid)
+                    per_q_c[qi].append(cb)
+        out_s = np.full((Q, k), NEG, np.float32)
+        out_i = np.full((Q, k), -1, np.int32)
+        for qi in range(Q):
+            sc = np.concatenate(per_q_s[qi])
+            rid = np.concatenate(per_q_r[qi])
+            cb = np.concatenate(per_q_c[qi]).astype(np.int32)
+            self.n_shortlist_rows += int(sc.size)
+            keep = (((tmask[qi] >> cb) & 1) == 1) & (sc >= thr[qi])
+            sc = np.where(keep, sc, NEG)
+            kk = min(k, sc.size)
+            sel = np.argpartition(-sc, kk - 1)[:kk] if sc.size > kk else \
+                np.arange(sc.size)
+            sel = sel[np.argsort(-sc[sel], kind="stable")]
+            out_s[qi, :sel.size] = sc[sel]
+            out_i[qi, :sel.size] = np.where(sc[sel] > NEG / 2, rid[sel], -1)
+        return out_s, out_i
+
+    def _dense_masked_host(self, qn: np.ndarray, tmask: np.ndarray,
+                           thr: np.ndarray, k: int):
+        """Typed flat scan on CPU: dense (Q, N) matmul + pushed-down code
+        mask + top-k — O(N·D) memory, no candidate gather."""
+        n = len(self._payloads)
+        sc = qn @ self._vecs[:n].T
+        c = self._codes[:n].astype(np.int32)
+        keep = (((tmask[:, None] >> c[None, :]) & 1) == 1) & \
+            (sc >= thr[:, None])
+        sc = np.where(keep, sc, NEG).astype(np.float32)
+        kk = min(k, n)
+        if n > kk:
+            part = np.argpartition(-sc, kk - 1, axis=1)[:, :kk]
+        else:
+            part = np.broadcast_to(np.arange(n), (qn.shape[0], n))
+        ps = np.take_along_axis(sc, part, 1)
+        order = np.argsort(-ps, axis=1, kind="stable")
+        idx = np.take_along_axis(part, order, 1)
+        s = np.take_along_axis(sc, idx, 1)
+        return s, np.where(s > NEG / 2, idx, -1).astype(np.int32)
+
+    # -- shared plumbing -------------------------------------------------------
+    def _db_arrays(self, n: int):
+        """jnp-resident (vecs, codes) for rows [0, n) — cached so repeated
+        searches don't re-upload the matrix to the device every call."""
+        import jax.numpy as jnp
+        if self._dev is None or self._dev[0] != n:
+            self._dev = (n, jnp.asarray(self._vecs[:n]),
+                         jnp.asarray(self._codes[:n], jnp.int32))
+        return self._dev[1], self._dev[2]
+
+    def _gather_hits(self, scores: np.ndarray, idx: np.ndarray
+                     ) -> List[List[SearchHit]]:
         out: List[List[SearchHit]] = []
-        for qi in range(queries.shape[0]):
-            hits = []
-            for j in range(k):
-                s, i = float(scores[qi, j]), int(idx[qi, j])
-                if s < threshold:
-                    continue
-                payload = self._payloads[i]
-                if predicate is not None and not predicate(payload):
-                    continue
-                hits.append(SearchHit(index=i, score=s, payload=payload))
-                if len(hits) >= top_k:
-                    break
+        for qi in range(scores.shape[0]):
+            hits = [SearchHit(index=int(i), score=float(s),
+                              payload=self._payloads[int(i)])
+                    for s, i in zip(scores[qi], idx[qi]) if i >= 0]
             out.append(hits)
         return out
+
+    def _search_predicate(self, qn: np.ndarray, top_k: int, thr: np.ndarray,
+                          predicate) -> List[List[SearchHit]]:
+        """Flat scan + Python predicate, widening the candidate set
+        geometrically until ``top_k`` survivors per query (or exhaustion) —
+        heavily filtered stores never silently return fewer hits than exist."""
+        self.n_flat_searches += 1      # opaque predicates always scan flat
+        n = len(self._payloads)
+        db, _ = self._db_arrays(n)
+        k = min(max(4 * top_k, top_k), n)
+        while True:
+            scores, idx = topk_ops.similarity_topk(
+                qn, db, k, use_pallas=self.use_pallas)
+            out: List[List[SearchHit]] = []
+            deficient = False
+            for qi in range(qn.shape[0]):
+                hits: List[SearchHit] = []
+                for j in range(k):
+                    s, i = float(scores[qi, j]), int(idx[qi, j])
+                    if s < thr[qi]:
+                        continue
+                    payload = self._payloads[i]
+                    if not predicate(payload):
+                        continue
+                    hits.append(SearchHit(index=i, score=s, payload=payload))
+                    if len(hits) >= top_k:
+                        break
+                # under-filled and inconclusive: rows remain unscanned AND the
+                # tail candidate still cleared the threshold (scores descend,
+                # so a below-threshold tail can never yield more survivors)
+                if (len(hits) < top_k and k < n
+                        and float(scores[qi, k - 1]) >= thr[qi]):
+                    deficient = True
+                out.append(hits)
+            if not deficient or k >= n:
+                return out
+            k = min(2 * k, n)

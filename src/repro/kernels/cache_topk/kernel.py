@@ -18,7 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -3.0e38  # python float so the kernel doesn't capture a traced constant
+# python float so the kernel doesn't capture a traced constant; shared with
+# the jnp oracle (and VectorStore's host fallback) so every implementation
+# agrees on the dead-slot sentinel and its `> NEG / 2` liveness test
+from repro.kernels.cache_topk.ref import NEG
 
 
 def _extract_topk(scores: jax.Array, idx: jax.Array, k: int):
@@ -66,6 +69,105 @@ def _kernel(q_ref, db_ref, out_s_ref, out_i_ref, acc_s, acc_i, *, k: int,
     def _write():
         out_s_ref[...] = acc_s[...]
         out_i_ref[...] = acc_i[...]
+
+
+def _shortlist_kernel(q_ref, db_ref, codes_ref, sl_ref, tm_ref, th_ref,
+                      out_s_ref, out_i_ref, acc_s, acc_i, *, k: int):
+    li = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    @pl.when(li == 0)
+    def _init():
+        acc_s[...] = jnp.full_like(acc_s, NEG)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)                 # (TQ, D)
+    sl = sl_ref[...]                                   # (TQ, TL) int32, -1 pad
+    valid = sl >= 0
+    slc = jnp.where(valid, sl, 0)
+    flat = slc.reshape(-1)
+    db = db_ref[...].astype(jnp.float32)               # (N, D) resident
+    g = jnp.take(db, flat, axis=0).reshape(sl.shape + (db.shape[1],))
+    scores = jnp.sum(g * q[:, None, :], axis=-1)       # (TQ, TL) cosine (unit rows)
+    c = jnp.take(codes_ref[...][:, 0], flat).reshape(sl.shape)
+    allowed = ((tm_ref[...][:, :1] >> c) & 1) == 1     # per-query type bitmask
+    keep = valid & allowed & (scores >= th_ref[...][:, :1])
+    scores = jnp.where(keep, scores, NEG)
+
+    tile_s, tile_i = _extract_topk(scores, sl, k)
+    comb_s = jnp.concatenate([acc_s[...], tile_s], axis=1)
+    comb_i = jnp.concatenate([acc_i[...], tile_i], axis=1)
+    new_s, new_i = _extract_topk(comb_s, comb_i, k)
+    acc_s[...] = new_s
+    acc_i[...] = new_i
+
+    @pl.when(li == n_tiles - 1)
+    def _write():
+        out_s_ref[...] = acc_s[...]
+        out_i_ref[...] = acc_i[...]
+
+
+def shortlist_topk_pallas(q: jax.Array, db: jax.Array, codes: jax.Array,
+                          shortlist: jax.Array, type_mask: jax.Array,
+                          threshold: jax.Array, k: int,
+                          tile_q: int = 128, tile_l: int = 512,
+                          interpret: bool = True):
+    """Fused gather + cosine + per-query threshold + type-masked top-k.
+
+    q: (Q, D); db: (N, D); codes: (N,) int32; shortlist: (Q, L) int32 (-1 pad);
+    type_mask/threshold: (Q,).  Returns (scores (Q, k), idx (Q, k)); slots that
+    survive no mask carry idx = -1.  The db/codes arrays stay resident across
+    the shortlist tiles (the gather is fused with scoring, so the (Q, L)
+    candidate matrix is never materialised in HBM).
+
+    KNOWN LIMIT (compiled mode): db is a single untiled block, so N·D must
+    fit VMEM (~16MB ⇒ ~60k fp32 rows at D=64).  Beyond that, compiled TPU
+    execution needs an HBM-resident db with per-tile DMA gathers (grid over
+    N with in-range shortlist masking) — tracked in ROADMAP "IVF tuning";
+    interpret mode (this repo's test/bench path) and the CPU host fallback
+    in VectorStore are unaffected.
+    """
+    Q, D = q.shape
+    N = db.shape[0]
+    L = shortlist.shape[1]
+    tile_q = min(tile_q, max(8, Q))
+    tile_l = min(tile_l, max(128, 1 << (L - 1).bit_length()))
+    padq = (-Q) % tile_q
+    padl = (-L) % tile_l
+    qp = jnp.pad(q, ((0, padq), (0, 0)))
+    slp = jnp.pad(shortlist, ((0, padq), (0, padl)), constant_values=-1)
+    tmp = jnp.pad(type_mask.astype(jnp.int32), (0, padq))[:, None]
+    thp = jnp.pad(threshold.astype(jnp.float32), (0, padq))[:, None]
+    codes2 = codes.astype(jnp.int32)[:, None]
+    grid = (qp.shape[0] // tile_q, slp.shape[1] // tile_l)
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_shortlist_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, D), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((N, D), lambda qi, li: (0, 0)),
+            pl.BlockSpec((N, 1), lambda qi, li: (0, 0)),
+            pl.BlockSpec((tile_q, tile_l), lambda qi, li: (qi, li)),
+            pl.BlockSpec((tile_q, 1), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((tile_q, 1), lambda qi, li: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((tile_q, k), lambda qi, li: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, k), jnp.float32),
+            pltpu.VMEM((tile_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, db, codes2, slp, tmp, thp)
+    s, i = out_s[:Q], out_i[:Q]
+    return s, jnp.where(s > NEG / 2, i, -1)
 
 
 def similarity_topk_pallas(q: jax.Array, db: jax.Array, k: int,

@@ -1,11 +1,44 @@
-"""Pure-jnp oracle for fused similarity + top-k."""
+"""Pure-jnp oracles for fused similarity + top-k and masked shortlist scoring."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+NEG = -3.0e38
 
 
 def similarity_topk_ref(q: jax.Array, db: jax.Array, k: int):
     """q: (Q, D) unit rows; db: (N, D) unit rows. Returns (scores (Q,k), idx (Q,k))."""
     scores = jnp.einsum("qd,nd->qn", q.astype(jnp.float32), db.astype(jnp.float32))
     return jax.lax.top_k(scores, k)
+
+
+def shortlist_topk_ref(q: jax.Array, db: jax.Array, codes: jax.Array,
+                       shortlist: jax.Array, type_mask: jax.Array,
+                       threshold: jax.Array, k: int):
+    """Fused gather + cosine + per-query threshold + type-masked top-k.
+
+    q:         (Q, D) unit query rows
+    db:        (N, D) unit db rows
+    codes:     (N,)   int32 per-row type code (0..31)
+    shortlist: (Q, L) int32 candidate row ids per query, -1 = padding
+    type_mask: (Q,)   int32 bitmask; bit t set = rows with code t are eligible
+    threshold: (Q,)   f32 per-query minimum score (strictly-below is dropped)
+
+    Returns (scores (Q, k), idx (Q, k)); empty output slots carry idx = -1.
+    """
+    valid = shortlist >= 0
+    sl = jnp.where(valid, shortlist, 0)
+    g = jnp.take(db.astype(jnp.float32), sl, axis=0)          # (Q, L, D)
+    scores = jnp.einsum("qd,qld->ql", q.astype(jnp.float32), g)
+    c = jnp.take(codes.astype(jnp.int32), sl)                 # (Q, L)
+    allowed = ((type_mask[:, None] >> c) & 1) == 1
+    keep = valid & allowed & (scores >= threshold[:, None])
+    scores = jnp.where(keep, scores, NEG)
+    kk = min(k, scores.shape[1])       # shortlist narrower than k: pad below
+    s, j = jax.lax.top_k(scores, kk)
+    idx = jnp.take_along_axis(shortlist, j, axis=1)
+    if kk < k:
+        s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=NEG)
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+    return s, jnp.where(s > NEG / 2, idx, -1)

@@ -32,12 +32,16 @@ class Engine:
         self.max_len = max_len
         self._prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
         self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+        # telemetry: the batched admission path must collapse a refill's
+        # prefills into one call per group (benchmarks/serving_latency.py)
+        self.n_prefill_calls = 0
+
+    def prefill(self, tokens: jax.Array, cache: Dict, **extras):
+        self.n_prefill_calls += 1
+        return self._prefill(self.params, tokens, cache, **extras)
 
     def new_cache(self, batch: int, max_len: Optional[int] = None) -> Dict:
         return init_cache(self.cfg, batch, max_len or self.max_len)
-
-    def prefill(self, tokens: jax.Array, cache: Dict, **extras):
-        return self._prefill(self.params, tokens, cache, **extras)
 
     def decode(self, tokens: jax.Array, positions: jax.Array, cache: Dict):
         return self._decode(self.params, tokens, positions, cache)

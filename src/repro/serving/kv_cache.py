@@ -47,6 +47,19 @@ def insert_slot(batched: Dict, single: Dict, slot: int) -> Dict:
     return _map_with_axis(fn, batched, single)
 
 
+def insert_slots(batched: Dict, multi: Dict, slots) -> Dict:
+    """Write a B=len(slots) cache into the given slots of a batched cache —
+    ONE scatter per leaf for the whole admitted group, instead of rebuilding
+    the batched pytree once per request."""
+    sl = jnp.asarray(list(slots), jnp.int32)
+
+    def fn(big, ax, small):
+        idx = [slice(None)] * big.ndim
+        idx[ax] = sl
+        return big.at[tuple(idx)].set(small.astype(big.dtype))
+    return _map_with_axis(fn, batched, multi)
+
+
 def reset_slot(batched: Dict, slot: int) -> Dict:
     """Zero a slot (request completed / evicted)."""
     def fn(big, ax, _):

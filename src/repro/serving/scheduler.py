@@ -23,6 +23,7 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serving import discipline, kv_cache
 from repro.serving.engine import Engine
@@ -71,6 +72,10 @@ class Scheduler:
         self.user_inflight: Dict[str, bool] = collections.defaultdict(bool)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.cache = engine.new_cache(n_slots, self.max_len)
+        # attention-only caches admit mixed-length groups via right-padding
+        # (pad KV is dead under the causal mask once the cursor is rewound);
+        # recurrent caches have no cursor and batch equal lengths only
+        self._pad_ok = set(self.cache.keys()) <= {"kv"}
         self.tokens = jnp.zeros((n_slots,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
@@ -132,21 +137,71 @@ class Scheduler:
         return self.queues[user].popleft()
 
     def _admit(self) -> None:
-        for slot in range(self.n_slots):
-            if self.slots[slot] is not None:
-                continue
+        """Refill free decode slots with ONE prefill + ONE ``insert_slots``
+        per admitted group (not per request).
+
+        Mixed-length prompts are right-padded to the group max: with causal
+        attention the pad tokens only write KV *after* every real token, and
+        each slot's write cursor is rewound to its real length, so decode
+        overwrites the pad KV before it ever becomes attendable — bit-exact
+        with per-request prefill.  Recurrent caches (SSM/xLSTM hybrids) have
+        no such cursor, so for them only equal-length groups are batched and
+        lengths fall back to per-group calls.
+        """
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted: List[Request] = []
+        for _ in free:
             req = self._next_request()
             if req is None:
-                return
-            prompt = req.prompt[None, :]                      # (1, S)
-            single = self.engine.new_cache(1, self.max_len)
-            logits, single = self.engine.prefill(prompt, single)
-            first = int(jnp.argmax(logits[0, -1]))
-            self.cache = kv_cache.insert_slot(self.cache, single, slot)
+                break
+            admitted.append(req)
+        if not admitted:
+            return
+        pairs = list(zip(free, admitted))
+        if self._pad_ok:
+            groups = [pairs]                       # attention-only: pad freely
+        else:
+            by_len: Dict[int, List] = {}
+            for slot, req in pairs:
+                by_len.setdefault(int(req.prompt.shape[0]), []).append((slot, req))
+            groups = list(by_len.values())
+        for group in groups:
+            self._prefill_group(group)
+
+    def _prefill_group(self, group) -> None:
+        slots = [slot for slot, _ in group]
+        reqs = [req for _, req in group]
+        lens = [int(r.prompt.shape[0]) for r in reqs]
+        S = max(lens)
+        if self._pad_ok:
+            # bucket the padded length to a power of two (>= 16) so the jit
+            # compile set stays O(n_slots * log max_len) instead of one
+            # program per distinct prompt length; extra pad KV is dead under
+            # the causal mask once the cursor is rewound (see below)
+            S = max(S, min(max(16, 1 << (S - 1).bit_length()), self.max_len))
+        prompts = jnp.stack([jnp.pad(r.prompt, (0, S - l))
+                             for r, l in zip(reqs, lens)])       # (B, S)
+        single = self.engine.new_cache(len(reqs), self.max_len)
+        logits, single = self.engine.prefill(prompts, single)
+        if S != min(lens) and "kv" in single:
+            # rewind each slot's KV write cursor to its real prompt length:
+            # pad KV beyond it is dead — overwritten by decode before the
+            # positional mask ever exposes it (stub caches carry no cursor)
+            single["kv"]["pos"] = jnp.broadcast_to(
+                jnp.asarray(lens, jnp.int32)[None, :],
+                single["kv"]["pos"].shape)
+        self.cache = kv_cache.insert_slots(self.cache, single, slots)
+        # ONE vectorized argmax + ONE host transfer for the first tokens
+        lens_arr = jnp.asarray(lens, jnp.int32)
+        firsts = jnp.argmax(
+            logits[jnp.arange(len(reqs)), lens_arr - 1], axis=-1
+        ).astype(jnp.int32)
+        self.tokens = self.tokens.at[jnp.asarray(slots, jnp.int32)].set(firsts)
+        for slot, req, l, first in zip(slots, reqs, lens,
+                                       np.asarray(firsts).tolist()):
             req.slot = slot
-            req.pos = int(prompt.shape[1])
+            req.pos = l
             req.generated = [first]
-            self.tokens = self.tokens.at[slot].set(first)
             self.slots[slot] = req
 
     # -- one decode step over the whole batch --------------------------------

@@ -441,12 +441,15 @@ class _FakeTokenizer:
 
 
 class _FakeEngine:
-    """Counts batched-cache creations: one per continuous-batch Scheduler."""
+    """Counts batched-cache creations (slot pool + one per admitted prefill
+    group) and prefill calls: a batched Scheduler refill must admit the whole
+    continuous batch with ONE prefill."""
     max_len = 64
 
     def __init__(self):
         self.batch_caches = 0
         self.generate_calls = 0
+        self.prefill_calls = 0
 
     def new_cache(self, batch, max_len):
         if batch > 1:
@@ -455,6 +458,7 @@ class _FakeEngine:
 
     def prefill(self, toks, cache):
         import jax.numpy as jnp
+        self.prefill_calls += 1
         logits = jnp.zeros((toks.shape[0], toks.shape[1], 50)).at[:, :, 7].set(1.0)
         return logits, cache
 
@@ -494,7 +498,9 @@ def test_request_batch_batches_verification_decodes():
                          service_type=ServiceType.MODEL_SELECTOR,
                          params={"threshold": 11.0}) for i in range(3)]
     out = bridge.request_batch(reqs)
-    assert e_small.batch_caches == 1 and e_big.batch_caches == 1
+    # one scheduler per consulted model: slot pool + ONE admitted group each
+    assert e_small.batch_caches == 2 and e_big.batch_caches == 2
+    assert e_small.prefill_calls == 1 and e_big.prefill_calls == 1
     assert e_small.generate_calls == 0 and e_big.generate_calls == 0
     for r in out:
         assert r.metadata.model_used == "fake-big"
@@ -510,5 +516,6 @@ def test_request_batch_skips_m2_batch_when_verified():
                          service_type=ServiceType.MODEL_SELECTOR)
             for i in range(3)]
     out = bridge.request_batch(reqs)   # planted judge scores 10 >= 8
-    assert e_small.batch_caches == 1 and e_big.batch_caches == 0
+    assert e_small.prefill_calls == 1 and e_big.prefill_calls == 0
+    assert e_small.batch_caches == 2 and e_big.batch_caches == 0
     assert all(r.metadata.model_used == "fake-small" for r in out)

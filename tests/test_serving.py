@@ -95,6 +95,56 @@ def test_scheduler_batches_multiple_users(engine):
     assert live >= 3   # concurrent decode slots in use
 
 
+def test_batched_admit_exact_vs_single_request(engine):
+    """A mixed-length refill is ONE padded prefill call, and greedy decode
+    matches per-request generation bit-for-bit (right-padding is dead KV
+    under the causal mask once the write cursor is rewound)."""
+    prompts = [jnp.arange(4 + i, dtype=jnp.int32) + 3 for i in range(5)]
+    sch = Scheduler(engine, n_slots=5)
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=6))
+    calls0 = engine.n_prefill_calls
+    done = sch.run_to_completion()
+    assert engine.n_prefill_calls - calls0 == 1, "refill must batch prefill"
+    assert len(done) == 5
+    for r in done:
+        ref = engine.generate(prompts[r.rid][None, :], max_new=6)[0]
+        assert r.generated == [int(t) for t in np.asarray(ref)]
+
+
+def test_batched_admit_exact_hybrid_family():
+    """Recurrent-state caches can't absorb pad tokens: admission groups by
+    prompt length and stays exact."""
+    cfg = configs.get_reduced("zamba2-7b")
+    from repro.models import init_model as _init
+    eng = Engine(cfg, _init(cfg, jax.random.PRNGKey(0)), max_len=64)
+    prompts = [jnp.arange(l, dtype=jnp.int32) + 3 for l in (5, 7, 5, 7)]
+    sch = Scheduler(eng, n_slots=4)
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, user=f"v{i}", prompt=p, max_new=4))
+    calls0 = eng.n_prefill_calls
+    done = sch.run_to_completion()
+    assert eng.n_prefill_calls - calls0 == 2   # one per length group
+    for r in done:
+        ref = eng.generate(prompts[r.rid][None, :], max_new=4)[0]
+        assert r.generated == [int(t) for t in np.asarray(ref)]
+
+
+def test_insert_slots_multi(engine):
+    """insert_slots writes a B=k cache into k slots in one scatter per leaf,
+    equivalent to k insert_slot calls."""
+    big = engine.new_cache(4, 32)
+    multi = engine.new_cache(2, 32)
+    multi = jax.tree.map(lambda a: a + 1 if a.dtype != jnp.int32 else a, multi)
+    merged = kv_cache.insert_slots(big, multi, [1, 3])
+    seq = big
+    for i, slot in enumerate([1, 3]):
+        one = jax.tree.map(lambda a: a[:, i:i + 1], multi)
+        seq = kv_cache.insert_slot(seq, one, slot)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), merged, seq)
+
+
 def test_slot_insert_and_reset(engine):
     big = engine.new_cache(4, 32)
     single = engine.new_cache(1, 32)
