@@ -50,6 +50,7 @@ class SearchHit:
 class VectorStore:
     def __init__(self, dim: int, capacity: int = 1024, use_pallas: bool = False,
                  n_lists: Optional[int] = None, nprobe: int = 8,
+                 adaptive_nprobe: bool = False, nprobe_margin: float = 0.2,
                  crossover: int = 4096, imbalance_bound: float = 4.0,
                  kmeans_iters: int = 4, kmeans_sample: int = 32768,
                  seed: int = 0):
@@ -61,6 +62,13 @@ class VectorStore:
         # -- IVF knobs (see ROADMAP "Sublinear cache retrieval") ---------------
         self.n_lists = n_lists          # None = auto (~sqrt(N) at build time)
         self.nprobe = nprobe
+        # adaptive probing: when the top centroid's cosine margin over the
+        # runner-up exceeds ``nprobe_margin`` the query is tightly clustered
+        # and its neighbours almost surely live in the top list — probe
+        # nprobe//4 lists instead of nprobe; otherwise keep the static
+        # default.  Realized probe counts are disclosed via ``index_stats``.
+        self.adaptive_nprobe = adaptive_nprobe
+        self.nprobe_margin = nprobe_margin
         self.crossover = crossover
         self.imbalance_bound = imbalance_bound
         self.kmeans_iters = kmeans_iters
@@ -86,6 +94,8 @@ class VectorStore:
         self.n_ivf_searches = 0
         self.n_probes_total = 0           # inverted lists visited
         self.n_shortlist_rows = 0         # candidate rows scored on IVF path
+        self.n_adaptive_trims = 0         # queries probed below the default
+        self.last_realized_nprobe = 0.0   # mean lists/query, last IVF search
         self.n_reclusters = 0
         self.last_build_s = 0.0
 
@@ -204,6 +214,9 @@ class VectorStore:
             "n_ivf_searches": self.n_ivf_searches,
             "n_probes_total": self.n_probes_total,
             "n_shortlist_rows": self.n_shortlist_rows,
+            "adaptive_nprobe": self.adaptive_nprobe,
+            "n_adaptive_trims": self.n_adaptive_trims,
+            "last_realized_nprobe": self.last_realized_nprobe,
             "n_reclusters": self.n_reclusters,
             "last_build_s": self.last_build_s,
         }
@@ -233,13 +246,12 @@ class VectorStore:
             return [[] for _ in range(Q)]
         qn = queries / np.maximum(np.linalg.norm(queries, axis=1, keepdims=True), 1e-9)
         thr = np.broadcast_to(np.asarray(threshold, np.float32), (Q,)).copy()
-
-        if predicate is not None:
-            return self._search_predicate(qn, top_k, thr, predicate)
-
         tmask = np.broadcast_to(
             np.asarray(_ALL_TYPES if type_mask is None else type_mask,
                        np.int64).astype(np.int32), (Q,)).copy()
+
+        if predicate is not None:
+            return self._search_predicate(qn, top_k, thr, tmask, predicate)
         k = min(top_k, n)
         probe = self.nprobe if nprobe is None else nprobe
         if (self._centroids is None or n < self.crossover
@@ -269,7 +281,12 @@ class VectorStore:
             return self._gather_hits(scores, idx)
 
         self.n_ivf_searches += 1
-        probed = self._probe_lists(qn, probe)            # (Q, nprobe) list ids
+        # adaptive trimming applies only to the store default — an explicit
+        # per-call ``nprobe`` (e.g. the exhaustive-equivalence override) is
+        # always honoured verbatim
+        probed = self._probe_lists(qn, probe,
+                                   adaptive=self.adaptive_nprobe
+                                   and nprobe is None)  # (Q, nprobe) list ids
         if self.use_pallas:
             db, codes = self._db_arrays(n)
             shortlist = self._shortlist(probed)
@@ -280,12 +297,26 @@ class VectorStore:
         return self._gather_hits(scores, idx)
 
     # -- IVF probing -----------------------------------------------------------
-    def _probe_lists(self, qn: np.ndarray, nprobe: int) -> np.ndarray:
-        """(Q, nprobe) ids of the nearest inverted lists per query."""
+    def _probe_lists(self, qn: np.ndarray, nprobe: int,
+                     adaptive: bool = False) -> np.ndarray:
+        """(Q, nprobe) ids of the nearest inverted lists per query, -1-padded
+        for queries whose probe count was adaptively trimmed (the top
+        centroid's score margin dominates, so the tail lists are skipped)."""
         nprobe = max(1, min(nprobe, len(self._centroids)))
         csims = qn @ self._centroids.T
         probed = np.argpartition(-csims, nprobe - 1, axis=1)[:, :nprobe]
-        self.n_probes_total += probed.size
+        if adaptive and nprobe > 1 and csims.shape[1] >= 2:
+            top2 = -np.partition(-csims, 1, axis=1)[:, :2]
+            trim = (top2[:, 0] - top2[:, 1]) >= self.nprobe_margin
+            if trim.any():
+                # order candidates by score so trimming keeps the NEAREST
+                order = np.argsort(-np.take_along_axis(csims, probed, 1),
+                                   axis=1, kind="stable")
+                probed = np.take_along_axis(probed, order, 1)
+                probed[trim, max(1, nprobe // 4):] = -1
+                self.n_adaptive_trims += int(trim.sum())
+        self.n_probes_total += int((probed >= 0).sum())
+        self.last_realized_nprobe = float((probed >= 0).sum(axis=1).mean())
         return probed
 
     def _shortlist(self, probed: np.ndarray) -> np.ndarray:
@@ -294,9 +325,9 @@ class VectorStore:
         Q = probed.shape[0]
         rows = [np.concatenate(
             [self._ivf_order[self._ivf_bounds[li]:self._ivf_bounds[li + 1]]
-             for li in probed[qi]] +
-            [np.asarray(sum((self._overflow[li] for li in probed[qi]), []),
-                        np.int32)])
+             for li in probed[qi] if li >= 0] +
+            [np.asarray(sum((self._overflow[li] for li in probed[qi]
+                             if li >= 0), []), np.int32)])
             for qi in range(Q)]
         lens = [r.size for r in rows]
         self.n_shortlist_rows += int(sum(lens))
@@ -318,7 +349,8 @@ class VectorStore:
         by_list: dict = {}
         for qi in range(Q):
             for li in probed[qi]:
-                by_list.setdefault(int(li), []).append(qi)
+                if li >= 0:
+                    by_list.setdefault(int(li), []).append(qi)
         per_q_s: List[List[np.ndarray]] = [[] for _ in range(Q)]
         per_q_r: List[List[np.ndarray]] = [[] for _ in range(Q)]
         per_q_c: List[List[np.ndarray]] = [[] for _ in range(Q)]
@@ -395,10 +427,13 @@ class VectorStore:
         return out
 
     def _search_predicate(self, qn: np.ndarray, top_k: int, thr: np.ndarray,
-                          predicate) -> List[List[SearchHit]]:
+                          tmask: np.ndarray, predicate
+                          ) -> List[List[SearchHit]]:
         """Flat scan + Python predicate, widening the candidate set
         geometrically until ``top_k`` survivors per query (or exhaustion) —
-        heavily filtered stores never silently return fewer hits than exist."""
+        heavily filtered stores never silently return fewer hits than exist.
+        A ``type_mask`` passed alongside the predicate still filters (both
+        must pass)."""
         self.n_flat_searches += 1      # opaque predicates always scan flat
         n = len(self._payloads)
         db, _ = self._db_arrays(n)
@@ -413,6 +448,8 @@ class VectorStore:
                 for j in range(k):
                     s, i = float(scores[qi, j]), int(idx[qi, j])
                     if s < thr[qi]:
+                        continue
+                    if not (int(tmask[qi]) >> int(self._codes[i])) & 1:
                         continue
                     payload = self._payloads[i]
                     if not predicate(payload):

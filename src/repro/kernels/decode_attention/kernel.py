@@ -1,13 +1,27 @@
-"""Pallas TPU kernel: single-token GQA decode attention over a deep KV cache.
+"""Pallas TPU kernels: single-token GQA decode attention over a deep KV cache.
 
-Decode is memory-bound: the whole KV cache streams HBM -> VMEM once.  The
-grid is (B * Hkv, T/TT), KV-time minor, carrying online-softmax state in
-VMEM.  All G query heads of a KV group ride along in one (G, D) block so the
-cache is read once per KV head, not once per Q head — this is the GQA
-arithmetic-intensity win (G MACs per loaded KV element).
+Two layouts share the same online-softmax core:
+
+* **dense** — per-slot contiguous (B, T, Hkv, D) caches.  The grid is
+  (B * Hkv, T/TT), KV-time minor, carrying online-softmax state in VMEM.
+  All G query heads of a KV group ride along in one (G, D) block so the
+  cache is read once per KV head, not once per Q head — this is the GQA
+  arithmetic-intensity win (G MACs per loaded KV element).
+* **paged** — a single global (N, P, Hkv, D) page pool plus per-slot page
+  tables (B, MP).  The scalar-prefetched table drives the per-tile KV
+  gather: the BlockSpec index map reads ``table[b, page]`` before the tile
+  runs, so each grid step DMAs exactly one physical page and the
+  online-softmax state is carried across pages.  Slots sharing prefix pages
+  (copy-on-write prefix cache) stream the same physical page without any
+  per-slot copy.  Unmapped table entries (-1) are clamped to page 0 and die
+  under the positional mask (a logical page is unmapped iff it starts past
+  ``pos``).
 
 Masking uses the per-request position (scalar-prefetched), so continuous-
-batching slots with different lengths share one kernel launch.
+batching slots with different lengths share one kernel launch.  The paged
+kernel additionally takes ``window`` as a prefetched scalar so families with
+per-layer traced sliding windows (gemma3 local:global) dispatch through one
+program.
 """
 from __future__ import annotations
 
@@ -106,4 +120,108 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array
         out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
         interpret=interpret,
     )(pos.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, Hq, D)
+
+
+def _paged_kernel(tbl_ref, pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, n_kv_heads: int,
+                  scale: float, softcap: float):
+    bk = pl.program_id(0)
+    pi = pl.program_id(1)
+    n_p = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = bk // n_kv_heads
+    pos = pos_ref[b]
+    win = win_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)         # (P, D)
+    v = v_ref[0, 0].astype(jnp.float32)         # (P, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, P)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos <= pos
+    mask = mask & jnp.where(win > 0, pos - kpos < win, True)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...][:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_cur = l_scr[...][:, 0] * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_cur[:, None]
+    l_scr[...] = l_cur[:, None]
+    acc_scr[...] = acc
+
+    @pl.when(pi == n_p - 1)
+    def _write():
+        denom = jnp.maximum(l_scr[...][:, 0], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, table: jax.Array,
+                                  pos: jax.Array, window=0,
+                                  softcap: float = 0.0,
+                                  interpret: bool = True):
+    """q: (B, Hq, D); pages: (N, P, Hkv, D); table: (B, MP) int32 physical
+    page per logical page (-1 = unmapped); pos: (B,). Returns (B, Hq, D).
+
+    The grid is (B * Hkv, MP): one physical page DMA per step, selected by
+    the scalar-prefetched page table inside the BlockSpec index map.  A page
+    whose logical slot starts past ``pos`` is fully masked, so unmapped
+    entries are simply clamped to a valid physical index and contribute
+    nothing (no separate live-page count is needed; on TPU a production
+    variant would early-out those steps).
+    """
+    B, Hq, D = q.shape
+    _, P, Hkv, _ = k_pages.shape
+    MP = table.shape[1]
+    G = Hq // Hkv
+    grid = (B * Hkv, MP)
+    scale = 1.0 / (D ** 0.5)
+    # (N, P, Hkv, D) -> (N, Hkv, P, D): a (1, 1, P, D) block is one page of
+    # one KV head, addressed by (table[b, pi], h)
+    kf = k_pages.transpose(0, 2, 1, 3)
+    vf = v_pages.transpose(0, 2, 1, 3)
+    qf = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    tbl = jnp.maximum(table, 0).astype(jnp.int32)
+    win = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (1,))
+
+    def kv_map(bk, pi, tbl_ref, pos_ref, win_ref):
+        return (tbl_ref[bk // Hkv, pi], bk % Hkv, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page=P, n_kv_heads=Hkv, scale=scale,
+                          softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, D), lambda bk, pi, t, p, w: (bk, 0, 0)),
+                pl.BlockSpec((1, 1, P, D), kv_map),
+                pl.BlockSpec((1, 1, P, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, G, D), lambda bk, pi, t, p, w: (bk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tbl, pos.astype(jnp.int32), win, qf, kf, vf)
     return out.reshape(B, Hq, D)

@@ -1,12 +1,21 @@
-"""Jit'd dispatch wrapper for GQA decode attention (kernel <-> oracle)."""
+"""Jit'd dispatch wrappers for GQA decode attention (kernel <-> oracle).
+
+``decode_attention`` serves dense per-slot caches; ``paged_decode_attention``
+serves the global page pool + per-slot page tables of the paged KV cache
+(serving/kv_cache.PagePool).  Both pairs are parity-tested in
+tests/test_kernels.py; the jnp oracles are the CPU fallback and the in-jit
+path the model uses when ``cfg.use_pallas`` is off.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window",))
@@ -20,3 +29,18 @@ def decode_attention(q, k_cache, v_cache, pos, window: int = 0,
         return decode_attention_pallas(q, k_cache, v_cache, pos,
                                        window=window, interpret=interpret)
     return _ref_jit(q, k_cache, v_cache, pos, window)
+
+
+def paged_decode_attention(q, k_pages, v_pages, table, pos, window=0,
+                           softcap: float = 0.0,
+                           use_pallas: bool = False, interpret: bool = True):
+    """``window`` may be a python int or a traced int scalar (per-layer
+    sliding windows are scanned *data* in the gemma3 stack), so there is no
+    static-argname jit wrapper here — callers are jitted model steps.
+    ``softcap`` is static (a ModelConfig constant)."""
+    if use_pallas:
+        return paged_decode_attention_pallas(q, k_pages, v_pages, table, pos,
+                                             window=window, softcap=softcap,
+                                             interpret=interpret)
+    return paged_decode_attention_ref(q, k_pages, v_pages, table, pos, window,
+                                      softcap=softcap)

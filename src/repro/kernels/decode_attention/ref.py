@@ -6,20 +6,45 @@ import jax.numpy as jnp
 
 
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                         pos: jax.Array, window: int = 0) -> jax.Array:
+                         pos: jax.Array, window: int = 0,
+                         softcap: float = 0.0) -> jax.Array:
     """q: (B, Hq, D); caches: (B, T, Hkv, D); pos: (B,) index of the query
-    token (attends to kv positions <= pos). Returns (B, Hq, D)."""
+    token (attends to kv positions <= pos); ``softcap`` > 0 applies the
+    grok-style score cap c*tanh(s/c). Returns (B, Hq, D)."""
     B, Hq, D = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     scale = 1.0 / jnp.sqrt(jnp.float32(D))
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
     kpos = jnp.arange(T)[None, :]
     mask = kpos <= pos[:, None]
-    if window > 0:
-        mask = mask & (pos[:, None] - kpos < window)
+    w = jnp.asarray(window, jnp.int32)          # static int or traced scalar
+    mask = mask & jnp.where(w > 0, pos[:, None] - kpos < w, True)
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
-    w = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgt,btkd->bkgd", w, v_cache.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, table: jax.Array,
+                               pos: jax.Array, window: int = 0,
+                               softcap: float = 0.0) -> jax.Array:
+    """Oracle for paged decode attention: gather each slot's pages back into a
+    dense (B, MP*P, Hkv, D) cache in logical order, then run the dense oracle.
+
+    q: (B, Hq, D); pages: (N, P, Hkv, D) global pools; table: (B, MP) int32
+    physical page per logical page slot (-1 = unmapped; only pages covering
+    kv positions <= pos are read, so unmapped tails are clamped to page 0 and
+    die under the positional mask); pos: (B,). Returns (B, Hq, D).
+    """
+    B = q.shape[0]
+    _, P, Hkv, D = k_pages.shape
+    MP = table.shape[1]
+    tbl = jnp.maximum(table, 0)
+    k = k_pages[tbl].reshape(B, MP * P, Hkv, D)
+    v = v_pages[tbl].reshape(B, MP * P, Hkv, D)
+    return decode_attention_ref(q, k, v, pos, window, softcap=softcap)

@@ -28,6 +28,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool + copy-on-write prefix sharing "
+                         "(attention-only archs)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch)
@@ -35,13 +39,16 @@ def main() -> None:
     tok = ByteTokenizer()
     engine = Engine(cfg, params, max_len=128)
     sched = Scheduler(engine, n_slots=args.slots,
-                      sampler=SamplerConfig(temperature=args.temperature, top_k=40))
+                      sampler=SamplerConfig(temperature=args.temperature, top_k=40),
+                      paged=args.paged, page_size=args.page_size)
 
-    prompts = [f"user question number {i} about topic {i % 5}"
-               for i in range(args.requests)]
+    # a shared "course prompt" prefix ahead of each question gives the paged
+    # prefix trie something to share, like the paper's classroom workload
+    prompts = [f"course CS101 system prompt; user question number {i} "
+               f"about topic {i % 5}" for i in range(args.requests)]
     t0 = time.time()
     for i, p in enumerate(prompts):
-        ids = tok.encode(p)[:32]
+        ids = tok.encode(p)[:64]
         sched.submit(Request(rid=i, user=f"user{i % args.users}",
                              prompt=jnp.asarray(ids, jnp.int32),
                              max_new=args.max_new))
@@ -50,6 +57,11 @@ def main() -> None:
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s, slots={args.slots})")
+    if args.paged:
+        print(f"  paged: prefill_tokens={sched.prefill_tokens} "
+              f"shared_tokens={sched.shared_tokens} "
+              f"peak_slots={sched.peak_live} cow={sched.pool.n_cow} "
+              f"evictions={sched.pool.n_evictions}")
     for r in done[:4]:
         print(f"  [{r.user} rid={r.rid}] -> {tok.decode(r.generated)[:48]!r}")
 

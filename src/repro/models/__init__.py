@@ -10,7 +10,13 @@ from repro.models import encdec, transformer, vlm
 from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
 
 __all__ = ["ModelConfig", "ShapeConfig", "INPUT_SHAPES", "init_model", "apply_model",
-           "init_cache", "transformer", "encdec", "vlm"]
+           "init_cache", "init_paged_cache", "transformer", "encdec", "vlm"]
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int) -> Dict:
+    """Paged KV cache (attention-only families) — see transformer.init_paged_cache."""
+    return transformer.init_paged_cache(cfg, batch, n_pages, page_size, max_pages)
 
 
 def init_model(cfg: ModelConfig, key: jax.Array) -> Dict:

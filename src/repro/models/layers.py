@@ -229,6 +229,8 @@ def attention(
     if cache is None:
         out = _sdpa(q, k, v, cfg, q_pos=positions, kv_pos=positions,
                     window=window, causal=causal)
+    elif "k_pages" in cache:
+        out, new_cache = _decode_attn_paged(q, k, v, cache, cfg, window=window)
     elif _use_context_parallel_decode(cfg, S, cache):
         out, new_cache = _decode_attn_context_parallel(
             q, k, v, cache, cfg, positions=positions, window=window)
@@ -277,6 +279,49 @@ def _scatter_kv_onehot(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Ar
     any_hit = hit.any(axis=2)[..., None, None]                  # (B, Smax, 1, 1)
     upd = jnp.einsum("bts,bshd->bthd", hit.astype(buf.dtype), new.astype(buf.dtype))
     return jnp.where(any_hit, upd, buf)
+
+
+def _decode_attn_paged(q, k_new, v_new, cache, cfg: ModelConfig, *, window):
+    """Single-token decode against the paged KV pool (serving/kv_cache).
+
+    ``cache`` is one layer's slice of the paged cache: ``k_pages``/``v_pages``
+    (N, P, Hkv, hd) global pools, ``table`` (B, MP) physical page per logical
+    page (-1 = unmapped) and ``pos`` (B,) write cursors.  The new token's KV
+    is scattered into each slot's current page — the scheduler guarantees
+    that page is uniquely owned (copy-on-write forks shared pages before
+    admission), so slots never write into pages other slots read.  The
+    attention read dispatches to the paged decode kernel family
+    (kernels/decode_attention): Pallas when ``cfg.use_pallas``, the jnp
+    oracle otherwise.  ``window`` may be traced (per-layer scanned data).
+    """
+    from repro.kernels.decode_attention import ops as da_ops
+
+    if q.shape[1] != 1:
+        raise ValueError(
+            "paged KV attention is single-token decode only (got S="
+            f"{q.shape[1]}); prefill against a paged cache goes through the "
+            "scheduler's dense gather->prefill->scatter path")
+    B = q.shape[0]
+    P = cache["k_pages"].shape[1]
+    pos = cache["pos"]                                    # (B,)
+    pg = jnp.clip(pos // P, 0, cache["table"].shape[1] - 1)
+    phys = jnp.take_along_axis(cache["table"], pg[:, None], axis=1)[:, 0]
+    phys = jnp.maximum(phys, 0)                           # unmapped -> page 0*
+    off = pos % P
+    # *the scheduler maps the write page before every step; the clamp only
+    # guards compile-time-only tracing with empty tables
+    k_pages = cache["k_pages"].at[phys, off].set(
+        k_new[:, 0].astype(cache["k_pages"].dtype))
+    v_pages = cache["v_pages"].at[phys, off].set(
+        v_new[:, 0].astype(cache["v_pages"].dtype))
+    out = da_ops.paged_decode_attention(
+        q[:, 0], k_pages, v_pages, cache["table"], pos, window=window,
+        softcap=cfg.logit_softcap, use_pallas=cfg.use_pallas,
+        interpret=jax.default_backend() != "tpu")
+    Hq, hd = q.shape[2], q.shape[3]
+    new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                 "table": cache["table"], "pos": pos + 1}
+    return out.reshape(B, 1, Hq * hd), new_cache
 
 
 def _use_context_parallel_decode(cfg: ModelConfig, S: int, cache) -> bool:
@@ -368,6 +413,27 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((n_layers, batch), jnp.int32),
+    }
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                        page_size: int, max_pages: int, n_layers: int,
+                        dtype=None) -> Dict:
+    """Paged layout: one global page pool per layer + per-slot page tables.
+
+    HBM is bounded by ``n_pages * page_size`` tokens per layer regardless of
+    the slot count — short requests stop reserving ``max_len`` of cache, and
+    prefix pages are shared across slots (see serving/kv_cache.PagePool).
+    ``table`` and ``pos`` are replicated over the layer axis so the cache
+    stays a leading-scan-dim pytree like the dense layout.
+    """
+    dtype = dtype or cfg.dtype
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k_pages": jnp.zeros(shape, dtype),
+        "v_pages": jnp.zeros(shape, dtype),
+        "table": jnp.full((n_layers, batch, max_pages), -1, jnp.int32),
         "pos": jnp.zeros((n_layers, batch), jnp.int32),
     }
 

@@ -191,6 +191,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int) -> Dict:
+    """Paged KV cache (attention-only families): a global page pool + per-
+    slot page tables instead of one dense (B, max_len) region per slot.  The
+    serving scheduler owns the page allocator / prefix trie metadata
+    (serving/kv_cache.PagePool); recurrent families have no paged layout."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(f"paged KV cache requires an attention-only family, "
+                         f"got {cfg.family!r}")
+    return {"paged": L.init_paged_kv_cache(cfg, batch, n_pages, page_size,
+                                           max_pages, cfg.n_layers)}
+
+
 def _tile(a: jax.Array, lead: Tuple[int, ...]) -> jax.Array:
     return jnp.zeros(lead + a.shape, a.dtype)
 
@@ -224,12 +237,15 @@ def forward(
     aux = jnp.float32(0.0)
     new_cache = None
 
+    # attention caches arrive under "kv" (dense per-slot) or "paged" (global
+    # page pool + page tables); the stacks scan either layout transparently
+    kv_key = "paged" if (cache is not None and "paged" in cache) else "kv"
     if fam in ("dense", "vlm"):
-        x, new_kv = _dense_stack(params, x, cfg, positions, cache)
-        new_cache = None if new_kv is None else {"kv": new_kv}
+        x, new_kv = _dense_stack(params, x, cfg, positions, cache, kv_key)
+        new_cache = None if new_kv is None else {kv_key: new_kv}
     elif fam == "moe":
-        x, new_kv, aux = _moe_stack(params, x, cfg, positions, cache)
-        new_cache = None if new_kv is None else {"kv": new_kv}
+        x, new_kv, aux = _moe_stack(params, x, cfg, positions, cache, kv_key)
+        new_cache = None if new_kv is None else {kv_key: new_kv}
     elif fam == "hybrid":
         x, new_cache = _hybrid_stack(params, x, cfg, positions, cache)
     elif fam == "ssm":
@@ -280,8 +296,8 @@ def _slice_cache(kv: Optional[Dict], reshape_groups: Optional[Tuple[int, int]] =
     return kv
 
 
-def _dense_stack(params, x, cfg, positions, cache):
-    kv = None if cache is None else cache["kv"]
+def _dense_stack(params, x, cfg, positions, cache, kv_key="kv"):
+    kv = None if cache is None else cache[kv_key]
     windows = _window_array(cfg)  # config-derived constant (not a parameter)
 
     def body(carry, xs):
@@ -296,8 +312,8 @@ def _dense_stack(params, x, cfg, positions, cache):
     return x, new_kv
 
 
-def _moe_stack(params, x, cfg, positions, cache):
-    kv = None if cache is None else cache["kv"]
+def _moe_stack(params, x, cfg, positions, cache, kv_key="kv"):
+    kv = None if cache is None else cache[kv_key]
     il = cfg.moe_interleave
     if il == 1:
         def body(carry, xs):

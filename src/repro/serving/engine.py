@@ -19,10 +19,17 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models import apply_model, init_cache, vlm
+from repro.models import apply_model, init_cache, init_paged_cache, vlm
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SamplerConfig, sample
+
+# ``generate`` polls the device-side done mask only every N steps: the
+# ``bool(done.all())`` early-exit forces a host round-trip per token, which
+# stalls the dispatch pipeline far longer than the handful of speculative
+# decode steps the coarser poll may run past the last EOS.
+DONE_POLL_EVERY = 8
 
 
 class Engine:
@@ -33,15 +40,26 @@ class Engine:
         self._prefill = jax.jit(functools.partial(prefill_step, cfg=cfg))
         self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
         # telemetry: the batched admission path must collapse a refill's
-        # prefills into one call per group (benchmarks/serving_latency.py)
+        # prefills into one call per group, and the decode loop must not
+        # sync the done mask per token (benchmarks/serving_latency.py)
         self.n_prefill_calls = 0
+        self.n_prefill_tokens = 0
+        self.n_host_syncs = 0
 
     def prefill(self, tokens: jax.Array, cache: Dict, **extras):
         self.n_prefill_calls += 1
+        self.n_prefill_tokens += int(tokens.shape[0]) * int(tokens.shape[1])
         return self._prefill(self.params, tokens, cache, **extras)
 
     def new_cache(self, batch: int, max_len: Optional[int] = None) -> Dict:
         return init_cache(self.cfg, batch, max_len or self.max_len)
+
+    def new_paged_cache(self, batch: int, n_pages: int, page_size: int,
+                        max_pages: int) -> Dict:
+        """Global page pool + per-slot page tables (attention-only families);
+        allocator/trie metadata lives with the scheduler
+        (serving/kv_cache.PagePool)."""
+        return init_paged_cache(self.cfg, batch, n_pages, page_size, max_pages)
 
     def decode(self, tokens: jax.Array, positions: jax.Array, cache: Dict):
         return self._decode(self.params, tokens, positions, cache)
@@ -67,17 +85,33 @@ class Engine:
         out = []
         pos = S + n_prefix
         done = jnp.zeros((B,), bool)
+        all_done_hist = []        # device-side per-step all-done flags
         for i in range(max_new):
             out.append(tok)
             key, sub = jax.random.split(key)
             positions = jnp.full((B, 1), pos + i, jnp.int32)
             logits, cache = self.decode(tok[:, None], positions, cache)
             tok = sample(logits[:, -1], sub, sampler)
-            done = done | (tok == eos_id)
-            if bool(done.all()):
-                out.extend([tok] * 0)
-                break
+            # early-exit bookkeeping stays on device; the host polls only
+            # every DONE_POLL_EVERY steps, and only when EOS can fire at all
+            # (eos_id < 0 can never complete early — zero syncs)
+            if eos_id >= 0:
+                done = done | (tok == eos_id)
+                all_done_hist.append(done.all())
+                if (i + 1) % DONE_POLL_EVERY == 0 and self._poll_done(done):
+                    break
+        if all_done_hist:
+            # trim the speculative tail: tokens after the step at which every
+            # row had emitted EOS match the per-step-sync loop bit-for-bit,
+            # because sampling keys are split per step regardless of polling
+            hist = np.asarray(jnp.stack(all_done_hist))
+            first = int(np.argmax(hist)) if hist.any() else len(out) - 1
+            out = out[:first + 1]
         return jnp.stack(out, axis=1)
+
+    def _poll_done(self, done: jax.Array) -> bool:
+        self.n_host_syncs += 1
+        return bool(done.all())
 
 
 def prefill_step(params: Dict, tokens: jax.Array, cache: Dict, *,

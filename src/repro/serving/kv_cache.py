@@ -1,17 +1,45 @@
-"""Slot-wise cache surgery for continuous batching.
+"""Slot-wise cache surgery + the paged KV page pool for continuous batching.
 
-Caches are family-specific pytrees with the *scan* dimension leading (see
-models/transformer.init_cache); the batch/slot axis therefore sits at a
-per-subtree position.  These helpers insert a freshly prefilled single-slot
-cache into a batched cache, and reset slots, without the scheduler knowing
-the family's cache layout.
+Two cache layouts coexist:
+
+* **Dense** — family-specific pytrees with the *scan* dimension leading (see
+  models/transformer.init_cache); the batch/slot axis sits at a per-subtree
+  position.  ``insert_slot(s)`` / ``reset_slot(s)`` splice freshly prefilled
+  single/multi-slot caches into a batched cache (and zero finished slots)
+  without the scheduler knowing the family's cache layout.
+
+* **Paged** (attention-only families) — ONE global HBM tensor of fixed-size
+  pages per layer, ``(L, n_pages, page_size, Hkv, hd)``, plus per-slot page
+  tables ``(L, B, max_pages)`` mapping logical page slots to physical pages
+  (-1 = unmapped) and per-slot write cursors.  The device tensors live in
+  the engine cache dict under the ``"paged"`` key; the *metadata* lives here:
+
+  - :class:`PagePool` — refcounted page allocator: ``alloc`` / ``share`` /
+    ``deref`` / copy-on-write ``cow``, page-budget reservations so lazily
+    allocated decode pages can never fail mid-flight, and LRU eviction of
+    prefix-cache pages nobody references under pressure;
+  - :class:`PrefixTrie` — a token-hash prefix trie at page granularity:
+    admitted prompts are chunked into ``page_size``-token pieces and walked
+    against the trie, so N requests sharing a course prompt map onto the
+    SAME already-prefilled physical pages (prefill once, decode against
+    shared pages until divergence).  Full pages of every admitted prompt are
+    inserted back, each holding one trie refcount that keeps the page warm
+    until evicted.
+
+  Refcount discipline: a page's count is (#slot tables referencing it) +
+  (1 if a trie node retains it).  ``refcount == 1`` with trie retention
+  means "cached but unreferenced" — the evictable set.  Because a slot that
+  shares a page also shares all its trie ancestors, non-evictable nodes are
+  closed under ancestry, so evicting LRU *leaves* always makes progress.
 """
 from __future__ import annotations
 
-from typing import Dict
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # batch-axis position per top-level cache key (see init_cache layouts)
 _BATCH_AXIS = {
@@ -70,9 +98,255 @@ def reset_slot(batched: Dict, slot: int) -> Dict:
     return _map_with_axis(fn, batched)
 
 
+def reset_slots(batched: Dict, slots) -> Dict:
+    """Zero len(slots) slots in ONE masked pass per leaf, mirroring
+    ``insert_slots`` — end-of-step teardown of a whole finished group costs
+    one pytree rebuild, not one per request."""
+    slots = list(slots)
+    if not slots:
+        return batched
+    sl = jnp.asarray(slots, jnp.int32)
+
+    def fn(big, ax, _):
+        idx = jnp.arange(big.shape[ax])
+        hit = (idx[:, None] == sl[None, :]).any(axis=1)
+        shape = [1] * big.ndim
+        shape[ax] = big.shape[ax]
+        return jnp.where(hit.reshape(shape), jnp.zeros((), big.dtype), big)
+    return _map_with_axis(fn, batched)
+
+
 def slot_positions(cache: Dict) -> jax.Array:
     """Current per-slot write positions (B,) — from the attention cache if
     present, else zeros (pure-SSM caches track no position)."""
     if "kv" in cache:
         return cache["kv"]["pos"][0]
+    if "paged" in cache:
+        return cache["paged"]["pos"][0]
     raise KeyError("cache has no positional record; track positions in the scheduler")
+
+
+# --------------------------------------------------------------------------
+# Paged pool metadata: prefix trie + refcounted page allocator
+# --------------------------------------------------------------------------
+class _TrieNode:
+    __slots__ = ("chunk", "page", "parent", "children", "last_used")
+
+    def __init__(self, chunk: Tuple[int, ...], page: int, parent):
+        self.chunk = chunk
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.last_used = 0
+
+
+class PrefixTrie:
+    """Token-hash prefix trie at page granularity.
+
+    Each node maps one ``page_size``-token chunk (keyed by its token tuple —
+    the dict hash is the "token hash", tuple equality guards collisions) to
+    the physical page holding that chunk's prefilled KV.  ``match`` walks the
+    longest chain of full-page chunks; ``insert`` extends the chain with
+    newly prefilled pages.  Node timestamps feed LRU eviction.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root: Dict[Tuple[int, ...], _TrieNode] = {}
+        self._clock = itertools.count(1)
+        self.n_nodes = 0
+
+    def _chunks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        P = self.page_size
+        return [tuple(tokens[i:i + P]) for i in range(0, len(tokens) // P * P, P)]
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Physical pages of the longest fully-cached page-aligned prefix."""
+        pages: List[int] = []
+        level = self.root
+        now = next(self._clock)
+        for chunk in self._chunks(tokens):
+            node = level.get(chunk)
+            if node is None:
+                break
+            node.last_used = now
+            pages.append(node.page)
+            level = node.children
+        return pages
+
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:
+        """Record ``pages`` as the chain for tokens' full-page chunks.
+        Returns the pages NEWLY retained (the caller owes each one trie
+        refcount); chunks already present are only LRU-touched."""
+        chunks = self._chunks(tokens)
+        assert len(pages) >= len(chunks)
+        newly: List[int] = []
+        level, parent = self.root, None
+        now = next(self._clock)
+        for chunk, page in zip(chunks, pages):
+            node = level.get(chunk)
+            if node is None:
+                node = _TrieNode(chunk, int(page), parent)
+                level[chunk] = node
+                self.n_nodes += 1
+                newly.append(int(page))
+            node.last_used = now
+            level, parent = node.children, node
+        return newly
+
+    def _leaves(self):
+        stack = list(self.root.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            else:
+                yield node
+
+    def evict_lru_leaf(self, evictable) -> Optional[int]:
+        """Remove the least-recently-used leaf whose page satisfies
+        ``evictable(page)`` (i.e. only the trie still references it).
+        Returns the page, or None when nothing qualifies."""
+        best: Optional[_TrieNode] = None
+        for leaf in self._leaves():
+            if evictable(leaf.page) and (best is None
+                                         or leaf.last_used < best.last_used):
+                best = leaf
+        if best is None:
+            return None
+        siblings = best.parent.children if best.parent is not None else self.root
+        del siblings[best.chunk]
+        self.n_nodes -= 1
+        return best.page
+
+
+class PagePool:
+    """Refcounted allocator over ``n_pages`` physical KV pages.
+
+    A page's refcount = #slot page-table references + (1 if a
+    :class:`PrefixTrie` node retains it).  The pool guarantees that a slot
+    admitted under :meth:`try_admit` can lazily :meth:`alloc_reserved` its
+    remaining pages at any later decode step without failure: admission
+    reserves budget against ``n_pages`` minus pinned (non-evictable, in-use)
+    pages, and allocation falls back to evicting LRU unreferenced prefix
+    pages from the trie when the free list runs dry.
+    """
+
+    def __init__(self, n_pages: int, page_size: int,
+                 trie: Optional[PrefixTrie] = None, sentinel: bool = False):
+        assert n_pages > (1 if sentinel else 0) and page_size > 0
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.trie = trie
+        self.refcount = np.zeros(n_pages, np.int32)
+        self.in_trie = np.zeros(n_pages, bool)
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        # ``sentinel`` permanently pins page 0 as the trash page: idle decode
+        # slots and clamped unmapped table entries read/write it, so it may
+        # never be handed to a request (its refcount never reaches 0)
+        if sentinel:
+            self.free.remove(0)
+            self.refcount[0] = 1
+        self.reserved = 0
+        # telemetry
+        self.n_allocs = 0
+        self.n_evictions = 0
+        self.n_cow = 0
+        self.n_shared = 0
+
+    # -- accounting ----------------------------------------------------------
+    def used(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def evictable(self) -> int:
+        """Pages only the trie references — reclaimable under pressure."""
+        return int(((self.refcount == 1) & self.in_trie).sum())
+
+    def headroom(self) -> int:
+        """Pages available to new reservations: total minus hard-pinned
+        (slot-referenced) pages minus already-promised reservations."""
+        pinned = self.used() - self.evictable()
+        return self.n_pages - pinned - self.reserved
+
+    # -- admission -----------------------------------------------------------
+    def try_admit(self, n_new: int, shared: Sequence[int] = ()) -> bool:
+        """Reserve ``n_new`` future pages and take one slot reference on each
+        page in ``shared`` (trie-matched prefix pages), atomically.
+
+        Sharing a page that was evictable pins it, shrinking headroom by one
+        — both costs are checked together so a granted admission can never
+        strand a later ``alloc_reserved``.
+        """
+        shared = list(shared)
+        pins = sum(1 for p in shared if self.refcount[p] == 1 and self.in_trie[p])
+        if n_new + pins > self.headroom():
+            return False
+        for p in shared:
+            assert self.refcount[p] > 0, "sharing a free page"
+            self.refcount[p] += 1
+        self.n_shared += len(shared)
+        self.reserved += n_new
+        return True
+
+    def cancel_reservation(self, n: int) -> None:
+        assert 0 <= n <= self.reserved
+        self.reserved -= n
+
+    # -- page ops ------------------------------------------------------------
+    def _take_free(self) -> int:
+        if not self.free:
+            assert self.trie is not None, "pool exhausted and no trie to evict"
+            page = self.trie.evict_lru_leaf(
+                lambda p: self.refcount[p] == 1 and self.in_trie[p])
+            assert page is not None, "pool exhausted (reservation bug)"
+            self.n_evictions += 1
+            self.in_trie[page] = False
+            self._deref(page)
+            assert self.free, "eviction failed to free a page"
+        page = self.free.pop()
+        assert self.refcount[page] == 0
+        self.refcount[page] = 1
+        self.n_allocs += 1
+        return page
+
+    def alloc_reserved(self) -> int:
+        """Allocate one page against an outstanding reservation (never fails
+        while the admission-time invariant holds)."""
+        assert self.reserved > 0, "alloc without reservation"
+        self.reserved -= 1
+        return self._take_free()
+
+    def cow(self) -> int:
+        """Copy-on-write target: a fresh page (against reservation) whose
+        contents the caller copies from the shared source page on device
+        before the first write."""
+        self.n_cow += 1
+        return self.alloc_reserved()
+
+    def retain_in_trie(self, page: int) -> None:
+        """Add the trie's retention reference (page stays warm after every
+        slot drops it, until LRU-evicted)."""
+        assert self.refcount[page] > 0 and not self.in_trie[page]
+        self.refcount[page] += 1
+        self.in_trie[page] = True
+
+    def _deref(self, page: int) -> None:
+        assert self.refcount[page] > 0, f"double free of page {page}"
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            assert not self.in_trie[page]
+            self.free.append(page)
+
+    def release(self, pages: Sequence[int], unused_reservation: int = 0) -> None:
+        """Drop one slot reference from each page (slot teardown) and return
+        any reservation the slot never consumed."""
+        for p in pages:
+            self._deref(int(p))
+        self.cancel_reservation(unused_reservation)
+
+    def check(self) -> None:
+        """Internal consistency (exercised by the hypothesis suite)."""
+        assert len(self.free) == int((self.refcount == 0).sum())
+        assert not self.in_trie[self.refcount == 0].any()
+        assert self.reserved >= 0
+        assert self.used() - self.evictable() + self.reserved <= self.n_pages

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler with per-user FIFO queues.
+"""Continuous-batching scheduler with per-user FIFO queues + paged KV admission.
 
 The paper's deployment funnels every WhatsApp request through a per-user
 FIFO (AWS SQS) so responses arrive in order (§4).  This scheduler reproduces
@@ -8,8 +8,22 @@ that discipline inside the serving engine:
   user's queue;
 * a fixed pool of decode slots (the continuous batch); freed slots are
   refilled from user queues round-robin;
-* admission = single-request prefill + slot insertion into the batched KV
-  cache (serving/kv_cache.insert_slot).
+* admission = prefill + cache insertion, with two cache backends:
+
+  - **dense** (default): one (n_slots, max_len) KV region per slot; a refill
+    is ONE right-padded prefill + ONE ``kv_cache.insert_slots``; finished
+    slots are torn down in ONE ``kv_cache.reset_slots`` pass per step;
+  - **paged** (``paged=True``, attention-only families): fixed-size pages in
+    one global HBM tensor, per-slot page tables, and a refcounted
+    :class:`~repro.serving.kv_cache.PagePool` with copy-on-write prefix
+    sharing.  ``_admit`` consults a token-hash :class:`PrefixTrie`: prompts
+    whose leading pages are already prefilled (classroom workloads — shared
+    course prompts, assignment scaffolds) skip their prefill entirely and
+    decode against the SAME physical pages; only the unmatched suffix runs
+    through the model.  Admission is **page-budgeted** (reserve pages, not
+    slots: short requests stop pinning ``max_len`` of HBM), decode pages are
+    allocated lazily the step a slot's cursor crosses a page boundary, and
+    cold prefix pages are LRU-evicted under pressure.
 
 This is the substrate under LLMBridge's model pool: every pool model gets an
 Engine + Scheduler pair.
@@ -19,7 +33,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +68,19 @@ class Request:
     done: bool = False
 
 
+def _pow2_bucket(n: int, lo: int = 16) -> int:
+    """Pad a length to a power of two (>= lo) so the jit compile set stays
+    logarithmic in the length range instead of one program per length."""
+    return max(lo, 1 << (max(n, 1) - 1).bit_length())
+
+
 class Scheduler:
     def __init__(self, engine: Engine, n_slots: int = 8,
                  sampler: SamplerConfig = SamplerConfig(),
                  max_len: Optional[int] = None, seed: int = 0,
-                 tier_penalty: float = 0.25, starvation_s: float = 2.0):
+                 tier_penalty: float = 0.25, starvation_s: float = 2.0,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefix_cache: bool = True):
         self.engine = engine
         self.n_slots = n_slots
         self.sampler = sampler
@@ -71,19 +93,49 @@ class Scheduler:
         self.queues: Dict[str, collections.deque] = collections.defaultdict(collections.deque)
         self.user_inflight: Dict[str, bool] = collections.defaultdict(bool)
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.cache = engine.new_cache(n_slots, self.max_len)
-        # attention-only caches admit mixed-length groups via right-padding
-        # (pad KV is dead under the causal mask once the cursor is rewound);
-        # recurrent caches have no cursor and batch equal lengths only
-        self._pad_ok = set(self.cache.keys()) <= {"kv"}
+        self.paged = paged
+        if paged:
+            # page-budgeted HBM: n_pages * page_size cache tokens total; the
+            # default matches the dense footprint (n_slots * max_len) + the
+            # pinned trash page, so paged-vs-dense sweeps compare equal HBM
+            self.page_size = page_size
+            self.max_pages = -(-self.max_len // page_size)
+            self.n_pages = n_pages or (n_slots * self.max_pages + 1)
+            self.trie = kv_cache.PrefixTrie(page_size) if prefix_cache else None
+            self.pool = kv_cache.PagePool(self.n_pages, page_size,
+                                          trie=self.trie, sentinel=True)
+            self.cache = engine.new_paged_cache(n_slots, self.n_pages,
+                                               page_size, self.max_pages)
+            if set(self.cache["paged"].keys()) != {"k_pages", "v_pages",
+                                                   "table", "pos"}:
+                raise ValueError("paged scheduling needs a paged KV cache")
+            self._tables = np.full((n_slots, self.max_pages), -1, np.int32)
+            self._slot_unreserved = np.zeros(n_slots, np.int64)
+            self._pad_ok = True
+        else:
+            self.cache = engine.new_cache(n_slots, self.max_len)
+            # attention-only caches admit mixed-length groups via right-padding
+            # (pad KV is dead under the causal mask once the cursor is rewound);
+            # recurrent caches have no cursor and batch equal lengths only
+            self._pad_ok = set(self.cache.keys()) <= {"kv"}
         self.tokens = jnp.zeros((n_slots,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
         self._rr_start = 0                # round-robin start index over users
         self._users_order: List[str] = []
+        # telemetry for the paged-vs-dense sweep (benchmarks/serving_latency)
+        self.prefill_tokens = 0           # real (unpadded) tokens prefilled
+        self.shared_tokens = 0            # prompt tokens served from the trie
+        self.peak_live = 0                # max concurrently admitted slots
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self.paged and int(req.prompt.shape[0]) + 1 > self.max_len:
+            # reject up front — a raise mid-admission would strand the popped
+            # request and leave its user permanently marked in-flight
+            raise ValueError(
+                f"request {req.rid}: prompt of {int(req.prompt.shape[0])} "
+                f"tokens cannot decode within max_len={self.max_len}")
         req.submitted_at = time.monotonic()
         if req.user not in self.queues:
             self._users_order.append(req.user)
@@ -136,7 +188,19 @@ class Scheduler:
         self._rr_start = (self._rr_start + i + 1) % len(users)
         return self.queues[user].popleft()
 
+    def _put_back(self, req: Request) -> None:
+        """Return an un-admittable head to the front of its queue (page
+        budget exhausted); it stays next in line without losing FIFO order."""
+        self.queues[req.user].appendleft(req)
+        self.user_inflight[req.user] = False
+
     def _admit(self) -> None:
+        if self.paged:
+            self._admit_paged()
+        else:
+            self._admit_dense()
+
+    def _admit_dense(self) -> None:
         """Refill free decode slots with ONE prefill + ONE ``insert_slots``
         per admitted group (not per request).
 
@@ -178,11 +242,12 @@ class Scheduler:
             # compile set stays O(n_slots * log max_len) instead of one
             # program per distinct prompt length; extra pad KV is dead under
             # the causal mask once the cursor is rewound (see below)
-            S = max(S, min(max(16, 1 << (S - 1).bit_length()), self.max_len))
+            S = max(S, min(_pow2_bucket(S), self.max_len))
         prompts = jnp.stack([jnp.pad(r.prompt, (0, S - l))
                              for r, l in zip(reqs, lens)])       # (B, S)
         single = self.engine.new_cache(len(reqs), self.max_len)
         logits, single = self.engine.prefill(prompts, single)
+        self.prefill_tokens += sum(lens)
         if S != min(lens) and "kv" in single:
             # rewind each slot's KV write cursor to its real prompt length:
             # pad KV beyond it is dead — overwritten by decode before the
@@ -204,12 +269,251 @@ class Scheduler:
             req.generated = [first]
             self.slots[slot] = req
 
+    # -- paged admission -----------------------------------------------------
+    def _match_prefix(self, tokens: List[int]) -> Tuple[List[int], int, bool]:
+        """Trie lookup for an admitted prompt.
+
+        Returns (shared physical pages, suffix start, cow) where the suffix
+        ``tokens[suffix_start:]`` still needs a prefill.  A prompt fully
+        covered by cached pages re-runs only its LAST token (the model must
+        emit that token's logits), and because that write lands inside a
+        shared page, the page is copy-on-write forked (``cow=True`` — the
+        last matched page is the fork source, not shared)."""
+        if self.trie is None:
+            return [], 0, False
+        matched = self.trie.match(tokens)
+        if not matched:
+            return [], 0, False
+        if len(matched) * self.page_size == len(tokens):
+            return matched, len(tokens) - 1, True
+        return matched, len(matched) * self.page_size, False
+
+    def _admit_paged(self) -> None:
+        """Page-budgeted refill against the prefix trie, in sharing waves.
+
+        Per candidate head: match the longest fully-cached page-aligned
+        prefix, then reserve only the pages the request can still touch
+        (suffix + worst-case decode) — ``PagePool.try_admit`` also pins the
+        matched pages, so admission capacity is HBM pages, not slot count.
+        Matched pages are never prefilled again: the group prefill gathers
+        their KV straight out of the pool, runs ONLY the suffix tokens, and
+        scatters the new KV into freshly allocated pages.  Decode pages are
+        NOT pre-allocated here — ``step`` maps them lazily when a slot's
+        cursor crosses a page boundary, against the admission reservation.
+
+        A refill runs in **waves** so a classroom burst shares within one
+        refill: a head about to prefill a page chunk that an earlier member
+        of the current wave is already prefilling is deferred to the next
+        wave, where the chunk has landed in the trie and is shared instead
+        of recomputed — N simultaneous students still prefill the course
+        prompt once.
+        """
+        while True:
+            admitted, blocked = self._admit_wave()
+            if not admitted or blocked:
+                return
+
+    def _admit_wave(self) -> Tuple[int, bool]:
+        """One admission wave. Returns (n admitted, hard-blocked?) — hard
+        blockage (page budget) ends the refill; a sharing deferral only ends
+        the wave."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return 0, True
+        P = self.page_size
+        plan = []          # (slot, req, tokens, shared, suffix_start, cow_src)
+        cow_pairs: List[Tuple[int, int]] = []
+        wave_chunks: set = set()       # chunks being prefilled by this wave
+        blocked = False
+        for slot in free:
+            req = self._next_request()
+            if req is None:
+                break
+            tokens = [int(t) for t in np.asarray(req.prompt)]
+            L = len(tokens)
+            # the page table is max_pages wide: cap the decode budget so the
+            # write cursor stays inside it (the dense layout silently clamp-
+            # corrupts its tail past max_len; the paged layout must never
+            # write into pages it doesn't own).  ``submit`` rejected prompts
+            # with no decode room at all, so the cap is always >= 1.
+            req.max_new = min(req.max_new, self.max_len - L)
+            matched, suffix_start, cow = self._match_prefix(tokens)
+            shared = matched[:-1] if cow else matched
+            new_chunks = {tuple(tokens[i:i + P])
+                          for i in range(len(matched) * P, L // P * P, P)}
+            if new_chunks & wave_chunks:
+                # an earlier wave member is prefilling this chunk: defer to
+                # the next wave, where the trie will serve it
+                self._put_back(req)
+                break
+            # worst-case write cursor: decode steps run while
+            # len(generated) < max_new, writing at L .. L+max_new-2 (at least
+            # one step always runs), so positions 0 .. L+max(max_new-1, 1)-1
+            # must be page-covered
+            total_pages = -(-(L + max(req.max_new - 1, 1)) // P)
+            n_new = total_pages - len(shared)
+            if not self.pool.try_admit(n_new, shared):
+                # restore queue/inflight state BEFORE any raise: a popped
+                # request must never be stranded
+                self._put_back(req)
+                if not any(s is not None for s in self.slots) and not plan:
+                    # an empty batch could not fit it: permanently infeasible
+                    raise ValueError(
+                        f"request {req.rid} needs {n_new} pages but the pool "
+                        f"can never free more than {self.pool.headroom()}")
+                blocked = True
+                break
+            wave_chunks |= new_chunks
+            self._tables[slot, :len(shared)] = shared
+            # allocate the suffix's pages now (they are written this refill);
+            # the rest of the reservation covers lazily mapped decode pages
+            first_new = suffix_start // P
+            n_prompt_pages = -(-L // P)
+            for pi in range(first_new, n_prompt_pages):
+                if cow and pi == first_new:
+                    page = self.pool.cow()
+                    cow_pairs.append((matched[-1], page))
+                else:
+                    page = self.pool.alloc_reserved()
+                self._tables[slot, pi] = page
+            self._slot_unreserved[slot] = n_new - (n_prompt_pages - first_new)
+            self.shared_tokens += suffix_start
+            plan.append((slot, req, tokens, shared, suffix_start,
+                         matched[-1] if cow else -1))
+        if not plan:
+            return 0, blocked
+        paged = self.cache["paged"]
+        if cow_pairs:
+            # copy-on-write forks: duplicate each shared source page into the
+            # slot-private target before any write can touch it (one batched
+            # device copy per leaf for the whole refill)
+            srcs = jnp.asarray([s for s, _ in cow_pairs], jnp.int32)
+            tgts = jnp.asarray([t for _, t in cow_pairs], jnp.int32)
+            paged = {
+                **paged,
+                "k_pages": paged["k_pages"].at[:, tgts].set(paged["k_pages"][:, srcs]),
+                "v_pages": paged["v_pages"].at[:, tgts].set(paged["v_pages"][:, srcs]),
+            }
+        self.cache = {"paged": self._prefill_suffixes(paged, plan)}
+        return len(plan), blocked
+
+    def _prefill_suffixes(self, paged: Dict, plan) -> Dict:
+        """ONE suffix prefill for the admitted group.
+
+        Shared-prefix KV is gathered from the pool into a transient dense
+        cache (page table order), the right-padded suffix tokens run one
+        decode-shaped model call at their absolute positions (pad KV is dead
+        under the causal mask, as in the dense refill), and the suffix KV is
+        scattered back into the freshly allocated pages — prefill FLOPs are
+        proportional to the UNMATCHED suffix only.
+        """
+        P = self.page_size
+        slots = [p[0] for p in plan]
+        lens = [len(p[2]) for p in plan]
+        starts = [p[4] for p in plan]
+        suf = [l - s for l, s in zip(lens, starts)]
+        S = min(_pow2_bucket(max(suf)), max(self.max_len, max(suf)))
+        # the transient dense cache must hold every padded write position
+        # (starts + S) IN BOUNDS: jax clamps out-of-range scatters, which
+        # would smear pad KV onto the last real position — so round UP to
+        # whole pages, never down to the table width (columns past a slot's
+        # mapped pages gather the trash page and stay causally masked)
+        n_ctx_pages = -(-_pow2_bucket(max(st + S for st in starts)) // P)
+        T_ctx = n_ctx_pages * P
+        B = len(plan)
+        tbl = np.zeros((B, n_ctx_pages), np.int32)                  # (B, pages)
+        width = min(n_ctx_pages, self.max_pages)
+        tbl[:, :width] = np.maximum(self._tables[slots, :width], 0)
+        gather = jnp.asarray(tbl)
+        k_ctx = paged["k_pages"][:, gather]        # (L, B, pages, P, H, hd)
+        v_ctx = paged["v_pages"][:, gather]
+        Ln = k_ctx.shape[0]
+        k_ctx = k_ctx.reshape(Ln, B, T_ctx, *k_ctx.shape[4:])
+        v_ctx = v_ctx.reshape(Ln, B, T_ctx, *v_ctx.shape[4:])
+        starts_dev = jnp.asarray(starts, jnp.int32)
+        tmp = {"kv": {"k": k_ctx, "v": v_ctx,
+                      "pos": jnp.broadcast_to(starts_dev[None], (Ln, B))}}
+        toks = jnp.stack([
+            jnp.pad(jnp.asarray(p[2][p[4]:], jnp.int32), (0, S - (l - p[4])))
+            for p, l in zip(plan, lens)])                           # (B, S)
+        positions = starts_dev[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        logits, tmp = self.engine.decode(toks, positions, tmp)
+        self.prefill_tokens += sum(suf)
+        self.engine.n_prefill_tokens += B * S
+        # scatter the suffix KV into the pool: ONE fused scatter per leaf
+        bb, tt, phys, off = [], [], [], []
+        for b, (slot, _req, _tok, _sh, start, _cw) in enumerate(plan):
+            for t in range(start, lens[b]):
+                bb.append(b)
+                tt.append(t)
+                phys.append(self._tables[slot, t // P])
+                off.append(t % P)
+        bb, tt = jnp.asarray(bb, jnp.int32), jnp.asarray(tt, jnp.int32)
+        phys, off = jnp.asarray(phys, jnp.int32), jnp.asarray(off, jnp.int32)
+        paged = {
+            **paged,
+            "k_pages": paged["k_pages"].at[:, phys, off].set(tmp["kv"]["k"][:, bb, tt]),
+            "v_pages": paged["v_pages"].at[:, phys, off].set(tmp["kv"]["v"][:, bb, tt]),
+            "table": paged["table"].at[:, jnp.asarray(slots, jnp.int32), :].set(
+                jnp.asarray(self._tables[slots])[None]),
+            "pos": paged["pos"].at[:, jnp.asarray(slots, jnp.int32)].set(
+                jnp.asarray(lens, jnp.int32)[None]),
+        }
+        # register every full prompt page for future sharing (the trie takes
+        # one retention ref per newly inserted page; matched chains are only
+        # LRU-touched, so copy-on-write forks stay slot-private)
+        if self.trie is not None:
+            for slot, _req, tokens, _sh, _st, _cw in plan:
+                chain = [int(p) for p in self._tables[slot, :len(tokens) // P]]
+                for page in self.trie.insert(tokens, chain):
+                    self.pool.retain_in_trie(page)
+        # ONE vectorized argmax + ONE host transfer for the first tokens
+        last = jnp.asarray([l - 1 - st for l, st in zip(lens, starts)], jnp.int32)
+        firsts = jnp.argmax(
+            logits[jnp.arange(B), last], axis=-1).astype(jnp.int32)
+        self.tokens = self.tokens.at[jnp.asarray(slots, jnp.int32)].set(firsts)
+        for (slot, req, tokens, _sh, _st, _cw), first in zip(
+                plan, np.asarray(firsts).tolist()):
+            req.slot = slot
+            req.pos = len(tokens)
+            req.generated = [first]
+            self.slots[slot] = req
+        self.peak_live = max(self.peak_live,
+                             sum(1 for s in self.slots if s is not None))
+        return paged
+
+    def _map_decode_pages(self) -> None:
+        """Lazily map the page each live slot's cursor is about to write.
+        Pages come out of the slot's admission reservation, so allocation
+        can't fail; the device table is patched with ONE scatter."""
+        upd: List[Tuple[int, int, int]] = []       # (slot, logical, physical)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pi = req.pos // self.page_size
+            if self._tables[slot, pi] < 0:
+                page = self.pool.alloc_reserved()
+                self._slot_unreserved[slot] -= 1
+                assert self._slot_unreserved[slot] >= 0
+                self._tables[slot, pi] = page
+                upd.append((slot, pi, page))
+        if upd:
+            paged = self.cache["paged"]
+            s = jnp.asarray([u[0] for u in upd], jnp.int32)
+            li = jnp.asarray([u[1] for u in upd], jnp.int32)
+            pg = jnp.asarray([u[2] for u in upd], jnp.int32)
+            table = paged["table"].at[:, s, li].set(pg[None])
+            self.cache = {"paged": {**paged, "table": table}}
+
     # -- one decode step over the whole batch --------------------------------
     def step(self) -> List[Request]:
         self._admit()
         live = [s for s in self.slots if s is not None]
         if not live:
             return []
+        self.peak_live = max(self.peak_live, len(live))
+        if self.paged:
+            self._map_decode_pages()
         positions = jnp.array(
             [[s.pos if s is not None else 0] for s in self.slots], jnp.int32)
         logits, self.cache = self.engine.decode(self.tokens[:, None], positions, self.cache)
@@ -228,11 +532,32 @@ class Scheduler:
                 done_now.append(req)
                 self.slots[slot] = None
                 self.user_inflight[req.user] = False
-                self.cache = kv_cache.reset_slot(self.cache, slot)
             else:
                 self.tokens = self.tokens.at[slot].set(tok)
+        if done_now:
+            self._teardown([r.slot for r in done_now])
         self.finished.extend(done_now)
         return done_now
+
+    def _teardown(self, slots: List[int]) -> None:
+        """Batched end-of-step teardown: ONE masked pass (dense) or ONE
+        table/cursor reset (paged) for every slot finished this step, plus
+        page refcount release on the pool."""
+        if not self.paged:
+            self.cache = kv_cache.reset_slots(self.cache, slots)
+            return
+        for slot in slots:
+            pages = self._tables[slot][self._tables[slot] >= 0]
+            self.pool.release(pages.tolist(), int(self._slot_unreserved[slot]))
+            self._tables[slot] = -1
+            self._slot_unreserved[slot] = 0
+        paged = self.cache["paged"]
+        sl = jnp.asarray(slots, jnp.int32)
+        self.cache = {"paged": {
+            **paged,
+            "table": paged["table"].at[:, sl, :].set(-1),
+            "pos": paged["pos"].at[:, sl].set(0),
+        }}
 
     def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):

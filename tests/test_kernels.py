@@ -150,6 +150,119 @@ def test_decode_attention_matches_ref(B, T, Hq, Hkv, hd, win, dtype):
                                np.asarray(o_pl, np.float32), atol=atol)
 
 
+# --------------------------------------------------------------------------
+# paged decode attention (page-table-gathered KV, shared prefix pages)
+# --------------------------------------------------------------------------
+def _paged_case(B, MP, P, Hkv, hd, Hq, seed=0, share=False, dtype=jnp.float32):
+    """Random page pool + per-slot tables mapping MP logical pages each.
+    With ``share`` the first page is the same physical page for every slot
+    (prefix sharing); pos values deliberately straddle page boundaries."""
+    rng = np.random.default_rng(seed)
+    n_pages = B * MP + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    kp = jax.random.normal(ks[0], (n_pages, P, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[1], (n_pages, P, Hkv, hd), dtype)
+    q = jax.random.normal(ks[2], (B, Hq, hd), dtype)
+    perm = rng.permutation(n_pages)[:B * MP].reshape(B, MP)
+    table = perm.astype(np.int32)
+    if share:
+        table[:, 0] = table[0, 0]
+    # mixed slot lengths: one slot exactly at a page boundary, one mid-page,
+    # one in the first page, rest random
+    pos = rng.integers(0, MP * P, size=(B,))
+    pos[0] = P - 1
+    pos[min(1, B - 1)] = P            # first token of the second page
+    pos[min(2, B - 1)] = MP * P - 1   # full table
+    # unmapped logical tail: -1 entries past each slot's last live page
+    for b in range(B):
+        table[b, pos[b] // P + 1:] = -1
+    return q, kp, vp, jnp.asarray(table), jnp.asarray(pos, jnp.int32)
+
+
+@pytest.mark.parametrize("B,MP,P,Hq,Hkv,hd,win", [
+    (4, 4, 16, 4, 2, 32, 0), (3, 2, 32, 8, 2, 16, 0), (2, 8, 8, 4, 4, 64, 0),
+    (4, 4, 16, 4, 2, 32, 19), (2, 3, 64, 8, 1, 32, 70), (1, 5, 16, 2, 2, 128, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_ref(B, MP, P, Hq, Hkv, hd, win, dtype):
+    q, kp, vp, tbl, pos = _paged_case(B, MP, P, Hkv, hd, Hq, seed=B + MP,
+                                      dtype=dtype)
+    o_ref = da_ops.paged_decode_attention(q, kp, vp, tbl, pos, window=win,
+                                          use_pallas=False)
+    o_pl = da_ops.paged_decode_attention(q, kp, vp, tbl, pos, window=win,
+                                         use_pallas=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pl, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_paged_matches_dense_gather(use_pallas):
+    """Paged attention over a scattered page table == dense attention over
+    the same KV laid out contiguously (the layouts must be equivalent for
+    copy-on-write sharing to be transparent to the model)."""
+    B, MP, P, Hkv, hd, Hq, win = 3, 4, 16, 2, 32, 4, 21
+    q, kp, vp, tbl, pos = _paged_case(B, MP, P, Hkv, hd, Hq, seed=7)
+    tcl = jnp.maximum(tbl, 0)
+    k_dense = kp[tcl].reshape(B, MP * P, Hkv, hd)
+    v_dense = vp[tcl].reshape(B, MP * P, Hkv, hd)
+    o_dense = da_ops.decode_attention(q, k_dense, v_dense, pos, window=win,
+                                      use_pallas=use_pallas)
+    o_paged = da_ops.paged_decode_attention(q, kp, vp, tbl, pos, window=win,
+                                            use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(o_dense), np.asarray(o_paged),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [15.0, 30.0])
+def test_paged_decode_attention_softcap(softcap):
+    """Grok-style score softcap parity (the MoE pool model decodes through
+    the paged path too)."""
+    q, kp, vp, tbl, pos = _paged_case(3, 3, 16, 2, 32, 4, seed=11)
+    o_ref = da_ops.paged_decode_attention(q, kp, vp, tbl, pos,
+                                          softcap=softcap, use_pallas=False)
+    o_pl = da_ops.paged_decode_attention(q, kp, vp, tbl, pos,
+                                         softcap=softcap, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl), atol=2e-5)
+
+
+def test_paged_decode_attention_shared_prefix_page():
+    """Slots whose tables point at the SAME physical prefix page see the same
+    prefix KV: outputs equal a run where the page is physically duplicated."""
+    B, MP, P, Hkv, hd, Hq = 4, 3, 16, 2, 16, 4
+    q, kp, vp, tbl, pos = _paged_case(B, MP, P, Hkv, hd, Hq, seed=3,
+                                      share=True)
+    pos = jnp.full((B,), MP * P - 1, jnp.int32)   # all pages live
+    tbl = jnp.where(tbl < 0, 0, tbl)
+    o_shared = da_ops.paged_decode_attention(q, kp, vp, tbl, pos,
+                                             use_pallas=True)
+    # duplicate the shared page into distinct physical pages
+    kp2, vp2, tbl2 = np.asarray(kp).copy(), np.asarray(vp).copy(), np.asarray(tbl).copy()
+    free = [i for i in range(kp2.shape[0]) if i not in set(tbl2.ravel().tolist())]
+    for b in range(1, B):
+        kp2[free[b - 1]] = kp2[tbl2[b, 0]]
+        vp2[free[b - 1]] = vp2[tbl2[b, 0]]
+        tbl2[b, 0] = free[b - 1]
+    o_dup = da_ops.paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kp2), jnp.asarray(vp2),
+        jnp.asarray(tbl2), pos, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(o_shared), np.asarray(o_dup))
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 4), MP=st.integers(1, 5),
+       P=st.sampled_from([8, 16, 32]), Hkv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 2, 4]), hd=st.sampled_from([16, 32]),
+       win=st.sampled_from([0, 5, 17]), seed=st.integers(0, 10 ** 6))
+def test_paged_decode_attention_property(B, MP, P, Hkv, g, hd, win, seed):
+    q, kp, vp, tbl, pos = _paged_case(B, MP, P, Hkv, hd, Hkv * g, seed=seed)
+    o_ref = da_ops.paged_decode_attention(q, kp, vp, tbl, pos, window=win,
+                                          use_pallas=False)
+    o_pl = da_ops.paged_decode_attention(q, kp, vp, tbl, pos, window=win,
+                                         use_pallas=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl), atol=2e-5)
+
+
 def test_decode_attention_respects_position():
     """Entries beyond pos must not affect the output."""
     B, T, H, hd = 1, 32, 2, 16

@@ -1,0 +1,192 @@
+"""Property tests for the paged-KV page allocator and prefix trie
+(serving/kv_cache.PagePool / PrefixTrie).
+
+Random admit / lazy-alloc / release / evict schedules must never leak or
+double-free a page, refcounts must equal the independently tracked
+(slot references + trie retention + sentinel) at every step, and trie
+matches must only ever return pages whose recorded tokens equal the query
+prefix (hash collisions are guarded by token equality).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import PagePool, PrefixTrie
+
+P = 4   # page size for all schedules
+
+
+def _walk_pages(trie: PrefixTrie):
+    """Every page currently retained by a trie node, with its chunk chain."""
+    out = {}
+    stack = [(node, (node.chunk,)) for node in trie.root.values()]
+    while stack:
+        node, chain = stack.pop()
+        out[node.page] = chain
+        stack.extend((c, chain + (c.chunk,)) for c in node.children.values())
+    return out
+
+
+class _Harness:
+    """Drives a PagePool + PrefixTrie the way the paged scheduler does,
+    mirroring every reference it takes so refcounts can be cross-checked."""
+
+    def __init__(self, n_pages):
+        self.trie = PrefixTrie(P)
+        self.pool = PagePool(n_pages, P, trie=self.trie, sentinel=True)
+        self.slots = {}          # sid -> {"pages": [...], "unreserved": int}
+        self._sid = 0
+
+    def admit(self, tokens, extra_pages):
+        matched = self.trie.match(tokens)
+        cow = matched and len(matched) * P == len(tokens)
+        shared = matched[:-1] if cow else matched
+        suffix_start = (len(tokens) - 1) if cow else len(shared) * P
+        total = -(-(len(tokens) + max(extra_pages, 1)) // P)
+        n_new = total - len(shared)
+        if not self.pool.try_admit(n_new, shared):
+            return None
+        pages = list(shared)
+        n_prompt_pages = -(-len(tokens) // P)
+        for pi in range(suffix_start // P, n_prompt_pages):
+            pages.append(self.pool.cow() if (cow and pi == suffix_start // P)
+                         else self.pool.alloc_reserved())
+        sid = self._sid = self._sid + 1
+        self.slots[sid] = {
+            "pages": pages,
+            "unreserved": n_new - (n_prompt_pages - suffix_start // P),
+        }
+        for page in self.trie.insert(tokens, pages[:len(tokens) // P]):
+            self.pool.retain_in_trie(page)
+        return sid
+
+    def lazy_alloc(self, sid):
+        slot = self.slots[sid]
+        if slot["unreserved"] > 0:
+            slot["pages"].append(self.pool.alloc_reserved())
+            slot["unreserved"] -= 1
+
+    def release(self, sid):
+        slot = self.slots.pop(sid)
+        self.pool.release(slot["pages"], slot["unreserved"])
+
+    def check(self):
+        self.pool.check()
+        trie_pages = _walk_pages(self.trie)
+        expected = np.zeros(self.pool.n_pages, np.int64)
+        expected[0] += 1                       # sentinel pin
+        for page in trie_pages:
+            expected[page] += 1
+        for slot in self.slots.values():
+            for page in slot["pages"]:
+                expected[page] += 1
+        np.testing.assert_array_equal(self.pool.refcount, expected)
+        assert set(np.nonzero(self.pool.in_trie)[0]) == set(trie_pages)
+        # no page is in two places at once: free pages are unreferenced
+        free = set(self.pool.free)
+        assert len(free) == len(self.pool.free), "duplicate page in free list"
+        assert all(expected[p] == 0 for p in free)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_page_pool_random_schedule_never_leaks(data):
+    n_pages = data.draw(st.integers(6, 40))
+    h = _Harness(n_pages)
+    # a tiny token alphabet + short prompts makes prefix collisions (and so
+    # sharing, COW, and eviction) common
+    n_ops = data.draw(st.integers(5, 40))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(["admit", "lazy", "release"]))
+        if op == "admit":
+            n_tok = data.draw(st.integers(1, 4 * P))
+            tokens = data.draw(st.lists(st.integers(0, 2), min_size=n_tok,
+                                        max_size=n_tok))
+            h.admit(tokens, data.draw(st.integers(1, 4)))
+        elif op == "lazy" and h.slots:
+            h.lazy_alloc(data.draw(st.sampled_from(sorted(h.slots))))
+        elif op == "release" and h.slots:
+            h.release(data.draw(st.sampled_from(sorted(h.slots))))
+        h.check()
+    # drain: after every slot releases, only trie retention + sentinel remain
+    for sid in sorted(h.slots):
+        h.release(sid)
+    h.check()
+    assert (h.pool.refcount[1:] <= 1).all()
+    assert h.pool.reserved == 0
+    # total conservation: every page is free, trie-retained, or the sentinel
+    assert len(h.pool.free) + h.pool.trie.n_nodes + 1 == n_pages
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_trie_matches_are_token_exact(data):
+    trie = PrefixTrie(P)
+    pool = PagePool(64, P, trie=trie, sentinel=True)
+    pool.reserved = 63            # hand-managed: draw pages directly
+    for _ in range(data.draw(st.integers(1, 8))):
+        n_chunks = data.draw(st.integers(1, 3))
+        tokens = data.draw(st.lists(st.integers(0, 2), min_size=n_chunks * P,
+                                    max_size=n_chunks * P))
+        pages = [pool.alloc_reserved() for _ in range(n_chunks)]
+        for page in trie.insert(tokens, pages):
+            pool.retain_in_trie(page)
+    chains = _walk_pages(trie)
+    q = data.draw(st.lists(st.integers(0, 2), min_size=0, max_size=4 * P))
+    matched = trie.match(q)
+    for depth, page in enumerate(matched):
+        chain = chains[page]
+        assert sum(len(c) for c in chain) == (depth + 1) * P
+        flat = [t for c in chain for t in c]
+        assert flat == list(q[:(depth + 1) * P]), "match returned wrong tokens"
+
+
+def test_pool_eviction_frees_lru_leaf_first():
+    trie = PrefixTrie(P)
+    pool = PagePool(4, P, trie=trie, sentinel=True)   # 3 usable pages
+    assert pool.try_admit(2, [])
+    a = pool.alloc_reserved()
+    b = pool.alloc_reserved()
+    for page in trie.insert([0] * (2 * P), [a, b]):
+        pool.retain_in_trie(page)
+    pool.release([a, b])          # slot done; chain [a -> b] cached
+    assert pool.evictable() == 2
+    assert pool.try_admit(2, [])
+    c = pool.alloc_reserved()     # free page left
+    d = pool.alloc_reserved()     # pool dry -> must evict the LEAF (b) first
+    assert pool.n_evictions == 1
+    assert d == b and trie.match([0] * (2 * P)) == [a]
+    pool.release([c, d])
+
+
+def test_try_admit_rejects_beyond_headroom():
+    pool = PagePool(5, P, trie=PrefixTrie(P), sentinel=True)
+    assert not pool.try_admit(5, [])     # sentinel pins one page
+    assert pool.try_admit(4, [])
+    assert not pool.try_admit(1, [])     # fully reserved
+    pool.cancel_reservation(4)
+    pool.check()
+
+
+def test_sharing_an_evictable_page_pins_it():
+    trie = PrefixTrie(P)
+    pool = PagePool(4, P, trie=trie, sentinel=True)
+    assert pool.try_admit(1, [])
+    a = pool.alloc_reserved()
+    for page in trie.insert([1] * P, [a]):
+        pool.retain_in_trie(page)
+    pool.release([a])
+    assert pool.evictable() == 1 and pool.headroom() == 3
+    assert pool.try_admit(0, [a])        # share the cached page: pins it
+    assert pool.evictable() == 0 and pool.headroom() == 2
+    pool.release([a])
+    pool.check()
+
+
+def test_double_free_asserts():
+    pool = PagePool(3, P)
+    assert pool.try_admit(1, [])
+    a = pool.alloc_reserved()
+    pool.release([a])
+    with pytest.raises(AssertionError):
+        pool.release([a])

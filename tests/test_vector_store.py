@@ -111,6 +111,83 @@ def test_ivf_incremental_add_and_recluster():
     assert [x[0].payload for x in h] == [2000, 2001]
 
 
+def test_adaptive_nprobe_trims_dominant_queries():
+    """Queries sitting on a centroid (dominant top-1 margin) probe fewer
+    lists; ambiguous queries fall back to the static default — realized
+    probe counts are disclosed in index_stats."""
+    # 8 well-separated clusters indexed by 8 lists: each centroid dominates
+    # its neighbourhood (near-orthogonal unit vectors in 32-d)
+    vecs = _clustered(4000, 32, n_clusters=8, spread=0.05)
+    ivf = VectorStore(dim=32, crossover=512, n_lists=8, nprobe=4,
+                      adaptive_nprobe=True, nprobe_margin=0.2)
+    ivf.add(vecs, list(range(4000)))
+    assert ivf.index_stats()["backend"] == "ivf"
+    # on-centroid queries: maximal margin, must be trimmed
+    cents = ivf._centroids.copy()
+    ivf.search(cents, top_k=4)
+    st = ivf.index_stats()
+    sims = -np.sort(-(cents @ ivf._centroids.T), axis=1)
+    dominant = int(((sims[:, 0] - sims[:, 1]) >= 0.2).sum())
+    assert dominant >= 2, "geometry produced no dominant centroids"
+    assert st["n_adaptive_trims"] == dominant
+    assert st["last_realized_nprobe"] < 4
+    # recall on trimmed queries survives: the planted nearest neighbour of
+    # an on-centroid query lives in the top list
+    flat = VectorStore(dim=32)
+    flat.add(vecs, list(range(4000)))
+    got = ivf.search(cents, top_k=1)
+    want = flat.search(cents, top_k=1)
+    agree = np.mean([g[0].index == w[0].index for g, w in zip(got, want)])
+    assert agree >= 0.9, agree
+    # ambiguous (low-margin) queries keep the full static default: aim
+    # between two centroids
+    trims0 = ivf.index_stats()["n_adaptive_trims"]
+    mid = cents[:4] + cents[4:8]
+    mid /= np.maximum(np.linalg.norm(mid, axis=1, keepdims=True), 1e-9)
+    margins = np.sort(mid @ ivf._centroids.T, axis=1)
+    mid = mid[(margins[:, -1] - margins[:, -2]) < 0.2]
+    assert len(mid), "no ambiguous probe constructed"
+    ivf.search(mid, top_k=4)
+    assert ivf.index_stats()["n_adaptive_trims"] == trims0
+    assert ivf.index_stats()["last_realized_nprobe"] == 4.0
+
+
+def test_adaptive_nprobe_explicit_override_untouched():
+    """An explicit per-call nprobe (the exhaustive-equivalence escape hatch)
+    is never trimmed."""
+    vecs = _clustered(3000, 24)
+    ivf = VectorStore(dim=24, crossover=256, n_lists=24, nprobe=4,
+                      adaptive_nprobe=True, nprobe_margin=0.0)  # trim always
+    flat = VectorStore(dim=24)
+    ivf.add(vecs, list(range(3000)))
+    flat.add(vecs, list(range(3000)))
+    qs = _unit(6, 24)
+    a = ivf.search(qs, top_k=5, nprobe=24)     # exhaustive: exact vs flat
+    b = flat.search(qs, top_k=5)
+    for ha, hb in zip(a, b):
+        assert [h.index for h in ha] == [h.index for h in hb]
+    # a non-exhaustive explicit override is also probed verbatim
+    ivf.search(qs, top_k=5, nprobe=2)
+    st = ivf.index_stats()
+    assert st["n_adaptive_trims"] == 0
+    assert st["last_realized_nprobe"] == 2.0
+
+
+def test_predicate_combined_with_type_mask():
+    """A type_mask passed alongside a Python predicate is NOT ignored: both
+    filters must pass."""
+    store = VectorStore(dim=8)
+    vecs = _unit(40, 8)
+    store.add(vecs, [{"i": i} for i in range(40)],
+              codes=[i % 2 for i in range(40)])
+    hits = store.search(vecs[:3], top_k=5, type_mask=1 << 0,
+                        predicate=lambda p: p["i"] >= 10)
+    for h in hits:
+        assert len(h) == 5
+        for x in h:
+            assert x.payload["i"] >= 10 and x.payload["i"] % 2 == 0
+
+
 def test_flat_store_below_crossover_has_no_index():
     store = VectorStore(dim=8, crossover=4096)
     store.add(_unit(100, 8), list(range(100)))
