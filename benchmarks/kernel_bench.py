@@ -13,6 +13,7 @@ import numpy as np
 from benchmarks.common import Row
 from repro.kernels.cache_topk import ops as topk_ops
 from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import tuning as da_tuning
 from repro.kernels.flash_attention import ops as fa_ops
 
 
@@ -68,6 +69,49 @@ def run() -> List[Row]:
     o_ref = da_ops.decode_attention(qd, kd, vd, pos, use_pallas=False)
     o_pl = da_ops.decode_attention(qd, kd, vd, pos, use_pallas=True)
     us = _time(lambda: da_ops.decode_attention(qd, kd, vd, pos, use_pallas=False))
+    tile, src = da_tuning.tile_choice(2048, qd.dtype)
     rows.append(("kernel.decode_attention.B4T2048", us,
-                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e}"))
+                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e} "
+                 f"tile_t={tile}({src})"))
+
+    # paged decode attention: scattered page tables, grid stopped at each
+    # slot's LIVE page count (not masked-out full-table sweeps)
+    B, MP, P, Hkv, Hq, hd = 4, 16, 128, 2, 8, 64
+    n_pages = B * MP + 1
+    kp = jax.random.normal(jax.random.PRNGKey(6), (n_pages, P, Hkv, hd))
+    vp = jax.random.normal(jax.random.PRNGKey(7), (n_pages, P, Hkv, hd))
+    qp = jax.random.normal(jax.random.PRNGKey(8), (B, Hq, hd))
+    tblh = rng.permutation(np.arange(1, n_pages))[:B * MP] \
+        .reshape(B, MP).astype(np.int32)
+    ppos = np.asarray([100, 500, 1000, 2000], np.int32)
+    for b in range(B):
+        tblh[b, ppos[b] // P + 1:] = -1
+    tbl = jnp.asarray(tblh)
+    posd = jnp.asarray(ppos)
+    o_ref = da_ops.paged_decode_attention(qp, kp, vp, tbl, posd,
+                                          use_pallas=False)
+    o_pl = da_ops.paged_decode_attention(qp, kp, vp, tbl, posd,
+                                         use_pallas=True)
+    us = _time(lambda: da_ops.paged_decode_attention(qp, kp, vp, tbl, posd,
+                                                     use_pallas=False))
+    tile, src = da_tuning.tile_choice(MP * P, qp.dtype, page_size=P)
+    rows.append((f"kernel.paged_decode_attention.B{B}MP{MP}P{P}", us,
+                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e} "
+                 f"tile_t={tile}({src}) live-stop grid"))
+
+    # paged flash prefill: (B, S) query blocks over page-table KV — suffix
+    # prefill and speculative verify both decode through this kernel
+    S = 8
+    qs = jax.random.normal(jax.random.PRNGKey(9), (B, S, Hq, hd))
+    spos = jnp.asarray(np.minimum(ppos, MP * P - S), jnp.int32)
+    o_ref = da_ops.paged_prefill_attention(qs, kp, vp, tbl, spos,
+                                           use_pallas=False)
+    o_pl = da_ops.paged_prefill_attention(qs, kp, vp, tbl, spos,
+                                          use_pallas=True)
+    us = _time(lambda: da_ops.paged_prefill_attention(qs, kp, vp, tbl, spos,
+                                                      use_pallas=False))
+    tile, src = da_tuning.tile_choice(MP * P, qs.dtype, page_size=P)
+    rows.append((f"kernel.paged_prefill_attention.B{B}S{S}MP{MP}P{P}", us,
+                 f"maxerr={float(jnp.abs(o_ref - o_pl).max()):.1e} "
+                 f"tile_t={tile}({src})"))
     return rows

@@ -4,6 +4,19 @@
 ``--arch <id>``) to a ModelConfig.  ``LONG_CONTEXT`` records which archs run
 the long_500k shape (sub-quadratic families + sliding-window dense); the rest
 skip it per DESIGN.md §5.
+
+**Draft-pair selection for speculative decoding.**  The paged scheduler's
+speculative path (serving/engine.DraftEngine) drafts with a SMALL family
+member and verifies with the big model, so the two must agree on the token
+space: acceptance compares draft token ids against the verifier's argmax,
+which is meaningless across tokenizers.  ``spec_decode_compatible(big,
+draft)`` is the gate: both configs must carry the same token family (the
+leading segment of the config name — ``qwen2-1.5b`` and a shrunken
+``qwen2-*`` sibling share one; ``gemma-2b`` and ``qwen2-1.5b`` do not; a
+``-reduced`` suffix is ignored) and the same ``vocab`` size.  An
+incompatible pair doesn't error — the scheduler falls back to plain decode
+(k=0) and records the reason in ``spec_stats`` — so a misconfigured pool
+degrades to correct-but-slower, never to wrong tokens.
 """
 from __future__ import annotations
 
@@ -48,3 +61,19 @@ def supports_long_context(arch_id: str) -> bool:
 
 def all_configs(dtype: str = "bfloat16") -> Dict[str, ModelConfig]:
     return {a: get(a, dtype) for a in ARCH_IDS}
+
+
+def token_family(cfg: ModelConfig) -> str:
+    """Tokenizer-compatibility tag of a config: the leading segment of its
+    name with any ``-reduced`` suffix stripped (``qwen2-1.5b-reduced`` ->
+    ``qwen2``).  Configs derived from one another via
+    ``dataclasses.replace`` keep the tag automatically."""
+    return cfg.name.replace("-reduced", "").split("-")[0]
+
+
+def spec_decode_compatible(big: ModelConfig, draft: ModelConfig) -> bool:
+    """May ``draft`` propose tokens for ``big`` to verify?  True iff they
+    share a token family AND a vocab size — the acceptance rule compares raw
+    token ids, so any tokenizer mismatch silently corrupts output."""
+    return (token_family(big) == token_family(draft)
+            and big.vocab == draft.vocab)

@@ -162,6 +162,12 @@ class Metadata:
     ledger_tier: int = 0
     queue_wait: float = 0.0          # seconds spent in the admission queue
     batch_size: int = 0              # size of the formed batch (0 = direct)
+    # -- speculative-decode disclosure (paged serving engine) ---------------
+    # acceptance rate and draft/verify wall time of the serving batches the
+    # answering model has decoded speculatively (None = plain decode)
+    spec_acceptance: Optional[float] = None
+    spec_draft_time: float = 0.0
+    spec_verify_time: float = 0.0
 
 
 @dataclasses.dataclass

@@ -35,6 +35,11 @@ class PoolModel:
     generation_bonus: float = 0.0      # "newer generation" shift (paper §5.1)
     engine: Optional[Any] = None       # serving.Engine for REAL mode
     tokenizer: Optional[Any] = None
+    # serving.Engine of the SMALL family sibling used as a speculative-decode
+    # draft; batched decode runs the paged scheduler with a DraftEngine wrap
+    # when set (the scheduler's compatibility gate still has the last word)
+    draft_engine: Optional[Any] = None
+    spec_k: int = 4                    # draft window when draft_engine is set
     base_latency: float = 0.5          # s, queueing + prefill floor
     serving_chips: int = 8             # v5e chips the pool serves this model on
     latency_jitter: float = 0.9        # lognormal sigma (paper's heavy p99.9 tail)
@@ -150,6 +155,9 @@ class ModelAdapter:
         # background threads must not interleave draws with the foreground
         # request path, both for thread-safety and for reproducibility
         self.background_rng = np.random.default_rng(seed + 1000)
+        # per-model speculative-decode telemetry, accumulated across batched
+        # decodes (proxy.stats()["serving"] and Metadata.spec_* read this)
+        self.serving_stats: Dict[str, Dict[str, Any]] = {}
 
     # -- answering ------------------------------------------------------------
     def answer(self, model: PoolModel, prompt: str, *,
@@ -266,7 +274,15 @@ class ModelAdapter:
         from repro.serving.scheduler import Request, Scheduler
         deadlines = deadlines or [None] * len(prompts)
         tiers = tiers or [0] * len(prompts)
-        sched = Scheduler(model.engine, n_slots=min(len(prompts), 8))
+        n_slots = min(len(prompts), 8)
+        if model.draft_engine is not None:
+            from repro.serving.engine import DraftEngine
+            draft = DraftEngine(model.draft_engine, n_slots=n_slots,
+                                max_len=model.engine.max_len)
+            sched = Scheduler(model.engine, n_slots=n_slots, paged=True,
+                              draft=draft, spec_k=model.spec_k)
+        else:
+            sched = Scheduler(model.engine, n_slots=n_slots)
         for i, (prompt, ot, dl, tier) in enumerate(
                 zip(prompts, out_tokens, deadlines, tiers)):
             if dl is not None:
@@ -278,8 +294,25 @@ class ModelAdapter:
                                  prompt=jnp.asarray(ids, jnp.int32),
                                  max_new=min(ot, 32), deadline=dl, tier=tier))
         done = sched.run_to_completion()
+        if model.draft_engine is not None:
+            self._note_spec(model.name, sched.spec_summary())
         texts = {r.rid: model.tokenizer.decode(r.generated) for r in done}
         return [texts[i] for i in range(len(prompts))]
+
+    def _note_spec(self, name: str, summary: Dict[str, Any]) -> None:
+        """Fold one batch's spec_summary into the per-model running totals."""
+        agg = self.serving_stats.setdefault(name, {
+            "rounds": 0, "proposed": 0, "accepted": 0, "emitted": 0,
+            "draft_time": 0.0, "verify_time": 0.0})
+        for key in ("rounds", "proposed", "accepted", "emitted",
+                    "draft_time", "verify_time"):
+            agg[key] += summary[key]
+        agg["enabled"] = summary["enabled"]
+        agg["disabled_reason"] = summary["disabled_reason"]
+        agg["acceptance_rate"] = (agg["accepted"] / agg["proposed"]
+                                  if agg["proposed"] else 0.0)
+        agg["tokens_per_round"] = (agg["emitted"] / agg["rounds"]
+                                   if agg["rounds"] else 0.0)
 
     # -- verification-based selection (paper §3.3) -----------------------------
     def resolve_triple(self, m1: Optional[PoolModel] = None,

@@ -307,6 +307,11 @@ class LLMBridge:
         self._settle(state, resp)
         resp.metadata.budget_remaining = self.ledger.remaining(req.user)
         resp.metadata.ledger_tier = self.ledger.tier(req.user)
+        spec = self.adapter.serving_stats.get(resp.metadata.model_used)
+        if spec and spec.get("enabled"):
+            resp.metadata.spec_acceptance = spec["acceptance_rate"]
+            resp.metadata.spec_draft_time = spec["draft_time"]
+            resp.metadata.spec_verify_time = spec["verify_time"]
         self._stats.record(path, state)
         # declined responses are policy boilerplate, not conversation — they
         # must not pollute future context windows
@@ -392,6 +397,11 @@ class LLMBridge:
                 "index": self.cache.store.index_stats(),
             },
             "ledger": self.ledger.summary(),
+            # per-model speculative-decode telemetry from the serving
+            # substrate (acceptance rate, draft/verify wall time); empty
+            # until an engine-backed model decodes a batch with a draft
+            "serving": {"spec": {name: dict(s) for name, s in
+                                 self.adapter.serving_stats.items()}},
         }
         if self._admission is not None:
             out["admission"] = self._admission.stats()

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+"""Pure-jnp oracles for GQA decode / paged-prefill attention over a KV cache."""
 from __future__ import annotations
 
 import jax
@@ -48,3 +48,38 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     k = k_pages[tbl].reshape(B, MP * P, Hkv, D)
     v = v_pages[tbl].reshape(B, MP * P, Hkv, D)
     return decode_attention_ref(q, k, v, pos, window, softcap=softcap)
+
+
+def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array, table: jax.Array,
+                                pos: jax.Array, window=0,
+                                softcap: float = 0.0) -> jax.Array:
+    """Oracle for the paged flash-prefill kernel.
+
+    q: (B, S, Hq, D) with query j of slot b at absolute position
+    ``pos[b] + j`` (a suffix prefill or a speculative verify block);
+    pages: (N, P, Hkv, D); table: (B, MP); pos: (B,). Gathers each slot's
+    pages into logical order and applies per-row causal (+ sliding window,
+    + softcap) masking. Returns (B, S, Hq, D).
+    """
+    B, S, Hq, D = q.shape
+    _, P, Hkv, _ = k_pages.shape
+    MP = table.shape[1]
+    G = Hq // Hkv
+    tbl = jnp.maximum(table, 0)
+    k = k_pages[tbl].reshape(B, MP * P, Hkv, D).astype(jnp.float32)
+    v = v_pages[tbl].reshape(B, MP * P, Hkv, D).astype(jnp.float32)
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(MP * P)[None, None, :]                  # (1, 1, T)
+    qpos = (pos[:, None] + jnp.arange(S)[None, :])[:, :, None]  # (B, S, 1)
+    mask = kpos <= qpos
+    w = jnp.asarray(window, jnp.int32)          # static int or traced scalar
+    mask = mask & jnp.where(w > 0, qpos - kpos < w, True)
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(B, S, Hq, D).astype(q.dtype)

@@ -282,46 +282,64 @@ def _scatter_kv_onehot(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Ar
 
 
 def _decode_attn_paged(q, k_new, v_new, cache, cfg: ModelConfig, *, window):
-    """Single-token decode against the paged KV pool (serving/kv_cache).
+    """Decode-shaped attention against the paged KV pool (serving/kv_cache).
 
     ``cache`` is one layer's slice of the paged cache: ``k_pages``/``v_pages``
     (N, P, Hkv, hd) global pools, ``table`` (B, MP) physical page per logical
-    page (-1 = unmapped) and ``pos`` (B,) write cursors.  The new token's KV
-    is scattered into each slot's current page — the scheduler guarantees
-    that page is uniquely owned (copy-on-write forks shared pages before
-    admission), so slots never write into pages other slots read.  The
-    attention read dispatches to the paged decode kernel family
-    (kernels/decode_attention): Pallas when ``cfg.use_pallas``, the jnp
-    oracle otherwise.  ``window`` may be traced (per-layer scanned data).
+    page (-1 = unmapped) and ``pos`` (B,) write cursors.  The S new tokens'
+    KV is scattered at positions ``pos .. pos+S-1`` into each slot's mapped
+    pages — the scheduler guarantees those pages are uniquely owned
+    (copy-on-write forks shared pages before admission), so slots never
+    write into pages other slots read.  A write whose position falls on an
+    UNMAPPED page (right-padding past a slot's reservation, idle slots) is
+    routed to the pinned trash page 0 instead of being clamped: jax clamps
+    out-of-range scatters, which would smear pad KV into a live page.
+
+    S == 1 is the decode hot path (paged decode kernel); S > 1 is the paged
+    flash-prefill path (suffix prefill reading shared prefix pages in
+    place, and the speculative-decode verify block) — query j attends
+    causally through position ``pos + j``.  Both dispatch to the
+    kernels/decode_attention family: Pallas when ``cfg.use_pallas``, the
+    jnp oracle otherwise.  ``window`` may be traced (per-layer scanned
+    data).  NOTE: correctness of the attention READ requires every page
+    holding positions ``<= pos+S-1`` to be mapped — prefill against a
+    fresh, unmapped paged cache is meaningless (the scheduler always maps
+    prompt + suffix pages before this runs).
     """
     from repro.kernels.decode_attention import ops as da_ops
 
-    if q.shape[1] != 1:
-        raise ValueError(
-            "paged KV attention is single-token decode only (got S="
-            f"{q.shape[1]}); prefill against a paged cache goes through the "
-            "scheduler's dense gather->prefill->scatter path")
-    B = q.shape[0]
+    B, S = q.shape[0], q.shape[1]
     P = cache["k_pages"].shape[1]
+    MP = cache["table"].shape[1]
     pos = cache["pos"]                                    # (B,)
-    pg = jnp.clip(pos // P, 0, cache["table"].shape[1] - 1)
-    phys = jnp.take_along_axis(cache["table"], pg[:, None], axis=1)[:, 0]
-    phys = jnp.maximum(phys, 0)                           # unmapped -> page 0*
-    off = pos % P
-    # *the scheduler maps the write page before every step; the clamp only
-    # guards compile-time-only tracing with empty tables
+    idx = pos[:, None] + jnp.arange(S, dtype=pos.dtype)[None, :]   # (B, S)
+    pg = idx // P
+    entry = jnp.take_along_axis(cache["table"], jnp.clip(pg, 0, MP - 1),
+                                axis=1)                   # (B, S)
+    valid = (pg < MP) & (entry >= 0)
+    phys = jnp.where(valid, entry, 0)                     # invalid -> trash
+    off = idx % P
     k_pages = cache["k_pages"].at[phys, off].set(
-        k_new[:, 0].astype(cache["k_pages"].dtype))
+        k_new.astype(cache["k_pages"].dtype))
     v_pages = cache["v_pages"].at[phys, off].set(
-        v_new[:, 0].astype(cache["v_pages"].dtype))
-    out = da_ops.paged_decode_attention(
-        q[:, 0], k_pages, v_pages, cache["table"], pos, window=window,
-        softcap=cfg.logit_softcap, use_pallas=cfg.use_pallas,
-        interpret=jax.default_backend() != "tpu")
+        v_new.astype(cache["v_pages"].dtype))
+    interpret = jax.default_backend() != "tpu"
     Hq, hd = q.shape[2], q.shape[3]
+    if S == 1:
+        out = da_ops.paged_decode_attention(
+            q[:, 0], k_pages, v_pages, cache["table"], pos, window=window,
+            softcap=cfg.logit_softcap, use_pallas=cfg.use_pallas,
+            interpret=interpret)
+        out = out.reshape(B, 1, Hq * hd)
+    else:
+        out = da_ops.paged_prefill_attention(
+            q, k_pages, v_pages, cache["table"], pos, window=window,
+            softcap=cfg.logit_softcap, use_pallas=cfg.use_pallas,
+            interpret=interpret)
+        out = out.reshape(B, S, Hq * hd)
     new_cache = {"k_pages": k_pages, "v_pages": v_pages,
-                 "table": cache["table"], "pos": pos + 1}
-    return out.reshape(B, 1, Hq * hd), new_cache
+                 "table": cache["table"], "pos": pos + S}
+    return out, new_cache
 
 
 def _use_context_parallel_decode(cfg: ModelConfig, S: int, cache) -> bool:

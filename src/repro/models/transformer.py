@@ -13,6 +13,13 @@ the 512-device dry-run sweep.  Heterogeneous layer patterns are expressed as
 The forward returns ``(logits, new_cache, aux)`` where ``aux`` carries MoE
 load-balance loss.  ``cache`` is family-specific but always a pytree with the
 scan dimension leading, created by ``init_cache``.
+
+Decode accepts ``(B, S)`` token blocks with per-row absolute positions, not
+just single tokens: S > 1 serves both the paged suffix prefill (unmatched
+prompt tail after a prefix-trie hit) and speculative verify (k+1 positions
+scored in one step).  Attention-family caches scatter the block's KV first
+and attend second with per-row causal masks, so a later cursor rewind makes
+any suffix of the block dead weight rather than corruption.
 """
 from __future__ import annotations
 

@@ -11,10 +11,19 @@ Two decode drivers:
 
 ``serve_step`` is the artifact the multi-pod dry-run lowers for the decode
 shapes: ONE new token against a (seq_len)-deep KV cache.
+
+``DraftEngine`` wraps a SMALL family sibling for speculative decoding on
+the paged scheduler: it drafts k greedy tokens per slot against its own
+dense KV cache; the big model then verifies all k+1 positions in ONE
+decode-shaped paged step and keeps the longest agreeing prefix
+(scheduler._spec_step).  ``OracleDraftEngine`` is the benchmark variant:
+it pays the same draft compute but proposes from a known continuation with
+a controlled per-token acceptance probability.
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -133,7 +142,12 @@ def prefill_step(params: Dict, tokens: jax.Array, cache: Dict, *,
 
 def decode_step(params: Dict, tokens: jax.Array, positions: jax.Array,
                 cache: Dict, *, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
-    """tokens: (B, 1); positions: (B, 1) absolute positions."""
+    """tokens: (B, S); positions: (B, S) absolute positions.
+
+    S == 1 is the plain decode step; S > 1 is a decode-shaped block — a
+    suffix prefill against resident pages, a speculative verify window, or
+    a draft catch-up — writing KV at each slot's cursor and attending with
+    per-row causal masking."""
     logits, new_cache, _ = apply_model(params, tokens, cfg,
                                        positions=positions, cache=cache)
     return logits, new_cache
@@ -143,6 +157,155 @@ def serve_step(params: Dict, tokens: jax.Array, positions: jax.Array,
                cache: Dict, *, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
     """Dry-run artifact for decode shapes: one token, deep KV cache."""
     return decode_step(params, tokens, positions, cache, cfg=cfg)
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    return max(lo, 1 << (max(n, 1) - 1).bit_length())
+
+
+class DraftEngine:
+    """Greedy draft proposer for speculative decoding (one per Scheduler).
+
+    Wraps an :class:`Engine` holding the SMALL family sibling and keeps a
+    dense KV cache with one row per scheduler slot.  Each round,
+    ``propose`` (a) *catches up* — feeds every live slot's not-yet-fed
+    history tokens in one right-padded block at their absolute positions —
+    then (b) single-steps ``k-1`` times to emit k greedy proposals per
+    slot.  Validity of the draft cache is tracked host-side as a per-slot
+    fed-prefix length ``dpos``: after the big model verifies, ``commit``
+    rewinds it to the longest prefix whose KV matches the accepted history
+    (accepted proposals were fed, so their KV is reusable — catch-up width
+    stays 1, or 2 on a full-window accept), and rejected draft KV is simply
+    left above the cursor where the write-then-attend discipline overwrites
+    it before it can ever be read.  The cache carries ``HEADROOM`` rows of
+    depth beyond ``max_len`` so right-padding can never clamp-smear onto a
+    live position.
+    """
+
+    HEADROOM = 16
+
+    def __init__(self, engine: Engine, n_slots: int, max_len: int):
+        cache = engine.new_cache(n_slots, max_len + self.HEADROOM)
+        if "kv" not in cache:
+            raise ValueError(
+                f"draft model {engine.cfg.name!r} ({engine.cfg.family}) has "
+                "no dense KV cursor; speculative drafting needs an "
+                "attention-family draft")
+        self.engine = engine
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = cache
+        self.dpos = np.zeros(n_slots, np.int64)   # tokens already fed, per slot
+        self._hist_at_propose = np.zeros(n_slots, np.int64)
+        self.draft_time = 0.0                     # propose() wall time (s)
+        self.trust_cache = True
+
+    def reset(self, slots) -> None:
+        """Forget a slot's history (teardown / re-admission); stale KV above
+        the cursor is dead by the write-then-attend discipline."""
+        for slot in slots:
+            self.dpos[slot] = 0
+
+    def _run(self, toks_np: np.ndarray, base: np.ndarray,
+             widths: np.ndarray) -> jax.Array:
+        """Feed ``toks_np[b, :widths[b]]`` at positions ``base[b]..`` for
+        every slot in one call; pad rows write junk above each cursor (dead)
+        and their logits are ignored.  Returns logits (B, W, V)."""
+        Ln = self.cache["kv"]["pos"].shape[0]
+        B, W = toks_np.shape
+        base_dev = jnp.asarray(base, jnp.int32)
+        self.cache["kv"]["pos"] = jnp.broadcast_to(base_dev[None], (Ln, B))
+        positions = base_dev[:, None] + jnp.arange(W, dtype=jnp.int32)[None]
+        logits, self.cache = self.engine.decode(
+            jnp.asarray(toks_np, jnp.int32), positions, self.cache)
+        # per-slot cursor rewind: the uniform-width call advanced every row
+        # by W; the true fed-prefix grew by each slot's REAL width
+        self.dpos = base + widths
+        return logits
+
+    def propose(self, items, k: int) -> np.ndarray:
+        """items: list of (slot, req, hist) for live slots, ``hist`` the full
+        host token history (prompt + generated).  Returns proposals
+        (n_slots, k) int32 — rows of slots not in ``items`` are garbage.
+        """
+        t0 = time.monotonic()
+        slots = [s for s, _, _ in items]
+        base = self.dpos.copy()
+        widths = np.zeros(self.n_slots, np.int64)
+        hlen = np.zeros(self.n_slots, np.int64)
+        for slot, _req, hist in items:
+            hlen[slot] = len(hist)
+            base[slot] = min(self.dpos[slot], len(hist) - 1)
+            widths[slot] = len(hist) - base[slot]
+        W = _pow2(int(widths.max()))
+        toks = np.zeros((self.n_slots, W), np.int32)
+        for slot, _req, hist in items:
+            toks[slot, :widths[slot]] = hist[int(base[slot]):]
+        logits = self._run(toks, base, widths)
+        rows = jnp.asarray(np.maximum(widths - 1, 0), jnp.int32)
+        cur = jnp.argmax(
+            logits[jnp.arange(self.n_slots), rows], -1).astype(jnp.int32)
+        props = [cur]
+        live = widths > 0
+        for i in range(1, k):
+            step_base = np.where(live, hlen + i - 1, self.dpos)
+            logits = self._run(np.asarray(cur)[:, None].astype(np.int32),
+                               step_base, live.astype(np.int64))
+            cur = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            props.append(cur)
+        self._hist_at_propose[slots] = hlen[slots]
+        out = np.asarray(jnp.stack(props, axis=1))            # (n_slots, k)
+        self.draft_time += time.monotonic() - t0
+        return out
+
+    def commit(self, slot: int, accepted: int, k: int, new_hlen: int) -> None:
+        """After verification: ``accepted`` of the k proposals matched and
+        the big model's history is now ``new_hlen`` tokens.  Proposals
+        1..k-1 were fed (proposal k never is), so their KV is trusted up to
+        the accepted prefix; an oracle draft's cache never is (its fed
+        tokens differ from its reported proposals)."""
+        h = int(self._hist_at_propose[slot])
+        valid = h + min(accepted, k - 1) if self.trust_cache else h
+        self.dpos[slot] = min(valid, new_hlen - 1)
+
+
+class OracleDraftEngine(DraftEngine):
+    """Benchmark draft with a CONTROLLED acceptance rate.
+
+    Runs the real draft machinery (same compute, same wall time) but
+    replaces each slot's proposals using a known greedy continuation
+    (rid -> token list, recorded from a non-speculative baseline run):
+    every position independently proposes the true next token with
+    probability ``accept_p``, and a guaranteed-wrong token otherwise, so
+    measured speedups correspond to a chosen acceptance rate instead of
+    whatever a tiny random-weight draft happens to produce.  The cache is
+    never trusted — fed tokens diverge from reported proposals — so
+    catch-up re-feeds the accepted window each round.
+    """
+
+    def __init__(self, engine: Engine, n_slots: int, max_len: int,
+                 continuations: Dict[int, list], accept_p: float,
+                 seed: int = 0):
+        super().__init__(engine, n_slots, max_len)
+        self.continuations = continuations
+        self.accept_p = accept_p
+        self.rng = np.random.default_rng(seed)
+        self.trust_cache = False
+
+    def propose(self, items, k: int) -> np.ndarray:
+        props = np.array(super().propose(items, k))   # writable copy
+        vocab = self.engine.cfg.vocab
+        for slot, req, hist in items:
+            cont = self.continuations.get(req.rid, [])
+            done = len(req.generated)           # next true token index
+            for j in range(k):
+                idx = done + j
+                truth = cont[idx] if idx < len(cont) else 0
+                if self.rng.random() < self.accept_p:
+                    props[slot, j] = truth
+                else:
+                    props[slot, j] = (truth + 1) % vocab
+        return props
 
 
 def generate_scan(params: Dict, cfg: ModelConfig, prompt: jax.Array,

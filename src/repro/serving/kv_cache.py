@@ -130,7 +130,8 @@ def slot_positions(cache: Dict) -> jax.Array:
 # Paged pool metadata: prefix trie + refcounted page allocator
 # --------------------------------------------------------------------------
 class _TrieNode:
-    __slots__ = ("chunk", "page", "parent", "children", "last_used")
+    __slots__ = ("chunk", "page", "parent", "children", "last_used",
+                 "lru_prev", "lru_next", "in_lru")
 
     def __init__(self, chunk: Tuple[int, ...], page: int, parent):
         self.chunk = chunk
@@ -138,6 +139,11 @@ class _TrieNode:
         self.parent = parent
         self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
         self.last_used = 0
+        # intrusive LRU hooks: nodes that are BOTH leaves and unpinned
+        # (refcount == 1, trie-only) sit on the trie's eviction list
+        self.lru_prev: Optional["_TrieNode"] = None
+        self.lru_next: Optional["_TrieNode"] = None
+        self.in_lru = False
 
 
 class PrefixTrie:
@@ -147,7 +153,23 @@ class PrefixTrie:
     the dict hash is the "token hash", tuple equality guards collisions) to
     the physical page holding that chunk's prefilled KV.  ``match`` walks the
     longest chain of full-page chunks; ``insert`` extends the chain with
-    newly prefilled pages.  Node timestamps feed LRU eviction.
+    newly prefilled pages.
+
+    **O(1) eviction.**  Eviction candidates (leaf nodes whose page only the
+    trie references) live on an intrusive doubly-linked list in LRU order,
+    so ``evict_lru_leaf`` pops the head instead of scanning every leaf.
+    The list is maintained on every event that changes candidacy or
+    recency: ``match``/``insert`` touches re-stamp a node and move it to
+    the MRU tail; :class:`PagePool` reports pin transitions
+    (:meth:`note_pinned` when a slot shares an evictable page,
+    :meth:`note_unpinned` when the last slot reference drops); eviction
+    itself may expose the evicted node's parent as a new leaf, which enters
+    the list with a FRESH stamp (a release counts as a use — the parent was
+    in service at least as recently as the child).  Every stamp comes from
+    one monotonic clock, one tick per touch, so timestamps are unique and
+    the list order equals ascending ``last_used`` — ``peek_lru_leaf_scan``
+    (the old O(n) scan, kept as a pure query) is the parity oracle for
+    tests/test_paged_kv_properties.py.
     """
 
     def __init__(self, page_size: int):
@@ -155,7 +177,60 @@ class PrefixTrie:
         self.root: Dict[Tuple[int, ...], _TrieNode] = {}
         self._clock = itertools.count(1)
         self.n_nodes = 0
+        self._page_node: Dict[int, _TrieNode] = {}
+        self._lru_head: Optional[_TrieNode] = None
+        self._lru_tail: Optional[_TrieNode] = None
 
+    # -- intrusive LRU list ---------------------------------------------------
+    def _lru_unlink(self, node: _TrieNode) -> None:
+        if not node.in_lru:
+            return
+        if node.lru_prev is not None:
+            node.lru_prev.lru_next = node.lru_next
+        else:
+            self._lru_head = node.lru_next
+        if node.lru_next is not None:
+            node.lru_next.lru_prev = node.lru_prev
+        else:
+            self._lru_tail = node.lru_prev
+        node.lru_prev = node.lru_next = None
+        node.in_lru = False
+
+    def _lru_append(self, node: _TrieNode) -> None:
+        """Append at the MRU tail (caller has just stamped ``last_used``)."""
+        assert not node.in_lru
+        node.lru_prev = self._lru_tail
+        node.lru_next = None
+        if self._lru_tail is not None:
+            self._lru_tail.lru_next = node
+        else:
+            self._lru_head = node
+        self._lru_tail = node
+        node.in_lru = True
+
+    def _touch(self, node: _TrieNode) -> None:
+        node.last_used = next(self._clock)
+        if node.in_lru:
+            self._lru_unlink(node)
+            self._lru_append(node)
+
+    def note_unpinned(self, page: int) -> None:
+        """PagePool hook: ``page``'s last slot reference dropped (refcount
+        back to trie-only) — its node becomes an eviction candidate if it is
+        a leaf."""
+        node = self._page_node.get(page)
+        if node is not None and not node.children and not node.in_lru:
+            node.last_used = next(self._clock)
+            self._lru_append(node)
+
+    def note_pinned(self, page: int) -> None:
+        """PagePool hook: a slot took a reference on ``page`` — it leaves
+        the eviction list (if on it) until unpinned again."""
+        node = self._page_node.get(page)
+        if node is not None:
+            self._lru_unlink(node)
+
+    # -- trie ops -------------------------------------------------------------
     def _chunks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
         P = self.page_size
         return [tuple(tokens[i:i + P]) for i in range(0, len(tokens) // P * P, P)]
@@ -164,12 +239,11 @@ class PrefixTrie:
         """Physical pages of the longest fully-cached page-aligned prefix."""
         pages: List[int] = []
         level = self.root
-        now = next(self._clock)
         for chunk in self._chunks(tokens):
             node = level.get(chunk)
             if node is None:
                 break
-            node.last_used = now
+            self._touch(node)
             pages.append(node.page)
             level = node.children
         return pages
@@ -182,15 +256,18 @@ class PrefixTrie:
         assert len(pages) >= len(chunks)
         newly: List[int] = []
         level, parent = self.root, None
-        now = next(self._clock)
         for chunk, page in zip(chunks, pages):
             node = level.get(chunk)
             if node is None:
                 node = _TrieNode(chunk, int(page), parent)
                 level[chunk] = node
                 self.n_nodes += 1
+                self._page_node[node.page] = node
                 newly.append(int(page))
-            node.last_used = now
+                if parent is not None:
+                    # the parent just gained a child: no longer a leaf
+                    self._lru_unlink(parent)
+            self._touch(node)
             level, parent = node.children, node
         return newly
 
@@ -203,21 +280,58 @@ class PrefixTrie:
             else:
                 yield node
 
-    def evict_lru_leaf(self, evictable) -> Optional[int]:
-        """Remove the least-recently-used leaf whose page satisfies
-        ``evictable(page)`` (i.e. only the trie still references it).
-        Returns the page, or None when nothing qualifies."""
+    def peek_lru_leaf_scan(self, evictable) -> Optional[int]:
+        """O(n) reference query: the page ``evict_lru_leaf`` must return —
+        the evictable leaf with the oldest stamp.  Pure (no mutation); kept
+        as the parity oracle for the intrusive list."""
         best: Optional[_TrieNode] = None
         for leaf in self._leaves():
             if evictable(leaf.page) and (best is None
                                          or leaf.last_used < best.last_used):
                 best = leaf
-        if best is None:
+        return None if best is None else best.page
+
+    def evict_lru_leaf(self, evictable) -> Optional[int]:
+        """Remove the least-recently-used leaf whose page satisfies
+        ``evictable(page)`` (i.e. only the trie still references it).
+        Returns the page, or None when nothing qualifies.
+
+        O(1): pops the head of the intrusive candidate list (the predicate
+        walk is a defensive no-op while the pin/unpin notifications hold
+        the membership invariant)."""
+        node = self._lru_head
+        while node is not None and not evictable(node.page):
+            node = node.lru_next
+        if node is None:
             return None
-        siblings = best.parent.children if best.parent is not None else self.root
-        del siblings[best.chunk]
+        self._lru_unlink(node)
+        siblings = node.parent.children if node.parent is not None else self.root
+        del siblings[node.chunk]
         self.n_nodes -= 1
-        return best.page
+        del self._page_node[node.page]
+        parent = node.parent
+        if (parent is not None and not parent.children and not parent.in_lru
+                and evictable(parent.page)):
+            # eviction exposed a new leaf; it enters with a fresh stamp —
+            # its chain was in service at least as recently as the child
+            parent.last_used = next(self._clock)
+            self._lru_append(parent)
+        return node.page
+
+    def check_lru(self, evictable) -> None:
+        """Invariants: list membership == {evictable leaves}, order ==
+        ascending ``last_used`` (exercised by the hypothesis suite)."""
+        listed = []
+        node = self._lru_head
+        while node is not None:
+            listed.append(node)
+            assert not node.children, "non-leaf on the eviction list"
+            assert node.in_lru
+            node = node.lru_next
+        stamps = [n.last_used for n in listed]
+        assert stamps == sorted(stamps) and len(set(stamps)) == len(stamps)
+        expect = {leaf.page for leaf in self._leaves() if evictable(leaf.page)}
+        assert {n.page for n in listed} == expect
 
 
 class PagePool:
@@ -283,6 +397,9 @@ class PagePool:
             return False
         for p in shared:
             assert self.refcount[p] > 0, "sharing a free page"
+            if (self.refcount[p] == 1 and self.in_trie[p]
+                    and self.trie is not None):
+                self.trie.note_pinned(p)       # leaves the eviction list
             self.refcount[p] += 1
         self.n_shared += len(shared)
         self.reserved += n_new
@@ -336,6 +453,9 @@ class PagePool:
         if self.refcount[page] == 0:
             assert not self.in_trie[page]
             self.free.append(page)
+        elif (self.refcount[page] == 1 and self.in_trie[page]
+                and self.trie is not None):
+            self.trie.note_unpinned(page)      # joins the eviction list
 
     def release(self, pages: Sequence[int], unused_reservation: int = 0) -> None:
         """Drop one slot reference from each page (slot teardown) and return
@@ -350,3 +470,6 @@ class PagePool:
         assert not self.in_trie[self.refcount == 0].any()
         assert self.reserved >= 0
         assert self.used() - self.evictable() + self.reserved <= self.n_pages
+        if self.trie is not None:
+            self.trie.check_lru(
+                lambda p: self.refcount[p] == 1 and self.in_trie[p])

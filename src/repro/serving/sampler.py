@@ -1,4 +1,11 @@
-"""Token samplers: greedy / temperature / top-k, pure functions of (logits, key)."""
+"""Token samplers: greedy / temperature / top-k, pure functions of (logits, key).
+
+``temperature == 0`` (greedy, the default) is the mode the speculative
+decoder requires: acceptance compares the draft's argmax against the
+verifier's argmax position-by-position, which is only meaningful when both
+sides are deterministic.  The scheduler's spec gate checks this config, not
+the sample() call site.
+"""
 from __future__ import annotations
 
 import dataclasses

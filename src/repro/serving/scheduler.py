@@ -25,6 +25,20 @@ that discipline inside the serving engine:
     allocated lazily the step a slot's cursor crosses a page boundary, and
     cold prefix pages are LRU-evicted under pressure.
 
+On the paged backend the decode loop can run **speculatively** (pass a
+:class:`~repro.serving.engine.DraftEngine`): each round the small family
+sibling drafts ``spec_k`` greedy tokens per slot, the big model verifies
+all k+1 positions in ONE decode-shaped step against the paged KV, and the
+longest agreeing prefix (plus the verifier's own next token) is emitted.
+Every emitted token is the VERIFIER's argmax, so output is bit-exact with
+plain greedy decode — acceptance only sets the speed.  Rejected draft KV is
+rolled back by rewinding the page cursors (`pos`); the scatter-then-attend
+discipline overwrites it before any query can see it, so no pages need
+releasing and copy-on-write sharing is untouched.  A pair that fails the
+compatibility gate (``configs.spec_decode_compatible``, greedy sampling,
+matching slot counts) degrades to plain decode with the reason recorded in
+``spec_stats`` — never to wrong tokens.
+
 This is the substrate under LLMBridge's model pool: every pool model gets an
 Engine + Scheduler pair.
 """
@@ -39,8 +53,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import configs
 from repro.serving import discipline, kv_cache
-from repro.serving.engine import Engine
+from repro.serving.engine import DraftEngine, Engine
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -80,7 +95,8 @@ class Scheduler:
                  max_len: Optional[int] = None, seed: int = 0,
                  tier_penalty: float = 0.25, starvation_s: float = 2.0,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None, prefix_cache: bool = True):
+                 n_pages: Optional[int] = None, prefix_cache: bool = True,
+                 draft: Optional[DraftEngine] = None, spec_k: int = 4):
         self.engine = engine
         self.n_slots = n_slots
         self.sampler = sampler
@@ -112,6 +128,7 @@ class Scheduler:
             self._tables = np.full((n_slots, self.max_pages), -1, np.int32)
             self._slot_unreserved = np.zeros(n_slots, np.int64)
             self._pad_ok = True
+            self._host_prompt: Dict[int, List[int]] = {}
         else:
             self.cache = engine.new_cache(n_slots, self.max_len)
             # attention-only caches admit mixed-length groups via right-padding
@@ -127,6 +144,35 @@ class Scheduler:
         self.prefill_tokens = 0           # real (unpadded) tokens prefilled
         self.shared_tokens = 0            # prompt tokens served from the trie
         self.peak_live = 0                # max concurrently admitted slots
+        # -- speculative decoding (draft-model propose, big-model verify) ----
+        # a draft only engages when every correctness precondition holds;
+        # anything else degrades to plain decode with the reason on record
+        # (never to wrong tokens)
+        self.draft: Optional[DraftEngine] = None
+        self.spec_k = spec_k
+        self.spec_stats = {"rounds": 0, "proposed": 0, "accepted": 0,
+                           "emitted": 0, "draft_time": 0.0, "verify_time": 0.0,
+                           "enabled": False, "disabled_reason": None}
+        if draft is not None:
+            reason = None
+            if not paged:
+                reason = "speculative decoding requires the paged cache"
+            elif sampler.temperature > 0:
+                reason = "speculative decoding is greedy-only"
+            elif draft.n_slots != n_slots:
+                reason = (f"draft engine has {draft.n_slots} slots, "
+                          f"scheduler has {n_slots}")
+            elif not configs.spec_decode_compatible(engine.cfg,
+                                                    draft.engine.cfg):
+                reason = (f"draft {draft.engine.cfg.name!r} is not token-"
+                          f"compatible with {engine.cfg.name!r}")
+            elif spec_k < 1:
+                reason = f"spec_k={spec_k} proposes nothing"
+            if reason is None:
+                self.draft = draft
+                self.spec_stats["enabled"] = True
+            else:
+                self.spec_stats["disabled_reason"] = reason
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -398,14 +444,18 @@ class Scheduler:
         return len(plan), blocked
 
     def _prefill_suffixes(self, paged: Dict, plan) -> Dict:
-        """ONE suffix prefill for the admitted group.
+        """ONE in-place suffix prefill for the admitted group.
 
-        Shared-prefix KV is gathered from the pool into a transient dense
-        cache (page table order), the right-padded suffix tokens run one
-        decode-shaped model call at their absolute positions (pad KV is dead
-        under the causal mask, as in the dense refill), and the suffix KV is
-        scattered back into the freshly allocated pages — prefill FLOPs are
-        proportional to the UNMATCHED suffix only.
+        The paged flash-prefill kernel keeps the page table on the KV side
+        of the grid, so the right-padded suffix tokens run ONE decode-shaped
+        model call **directly against the pool**: shared prefix pages are
+        read in place (no gather-copy into a transient dense cache) and the
+        suffix KV lands in the freshly allocated pages through the model's
+        own paged scatter.  Prefill FLOPs stay proportional to the UNMATCHED
+        suffix.  Pad-token writes past a slot's prompt are routed to the
+        trash page (position on an unmapped page) or land past the cursor in
+        the slot-PRIVATE partial last page — the trie only ever retains FULL
+        prompt pages, so shared pages are never written.
         """
         P = self.page_size
         slots = [p[0] for p in plan]
@@ -413,50 +463,28 @@ class Scheduler:
         starts = [p[4] for p in plan]
         suf = [l - s for l, s in zip(lens, starts)]
         S = min(_pow2_bucket(max(suf)), max(self.max_len, max(suf)))
-        # the transient dense cache must hold every padded write position
-        # (starts + S) IN BOUNDS: jax clamps out-of-range scatters, which
-        # would smear pad KV onto the last real position — so round UP to
-        # whole pages, never down to the table width (columns past a slot's
-        # mapped pages gather the trash page and stay causally masked)
-        n_ctx_pages = -(-_pow2_bucket(max(st + S for st in starts)) // P)
-        T_ctx = n_ctx_pages * P
         B = len(plan)
-        tbl = np.zeros((B, n_ctx_pages), np.int32)                  # (B, pages)
-        width = min(n_ctx_pages, self.max_pages)
-        tbl[:, :width] = np.maximum(self._tables[slots, :width], 0)
-        gather = jnp.asarray(tbl)
-        k_ctx = paged["k_pages"][:, gather]        # (L, B, pages, P, H, hd)
-        v_ctx = paged["v_pages"][:, gather]
-        Ln = k_ctx.shape[0]
-        k_ctx = k_ctx.reshape(Ln, B, T_ctx, *k_ctx.shape[4:])
-        v_ctx = v_ctx.reshape(Ln, B, T_ctx, *v_ctx.shape[4:])
+        Ln = paged["pos"].shape[0]
+        tbl_rows = jnp.asarray(self._tables[slots])                 # (B, MP)
         starts_dev = jnp.asarray(starts, jnp.int32)
-        tmp = {"kv": {"k": k_ctx, "v": v_ctx,
-                      "pos": jnp.broadcast_to(starts_dev[None], (Ln, B))}}
+        view = {"paged": {
+            "k_pages": paged["k_pages"], "v_pages": paged["v_pages"],
+            "table": jnp.broadcast_to(tbl_rows[None], (Ln, B, self.max_pages)),
+            "pos": jnp.broadcast_to(starts_dev[None], (Ln, B))}}
         toks = jnp.stack([
             jnp.pad(jnp.asarray(p[2][p[4]:], jnp.int32), (0, S - (l - p[4])))
             for p, l in zip(plan, lens)])                           # (B, S)
         positions = starts_dev[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
-        logits, tmp = self.engine.decode(toks, positions, tmp)
+        logits, view = self.engine.decode(toks, positions, view)
         self.prefill_tokens += sum(suf)
         self.engine.n_prefill_tokens += B * S
-        # scatter the suffix KV into the pool: ONE fused scatter per leaf
-        bb, tt, phys, off = [], [], [], []
-        for b, (slot, _req, _tok, _sh, start, _cw) in enumerate(plan):
-            for t in range(start, lens[b]):
-                bb.append(b)
-                tt.append(t)
-                phys.append(self._tables[slot, t // P])
-                off.append(t % P)
-        bb, tt = jnp.asarray(bb, jnp.int32), jnp.asarray(tt, jnp.int32)
-        phys, off = jnp.asarray(phys, jnp.int32), jnp.asarray(off, jnp.int32)
+        sl = jnp.asarray(slots, jnp.int32)
         paged = {
             **paged,
-            "k_pages": paged["k_pages"].at[:, phys, off].set(tmp["kv"]["k"][:, bb, tt]),
-            "v_pages": paged["v_pages"].at[:, phys, off].set(tmp["kv"]["v"][:, bb, tt]),
-            "table": paged["table"].at[:, jnp.asarray(slots, jnp.int32), :].set(
-                jnp.asarray(self._tables[slots])[None]),
-            "pos": paged["pos"].at[:, jnp.asarray(slots, jnp.int32)].set(
+            "k_pages": view["paged"]["k_pages"],
+            "v_pages": view["paged"]["v_pages"],
+            "table": paged["table"].at[:, sl, :].set(tbl_rows[None]),
+            "pos": paged["pos"].at[:, sl].set(
                 jnp.asarray(lens, jnp.int32)[None]),
         }
         # register every full prompt page for future sharing (the trie takes
@@ -478,25 +506,39 @@ class Scheduler:
             req.pos = len(tokens)
             req.generated = [first]
             self.slots[slot] = req
+            # host copy of the prompt: the speculative draft engine replays
+            # it (prompt + generated is each slot's full token history)
+            self._host_prompt[slot] = tokens
+            if self.draft is not None:
+                # fresh slot: the draft's first catch-up feeds the prompt
+                self.draft.reset([slot])
         self.peak_live = max(self.peak_live,
                              sum(1 for s in self.slots if s is not None))
         return paged
 
-    def _map_decode_pages(self) -> None:
-        """Lazily map the page each live slot's cursor is about to write.
-        Pages come out of the slot's admission reservation, so allocation
-        can't fail; the device table is patched with ONE scatter."""
+    def _map_decode_pages(self, horizon: int = 1) -> None:
+        """Lazily map the pages each live slot's cursor will write within the
+        next ``horizon`` positions (1 = plain decode; a speculative verify
+        window maps its whole span up front).  The horizon is clamped to the
+        slot's remaining decode budget so mapping never outruns the admission
+        reservation — positions past the budget are routed to the trash page
+        by the model's scatter and their rows are never emitted.  Pages come
+        out of the reservation, so allocation can't fail; the device table
+        is patched with ONE scatter."""
         upd: List[Tuple[int, int, int]] = []       # (slot, logical, physical)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
-            pi = req.pos // self.page_size
-            if self._tables[slot, pi] < 0:
-                page = self.pool.alloc_reserved()
-                self._slot_unreserved[slot] -= 1
-                assert self._slot_unreserved[slot] >= 0
-                self._tables[slot, pi] = page
-                upd.append((slot, pi, page))
+            budget = max(req.max_new - len(req.generated), 1)
+            last = req.pos + min(horizon, budget) - 1
+            for pi in range(req.pos // self.page_size,
+                            last // self.page_size + 1):
+                if self._tables[slot, pi] < 0:
+                    page = self.pool.alloc_reserved()
+                    self._slot_unreserved[slot] -= 1
+                    assert self._slot_unreserved[slot] >= 0
+                    self._tables[slot, pi] = page
+                    upd.append((slot, pi, page))
         if upd:
             paged = self.cache["paged"]
             s = jnp.asarray([u[0] for u in upd], jnp.int32)
@@ -512,6 +554,8 @@ class Scheduler:
         if not live:
             return []
         self.peak_live = max(self.peak_live, len(live))
+        if self.draft is not None:
+            return self._spec_step()
         if self.paged:
             self._map_decode_pages()
         positions = jnp.array(
@@ -539,6 +583,88 @@ class Scheduler:
         self.finished.extend(done_now)
         return done_now
 
+    def _spec_step(self) -> List[Request]:
+        """One speculative round: draft k tokens per slot, verify all k+1
+        positions in ONE decode-shaped paged step, keep the longest agreeing
+        prefix plus the verifier's correction/bonus token.
+
+        Bit-exact with non-speculative greedy decoding: row j of the verify
+        block computes exactly the logits the plain loop would compute at
+        that position (same kernel family, same KV), and every emitted token
+        is the VERIFIER's argmax — proposals only decide how many rows are
+        consumed.  Rejected draft KV lands above the rewound cursors, where
+        the scatter-then-attend discipline overwrites it before any query
+        can see it, and the cursor rewind below makes the pages reusable
+        immediately — nothing to release, no COW interaction.
+        """
+        K = self.spec_k
+        items = [(slot, req, self._host_prompt[slot] + req.generated)
+                 for slot, req in enumerate(self.slots) if req is not None]
+        props = self.draft.propose(items, K)            # (n_slots, K)
+        self._map_decode_pages(horizon=K + 1)
+        toks = np.zeros((self.n_slots, K + 1), np.int32)
+        base = np.zeros(self.n_slots, np.int32)
+        for slot, req, hist in items:
+            toks[slot, 0] = hist[-1]                    # last emitted token
+            toks[slot, 1:] = props[slot]
+            base[slot] = req.pos
+        t0 = time.monotonic()
+        base_dev = jnp.asarray(base)
+        positions = base_dev[:, None] + \
+            jnp.arange(K + 1, dtype=jnp.int32)[None]
+        logits, cache = self.engine.decode(jnp.asarray(toks), positions,
+                                           self.cache)
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        self.spec_stats["verify_time"] += time.monotonic() - t0
+        self.spec_stats["rounds"] += 1
+        done_now: List[Request] = []
+        new_pos = np.zeros(self.n_slots, np.int32)
+        for slot, req, hist in items:
+            a = 0
+            while a < K and props[slot, a] == nxt[slot, a]:
+                a += 1
+            emitted = 0
+            for j in range(a + 1):
+                tok = int(nxt[slot, j])
+                req.generated.append(tok)
+                req.pos += 1
+                emitted += 1
+                if tok == req.eos_id or len(req.generated) >= req.max_new:
+                    req.done = True
+                    break
+            self.draft.commit(slot, a, K, len(hist) + emitted)
+            self.spec_stats["proposed"] += K
+            self.spec_stats["accepted"] += a
+            self.spec_stats["emitted"] += emitted
+            if req.done:
+                done_now.append(req)
+                self.slots[slot] = None
+                self.user_inflight[req.user] = False
+            new_pos[slot] = 0 if req.done else req.pos
+        # the verify advanced every cursor by K+1; rewind to the true
+        # host-side positions (accepted prefix + 1) — rejected draft KV is
+        # stranded above the cursor and dead
+        paged = cache["paged"]
+        Ln = paged["pos"].shape[0]
+        self.cache = {"paged": {**paged, "pos": jnp.broadcast_to(
+            jnp.asarray(new_pos)[None], (Ln, self.n_slots))}}
+        if done_now:
+            self._teardown([r.slot for r in done_now])
+        self.finished.extend(done_now)
+        return done_now
+
+    def spec_summary(self) -> Dict:
+        """Speculation telemetry for Metadata / proxy.stats(): acceptance
+        rate, draft/verify wall time, emitted-per-round."""
+        s = dict(self.spec_stats)
+        if self.draft is not None:
+            s["draft_time"] = self.draft.draft_time
+        s["acceptance_rate"] = (s["accepted"] / s["proposed"]
+                                if s["proposed"] else 0.0)
+        s["tokens_per_round"] = (s["emitted"] / s["rounds"]
+                                 if s["rounds"] else 0.0)
+        return s
+
     def _teardown(self, slots: List[int]) -> None:
         """Batched end-of-step teardown: ONE masked pass (dense) or ONE
         table/cursor reset (paged) for every slot finished this step, plus
@@ -546,11 +672,14 @@ class Scheduler:
         if not self.paged:
             self.cache = kv_cache.reset_slots(self.cache, slots)
             return
+        if self.draft is not None:
+            self.draft.reset(slots)
         for slot in slots:
             pages = self._tables[slot][self._tables[slot] >= 0]
             self.pool.release(pages.tolist(), int(self._slot_unreserved[slot]))
             self._tables[slot] = -1
             self._slot_unreserved[slot] = 0
+            self._host_prompt.pop(slot, None)
         paged = self.cache["paged"]
         sl = jnp.asarray(slots, jnp.int32)
         self.cache = {"paged": {

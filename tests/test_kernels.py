@@ -263,6 +263,92 @@ def test_paged_decode_attention_property(B, MP, P, Hkv, g, hd, win, seed):
     np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl), atol=2e-5)
 
 
+# --------------------------------------------------------------------------
+# paged flash prefill (multi-token queries over page-table KV: suffix
+# prefill and speculative verify blocks)
+# --------------------------------------------------------------------------
+def _paged_prefill_case(B, S, MP, P, Hkv, hd, Hq, seed=0, dtype=jnp.float32):
+    """Like ``_paged_case`` but with (B, S) query blocks; pages stay mapped
+    through each slot's last QUERY position ``pos[b] + S - 1`` (scatter runs
+    before attention in the model, so the block's own pages are live)."""
+    rng = np.random.default_rng(seed)
+    n_pages = B * MP + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    kp = jax.random.normal(ks[0], (n_pages, P, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[1], (n_pages, P, Hkv, hd), dtype)
+    q = jax.random.normal(ks[2], (B, S, Hq, hd), dtype)
+    # page 0 stays out of every table: it is the production trash/sentinel
+    # page that clamped -1 entries read from
+    table = rng.permutation(np.arange(1, n_pages))[:B * MP] \
+        .reshape(B, MP).astype(np.int32)
+    pos = rng.integers(0, MP * P - S + 1, size=(B,))
+    pos[0] = max(P - S // 2 - 1, 0)          # block straddles a page boundary
+    pos[min(1, B - 1)] = MP * P - S          # block ends the table
+    for b in range(B):
+        table[b, (pos[b] + S - 1) // P + 1:] = -1
+    return q, kp, vp, jnp.asarray(table), jnp.asarray(pos, jnp.int32)
+
+
+@pytest.mark.parametrize("B,S,MP,P,Hq,Hkv,hd,win,cap", [
+    (4, 5, 4, 16, 4, 2, 32, 0, 0.0), (3, 8, 2, 32, 8, 2, 16, 0, 0.0),
+    (2, 16, 8, 8, 4, 4, 64, 0, 0.0), (4, 5, 4, 16, 4, 2, 32, 19, 0.0),
+    (2, 7, 3, 64, 8, 1, 32, 70, 0.0), (1, 32, 5, 16, 2, 2, 128, 0, 0.0),
+    (3, 6, 3, 16, 4, 2, 32, 0, 15.0), (2, 5, 4, 8, 2, 2, 16, 9, 30.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_attention_matches_ref(B, S, MP, P, Hq, Hkv, hd, win,
+                                             cap, dtype):
+    q, kp, vp, tbl, pos = _paged_prefill_case(B, S, MP, P, Hkv, hd, Hq,
+                                              seed=B + S + MP, dtype=dtype)
+    o_ref = da_ops.paged_prefill_attention(q, kp, vp, tbl, pos, window=win,
+                                           softcap=cap, use_pallas=False)
+    o_pl = da_ops.paged_prefill_attention(q, kp, vp, tbl, pos, window=win,
+                                          softcap=cap, use_pallas=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pl, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_paged_prefill_rows_match_decode(use_pallas):
+    """Row j of an (B, S) prefill block == a single-token paged decode at
+    ``pos + j``: the per-row causal mask makes the block a batched decode
+    (this is the invariant speculative verify leans on for bit-exactness)."""
+    B, S, MP, P, Hkv, hd, Hq, win = 3, 6, 4, 16, 2, 32, 4, 21
+    q, kp, vp, tbl, pos = _paged_prefill_case(B, S, MP, P, Hkv, hd, Hq,
+                                              seed=5)
+    o_blk = da_ops.paged_prefill_attention(q, kp, vp, tbl, pos, window=win,
+                                           use_pallas=use_pallas)
+    for j in range(S):
+        o_j = da_ops.paged_decode_attention(q[:, j], kp, vp, tbl, pos + j,
+                                            window=win,
+                                            use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(o_blk[:, j]), np.asarray(o_j),
+                                   atol=2e-5)
+
+
+def test_paged_prefill_ignores_future_and_unmapped():
+    """KV above each row's position (including other pages of the same
+    block) and unmapped (-1, routed-to-trash) pages must not leak into any
+    row's output."""
+    B, S, MP, P, Hkv, hd, Hq = 2, 5, 4, 8, 2, 16, 4
+    q, kp, vp, tbl, pos = _paged_prefill_case(B, S, MP, P, Hkv, hd, Hq,
+                                              seed=9)
+    o1 = da_ops.paged_prefill_attention(q, kp, vp, tbl, pos, use_pallas=True)
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    tblh, posh = np.asarray(tbl), np.asarray(pos)
+    kp2[0] = 99.0                       # trash page (unmapped entries)
+    vp2[0] = -99.0
+    for b in range(B):                  # poison strictly-future offsets
+        last = int(posh[b]) + S - 1
+        pg = tblh[b, last // P]
+        kp2[pg, last % P + 1:] = 77.0
+        vp2[pg, last % P + 1:] = -77.0
+    o2 = da_ops.paged_prefill_attention(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                                        tbl, pos, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
 def test_decode_attention_respects_position():
     """Entries beyond pos must not affect the output."""
     B, T, H, hd = 1, 32, 2, 16

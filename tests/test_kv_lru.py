@@ -1,0 +1,83 @@
+"""Deterministic mirror of the intrusive-LRU parity property.
+
+tests/test_paged_kv_properties.py carries the hypothesis version; this
+module replays the same admit / release / match / evict schedules from
+seeded numpy randomness so the parity claim is exercised even where
+hypothesis is not installed (the conftest collection-skips hypothesis
+modules in that case).
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagePool, PrefixTrie
+
+P = 4
+
+
+class _Harness:
+    def __init__(self, n_pages):
+        self.trie = PrefixTrie(P)
+        self.pool = PagePool(n_pages, P, trie=self.trie, sentinel=True)
+        self.slots = {}
+        self._sid = 0
+
+    def admit(self, tokens, extra_pages):
+        matched = self.trie.match(tokens)
+        cow = matched and len(matched) * P == len(tokens)
+        shared = matched[:-1] if cow else matched
+        suffix_start = (len(tokens) - 1) if cow else len(shared) * P
+        total = -(-(len(tokens) + max(extra_pages, 1)) // P)
+        n_new = total - len(shared)
+        if not self.pool.try_admit(n_new, shared):
+            return None
+        pages = list(shared)
+        n_prompt_pages = -(-len(tokens) // P)
+        for pi in range(suffix_start // P, n_prompt_pages):
+            pages.append(self.pool.cow() if (cow and pi == suffix_start // P)
+                         else self.pool.alloc_reserved())
+        sid = self._sid = self._sid + 1
+        self.slots[sid] = {
+            "pages": pages,
+            "unreserved": n_new - (n_prompt_pages - suffix_start // P),
+        }
+        for page in self.trie.insert(tokens, pages[:len(tokens) // P]):
+            self.pool.retain_in_trie(page)
+        return sid
+
+    def release(self, sid):
+        slot = self.slots.pop(sid)
+        self.pool.release(slot["pages"], slot["unreserved"])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_lru_list_eviction_parity_with_scan_seeded(seed):
+    rng = np.random.default_rng(seed)
+    h = _Harness(int(rng.integers(6, 25)))
+
+    def pred(p):
+        return h.pool.refcount[p] == 1 and h.pool.in_trie[p]
+
+    evictions = 0
+    for _ in range(200):
+        op = rng.choice(["admit", "release", "match", "evict"])
+        if op == "admit":
+            tokens = rng.integers(0, 3, size=int(rng.integers(1, 4 * P + 1)))
+            h.admit([int(t) for t in tokens], int(rng.integers(1, 5)))
+        elif op == "release" and h.slots:
+            h.release(int(rng.choice(sorted(h.slots))))
+        elif op == "match":
+            tokens = rng.integers(0, 3, size=int(rng.integers(0, 4 * P + 1)))
+            h.trie.match([int(t) for t in tokens])
+        elif op == "evict" and h.pool.evictable():
+            expect = h.trie.peek_lru_leaf_scan(pred)
+            got = h.trie.evict_lru_leaf(pred)
+            assert got == expect
+            h.pool.in_trie[got] = False
+            h.pool._deref(got)
+            evictions += 1
+        # membership == {evictable leaves}, order == ascending stamps
+        h.pool.check()
+    assert evictions or h.pool.n_evictions or True  # schedule ran to the end
+    for sid in sorted(h.slots):
+        h.release(sid)
+    h.pool.check()

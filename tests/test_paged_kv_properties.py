@@ -141,6 +141,45 @@ def test_trie_matches_are_token_exact(data):
         assert flat == list(q[:(depth + 1) * P]), "match returned wrong tokens"
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_lru_list_eviction_parity_with_scan(data):
+    """The intrusive O(1) eviction list must pick exactly the page the old
+    O(n) leaf scan would, under random admit / release / match / evict
+    schedules (``peek_lru_leaf_scan`` is the retained pure-query oracle);
+    the list's membership/order invariant is re-checked at every step via
+    ``pool.check`` -> ``trie.check_lru``."""
+    h = _Harness(data.draw(st.integers(6, 24)))
+
+    def pred(p):
+        return h.pool.refcount[p] == 1 and h.pool.in_trie[p]
+
+    for _ in range(data.draw(st.integers(5, 50))):
+        op = data.draw(st.sampled_from(
+            ["admit", "lazy", "release", "match", "evict"]))
+        if op == "admit":
+            n_tok = data.draw(st.integers(1, 4 * P))
+            h.admit(data.draw(st.lists(st.integers(0, 2), min_size=n_tok,
+                                       max_size=n_tok)),
+                    data.draw(st.integers(1, 4)))
+        elif op == "lazy" and h.slots:
+            h.lazy_alloc(data.draw(st.sampled_from(sorted(h.slots))))
+        elif op == "release" and h.slots:
+            h.release(data.draw(st.sampled_from(sorted(h.slots))))
+        elif op == "match":
+            n_tok = data.draw(st.integers(0, 4 * P))
+            h.trie.match(data.draw(st.lists(st.integers(0, 2),
+                                            min_size=n_tok, max_size=n_tok)))
+        elif op == "evict" and h.pool.evictable():
+            expect = h.trie.peek_lru_leaf_scan(pred)
+            got = h.trie.evict_lru_leaf(pred)
+            assert got == expect
+            # mirror PagePool._take_free's eviction bookkeeping
+            h.pool.in_trie[got] = False
+            h.pool._deref(got)
+        h.check()
+
+
 def test_pool_eviction_frees_lru_leaf_first():
     trie = PrefixTrie(P)
     pool = PagePool(4, P, trie=trie, sentinel=True)   # 3 usable pages

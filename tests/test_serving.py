@@ -424,13 +424,40 @@ def test_paged_pool_infeasible_request_not_stranded(engine):
     sch.pool.check()
 
 
-def test_paged_cache_rejects_multi_token_prefill(engine):
-    """Prefilling straight into a paged cache (S > 1) must error, not
-    silently process only the first token."""
-    cache = engine.new_paged_cache(1, 8, 16, 4)
+def test_paged_multi_token_prefill_matches_stepwise(engine):
+    """Multi-token prefill straight into a paged cache (the paged
+    flash-prefill path) agrees with feeding the same tokens one decode
+    step at a time — including across a page boundary (page_size=4,
+    prompt length 8 spans two pages)."""
     prompt = jnp.arange(8, dtype=jnp.int32)[None, :] + 3
-    with pytest.raises(ValueError, match="single-token"):
-        engine.prefill(prompt, cache)
+    tbl = np.full((1, 4), -1, np.int32)
+    tbl[0, 0], tbl[0, 1] = 1, 2          # avoid trash page 0
+
+    def fresh():
+        cache = engine.new_paged_cache(1, 8, 4, 4)
+        L = cache["paged"]["pos"].shape[0]
+        cache["paged"].update(
+            table=jnp.broadcast_to(jnp.asarray(tbl)[None], (L, 1, 4)),
+            pos=jnp.zeros((L, 1), jnp.int32))
+        return cache
+
+    lp, cp = engine.prefill(prompt, fresh())
+    cache = fresh()
+    rows = []
+    for j in range(8):
+        lj, cache = engine.decode(prompt[:, j:j + 1],
+                                  jnp.full((1, 1), j, jnp.int32), cache)
+        rows.append(np.asarray(lj[:, 0]))
+    np.testing.assert_allclose(np.asarray(lp[0]), np.stack(rows, 1)[0],
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.argmax(np.asarray(lp[0]), -1),
+                                  np.argmax(np.stack(rows, 1)[0], -1))
+    # both paths advanced the cursors identically and wrote the same pages
+    np.testing.assert_array_equal(np.asarray(cp["paged"]["pos"]),
+                                  np.asarray(cache["paged"]["pos"]))
+    np.testing.assert_allclose(np.asarray(cp["paged"]["k_pages"][:, 1:3]),
+                               np.asarray(cache["paged"]["k_pages"][:, 1:3]),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_paged_rejects_recurrent_family():
