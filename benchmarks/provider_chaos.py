@@ -1,0 +1,251 @@
+"""Provider-fleet chaos sweep: availability, tail latency, cost overhead.
+
+Three scenarios over the planted workload (SIM-mode pool; failures, latency
+and the clock are all modelled, so every run replays exactly from its seed):
+
+* ``availability`` — every provider gets a 20% injected error rate.  The
+  same request trace runs against the **static ladder** (``max_attempts=1``:
+  the routed model either answers or the request fails — the paper's
+  quality/cost selection with no failure domain) and against **fleet
+  routing** (bounded retry-against-healthy with backoff).  Fleet
+  availability must reach >= 99% while the static ladder sits near the 80%
+  direct hit rate.  The run also checks ledger conservation: every charge
+  equals the sum of response usage costs (retries never double-charge), and
+  a finite-budget user is never overdrawn.
+* ``hedge``    — latency-first intents against a provider with a stall tail
+  (12% of requests hit a 10s timeout).  Replayed twice from the same chaos
+  seed, hedging off vs on: once the primary exceeds its tracked p95, a
+  second request fires at the next-healthiest provider and the winner is
+  kept.  Hedging must cut realised p95 latency; the duplicated spend is
+  disclosed as ``wasted_hedge_cost``, never charged to the ledger.
+* ``outage``   — the routed provider goes hard-down mid-run: its breaker
+  opens (traffic shifts to healthy providers, availability holds), then
+  recovers through half-open probes after the outage ends.
+
+``--smoke`` shrinks request counts for the CI PR gate (same asserts);
+``--json PATH`` writes the full result dict — the nightly job uploads it
+next to the fairness/latency artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import (CircuitBreaker, Constraints, FaultSpec, Preference,
+                        ProxyRequest, ServiceType, Workload, WorkloadConfig,
+                        build_bridge, jsonable)
+
+ERROR_RATE = 0.2
+N_AVAIL, N_AVAIL_SMOKE = 240, 80
+N_HEDGE, N_HEDGE_SMOKE = 200, 90
+N_OUTAGE = 72
+
+
+def _workload():
+    return Workload(WorkloadConfig(n_conversations=8, turns_per_conversation=8,
+                                   seed=5))
+
+
+def _req(wl, i: int, user: str = "chaos", **kw) -> ProxyRequest:
+    q = wl.queries[i % len(wl.queries)]
+    return ProxyRequest(prompt=q.text, user=user, conversation=user,
+                        service_type=ServiceType.COST, query=q,
+                        update_context=False, **kw)
+
+
+def _inject_all(bridge, spec: FaultSpec) -> None:
+    for m in bridge.pool.list():
+        bridge.providers.configure(m.name, spec)
+
+
+def run_availability(n: int = N_AVAIL) -> dict:
+    wl = _workload()
+    spec = FaultSpec(error_rate=ERROR_RATE)
+
+    def trace(max_attempts: int) -> dict:
+        bridge = build_bridge(workload=wl, seed=0)
+        bridge.providers.max_attempts = max_attempts
+        # finite-budget canary: ~6 cheap answers' worth, so the intent path
+        # genuinely hits the decline boundary mid-run under chaos
+        unit = bridge.adapter.estimate_answer(
+            bridge.pool.cheapest(), wl.queries[0].text,
+            query=wl.queries[0]).cost
+        bridge.ledger.set_budget("capped", 6 * unit)
+        _inject_all(bridge, spec)
+        served = 0
+        charged = 0.0
+        declines = 0
+        attempts = []
+        for i in range(n):
+            r = bridge.request(_req(wl, i))
+            if r.metadata.model_used != "error":
+                served += 1
+            charged += r.metadata.usage.cost
+            attempts.append(r.metadata.provider_attempts)
+            if i % 5 == 0:
+                # intent-path request from the capped user: compiled holds +
+                # affordability-filtered fallback = never overdrawn, even
+                # when a retry answers with a pricier provider
+                rc = bridge.request(_req(
+                    wl, i, user="capped",
+                    constraints=Constraints(allow_cache=False,
+                                            allow_prefetch=False),
+                    preference=Preference.COST_FIRST))
+                charged += rc.metadata.usage.cost
+                if rc.metadata.context_strategy == "declined":
+                    declines += 1
+        ledger = bridge.ledger.summary()
+        spent = sum(u["spent"] for u in ledger.values())
+        return {
+            "max_attempts": max_attempts,
+            "availability": served / n,
+            "mean_attempts": float(np.mean(attempts)),
+            "retries": bridge.providers.retries,
+            "exhausted": bridge.providers.exhausted,
+            "ledger_spent": spent,
+            "responses_cost": charged,
+            "capped_budget": 6 * unit,
+            "capped_remaining": ledger["capped"]["remaining"],
+            "capped_declines": declines,
+            "providers": bridge.stats()["providers"],
+        }
+
+    static = trace(max_attempts=1)
+    fleet = trace(max_attempts=4)
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert fleet["availability"] >= 0.99, fleet["availability"]
+    assert static["availability"] <= 1.0 - ERROR_RATE / 2, \
+        static["availability"]
+    for row in (static, fleet):
+        # ledger conservation: every unit charged is a unit of response
+        # usage — failed attempts and retries bill nothing extra — and the
+        # finite-budget user ends the run un-overdrawn
+        assert abs(row["ledger_spent"] - row["responses_cost"]) < 1e-9, \
+            (row["ledger_spent"], row["responses_cost"])
+        assert row["capped_remaining"] >= -1e-9, row["capped_remaining"]
+        assert row["capped_declines"] > 0, "decline boundary never exercised"
+    return {"n": n, "error_rate": ERROR_RATE, "static": static,
+            "fleet": fleet}
+
+
+def run_hedge(n: int = N_HEDGE) -> dict:
+    wl = _workload()
+    # a stall tail: 12% of primary attempts hang to the 10s timeout — the
+    # p95-tail case hedging exists for (clean latencies stay sub-second)
+    spec = FaultSpec(timeout_rate=0.12, timeout_s=10.0, latency_sigma=0.15)
+
+    def trace(hedge: bool) -> dict:
+        bridge = build_bridge(workload=wl, seed=0)
+        bridge.providers.hedge_enabled = hedge
+        bridge.providers.max_attempts = 4
+        _inject_all(bridge, spec)
+        lats = []
+        cost = 0.0
+        for i in range(n):
+            r = bridge.request(_req(
+                wl, i,
+                constraints=Constraints(allow_cache=False,
+                                        allow_prefetch=False),
+                preference=Preference.LATENCY_FIRST))
+            lats.append(r.metadata.usage.latency)
+            cost += r.metadata.usage.cost
+        snap = bridge.stats()["providers"]
+        return {
+            "hedge": hedge,
+            "p50_s": float(np.percentile(lats, 50)),
+            "p95_s": float(np.percentile(lats, 95)),
+            "p99_s": float(np.percentile(lats, 99)),
+            "total_cost": cost,
+            "hedges": snap["hedges"],
+        }
+
+    base = trace(hedge=False)
+    hedged = trace(hedge=True)
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert hedged["hedges"]["fired"] > 0, "hedging never engaged"
+    assert hedged["p95_s"] < base["p95_s"], \
+        (hedged["p95_s"], base["p95_s"])
+    overhead = (hedged["hedges"]["wasted_cost"]
+                / max(hedged["total_cost"], 1e-12))
+    return {"n": n, "timeout_rate": spec.timeout_rate, "no_hedge": base,
+            "hedged": hedged, "wasted_cost_fraction": overhead}
+
+
+def run_outage(n: int = N_OUTAGE) -> dict:
+    wl = _workload()
+    bridge = build_bridge(workload=wl, seed=0)
+    bridge.providers.max_attempts = 3
+    target = bridge.pool.cheapest().name
+    # hard-down window on the fleet clock (requests advance it ~0.5s each);
+    # a short-cooldown breaker so open -> half_open -> closed all land
+    # within the run: probes fail and re-open while the outage holds, then
+    # succeed and close it after t=25
+    bridge.providers.configure(
+        target, FaultSpec(outages=((5.0, 25.0),)),
+        breaker=CircuitBreaker(failure_threshold=3, cooldown=6.0))
+    phases = {"before": [], "during": [], "after": []}
+    trail = []
+    for i in range(n):
+        now = bridge.providers.now()
+        phase = ("before" if now < 5.0 else
+                 "during" if now < 25.0 else "after")
+        r = bridge.request(_req(wl, i))
+        phases[phase].append(r.metadata.model_used != "error")
+        trail.append((round(now, 2), r.metadata.provider,
+                      r.metadata.provider_events))
+    snap = bridge.stats()["providers"]["providers"][target]
+    availability = {k: (float(np.mean(v)) if v else None)
+                    for k, v in phases.items()}
+    states = [t[2] for t in snap["transitions"]]
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert availability["during"] is None or availability["during"] >= 0.99, \
+        availability
+    assert "open" in states, f"breaker never opened: {snap['transitions']}"
+    assert snap["state"] == "closed", \
+        f"breaker never recovered: {snap['state']}"
+    return {"n": n, "target": target, "availability": availability,
+            "transitions": snap["transitions"],
+            "requests_per_phase": {k: len(v) for k, v in phases.items()},
+            "trail_head": trail[:6]}
+
+
+def run(smoke: bool = False) -> dict:
+    return {
+        "availability": run_availability(N_AVAIL_SMOKE if smoke else N_AVAIL),
+        "hedge": run_hedge(N_HEDGE_SMOKE if smoke else N_HEDGE),
+        "outage": run_outage(N_OUTAGE),
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short request counts for the CI PR gate (same asserts)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full result dict as a JSON artifact")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+
+    a = res["availability"]
+    print(f"availability @ {a['error_rate']:.0%} injected errors, "
+          f"n={a['n']}: static={a['static']['availability']:.3f} "
+          f"fleet={a['fleet']['availability']:.3f} "
+          f"(mean attempts {a['fleet']['mean_attempts']:.2f}, "
+          f"{a['fleet']['retries']} retries)")
+    h = res["hedge"]
+    print(f"hedge @ {h['timeout_rate']:.0%} stall rate, n={h['n']}: "
+          f"p95 {h['no_hedge']['p95_s']:.2f}s -> {h['hedged']['p95_s']:.2f}s "
+          f"(p99 {h['no_hedge']['p99_s']:.2f}s -> {h['hedged']['p99_s']:.2f}s, "
+          f"{h['hedged']['hedges']['fired']} fired / "
+          f"{h['hedged']['hedges']['won']} won, "
+          f"wasted cost {h['wasted_cost_fraction']:.1%} of spend)")
+    o = res["outage"]
+    print(f"outage on {o['target']}: availability "
+          f"{ {k: (f'{v:.3f}' if v is not None else '-') for k, v in o['availability'].items()} } "
+          f"transitions={o['transitions']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(jsonable(res), f, indent=2)
+        print(f"wrote {args.json}")

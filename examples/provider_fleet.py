@@ -1,0 +1,108 @@
+"""Provider fleet under chaos: breaker, fallback, hedging, recovery.
+
+    PYTHONPATH=src python examples/provider_fleet.py
+
+The bridge fronts many LLM backends; real providers fail.  This walkthrough
+injects faults into the SIM pool and watches the reliability layer respond:
+
+* a 25% error rate everywhere — bounded retry-against-healthy keeps the
+  answer rate up, and every response discloses its provider trail;
+* a hard outage on the routed (cheapest) provider mid-run — its circuit
+  breaker opens, traffic shifts to the next-healthiest backend, then
+  half-open probes close the breaker once the outage ends;
+* latency-first hedging — when the primary stalls past its tracked p95, a
+  hedge fires at the next-healthiest provider and the winner is kept (the
+  loser's spend is disclosed, never charged to the user's ledger).
+
+Everything (failures, latency, the clock) is modelled and seeded, so the
+run replays exactly.
+"""
+
+from repro.core import (CircuitBreaker, Constraints, FaultSpec, Preference,
+                        ProxyRequest, ServiceType, Workload, WorkloadConfig,
+                        build_bridge)
+
+wl = Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=8,
+                             seed=11))
+
+
+def req(bridge_i, **kw):
+    q = wl.queries[bridge_i % len(wl.queries)]
+    return ProxyRequest(prompt=q.text, user="demo", conversation="demo",
+                        service_type=ServiceType.COST, query=q,
+                        update_context=False, **kw)
+
+
+# --- 1. flaky everywhere: retry-against-healthy -----------------------------
+bridge = build_bridge(workload=wl, seed=0)
+for m in bridge.pool.list():
+    bridge.providers.configure(m.name, FaultSpec(error_rate=0.25))
+
+served = 0
+for i in range(30):
+    r = bridge.request(req(i))
+    served += r.metadata.model_used != "error"
+    if r.metadata.provider_attempts > 1:
+        print(f"  req {i:2d}: {r.metadata.provider_attempts} attempts "
+              f"-> {r.metadata.provider}  events={r.metadata.provider_events}")
+snap = bridge.stats()["providers"]
+print(f"flaky fleet: {served}/30 served, {snap['retries']} retries, "
+      f"{snap['exhausted']} exhausted\n")
+
+# --- 2. hard outage on the routed provider: breaker opens, then recovers ----
+bridge = build_bridge(workload=wl, seed=0)
+target = bridge.pool.cheapest().name
+bridge.providers.configure(
+    target, FaultSpec(outages=((4.0, 18.0),)),
+    breaker=CircuitBreaker(failure_threshold=3, cooldown=5.0))
+print(f"outage window 4s-18s on {target!r} (the routed cheapest model)")
+
+last_state = "closed"
+for i in range(50):
+    now = bridge.providers.now()
+    r = bridge.request(req(i))
+    state = bridge.stats()["providers"]["providers"][target]["state"]
+    if state != last_state:
+        print(f"  t={now:5.1f}s  breaker {last_state} -> {state}  "
+              f"(answered by {r.metadata.provider})")
+        last_state = state
+trail = bridge.stats()["providers"]["providers"][target]
+print(f"final state={trail['state']}, transitions:")
+for t, frm, to in trail["transitions"]:
+    print(f"  t={t:5.1f}s  {frm} -> {to}")
+print()
+
+# --- 3. latency-first hedging against a stall tail --------------------------
+def stall_trace(hedge):
+    """Same seed, same requests: 12% of attempts hang to a 10s timeout."""
+    bridge = build_bridge(workload=wl, seed=0)
+    for m in bridge.pool.list():
+        bridge.providers.configure(
+            m.name, FaultSpec(timeout_rate=0.12, timeout_s=10.0,
+                              latency_sigma=0.15))
+    bridge.providers.hedge_enabled = hedge
+    bridge.providers.max_attempts = 4
+    lats = []
+    for i in range(150):
+        r = bridge.request(req(
+            i, constraints=Constraints(allow_cache=False,
+                                       allow_prefetch=False),
+            preference=Preference.LATENCY_FIRST))
+        lats.append(r.metadata.usage.latency)
+        if hedge and "hedge:fired" in r.metadata.provider_events:
+            won = "hedge:won" in r.metadata.provider_events
+            print(f"  req {i:2d}: hedge fired -> "
+                  f"{'hedge won' if won else 'primary won'} "
+                  f"({r.metadata.provider}, {r.metadata.usage.latency:.2f}s, "
+                  f"wasted ${r.metadata.hedge_wasted_cost:.6f})")
+    lats.sort()
+    return bridge, lats[int(0.95 * len(lats))]
+
+
+_, p95_off = stall_trace(hedge=False)
+bridge, p95_on = stall_trace(hedge=True)
+h = bridge.stats()["providers"]["hedges"]
+print(f"hedging: {h['fired']} fired / {h['won']} won, "
+      f"p95 latency {p95_off:.2f}s without -> {p95_on:.2f}s with, "
+      f"wasted ${h['wasted_cost']:.6f} disclosed — "
+      f"ledger spent ${bridge.ledger.spent('demo'):.6f}")

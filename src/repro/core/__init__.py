@@ -24,6 +24,9 @@ from repro.core.pipeline import (CacheStage, ContextStage, DeclineStage,
                                  default_pipelines)
 from repro.core.policy import (BudgetLedger, CompiledPolicy, PlanSpec,
                                PolicyCompiler)
+from repro.core.providers import (BreakerState, CircuitBreaker, FaultSpec,
+                                  HealthTracker, ProviderAdapter,
+                                  ProviderError, ProviderFleet)
 from repro.core.proxy import LLMBridge, ProxyConfig, ProxyStats, jsonable
 from repro.core.embeddings import ModelEmbedder, WorkloadEmbedder
 from repro.core.vector_store import VectorStore
@@ -45,6 +48,8 @@ __all__ = [
     "CacheStage", "ContextStage", "DeclineStage", "ModelStage",
     "PrefetchStage", "PromptPipeline", "RequestState", "RouteStage",
     "ServePrefetchedStage", "Stage", "default_pipelines",
+    "BreakerState", "CircuitBreaker", "FaultSpec", "HealthTracker",
+    "ProviderAdapter", "ProviderError", "ProviderFleet",
 ]
 
 

@@ -168,6 +168,16 @@ class Metadata:
     spec_acceptance: Optional[float] = None
     spec_draft_time: float = 0.0
     spec_verify_time: float = 0.0
+    # -- provider-fleet disclosure (core/providers.py) ----------------------
+    # the backend that actually answered (may differ from the routed model
+    # after retry-against-healthy), how many attempts the request consumed,
+    # and the per-attempt event trail: retries, backoffs, breaker
+    # transitions, hedge fire/win/loss.  ``hedge_wasted_cost`` is the
+    # cancelled hedge loser's spend — disclosed, never charged to the user.
+    provider: str = ""
+    provider_attempts: int = 0
+    provider_events: List[str] = dataclasses.field(default_factory=list)
+    hedge_wasted_cost: float = 0.0
 
 
 @dataclasses.dataclass

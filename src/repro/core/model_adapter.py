@@ -11,6 +11,32 @@ workload (benchmarks at paper scale).
 verifier scores it 1-10, M2 is consulted only below threshold t.  The
 adapter's heuristic picks verifier/M1/M2 so that
 cost(verifier) <= cost(M1) <= cost(M2) (§3.3).
+
+Reliability layering (``core/providers.py``).  Quality/cost selection
+assumes backends answer; production backends flake, stall and rate-limit.
+The adapter therefore stacks three layers under every ``answer`` call:
+
+1. **ProviderAdapter** — each ``PoolModel`` is registered with the
+   ``ProviderFleet`` at construction; an injectable ``FaultSpec`` per
+   provider models errors/timeouts/rate-limits/outages and the latency
+   tail, from a per-provider seeded stream (chaos replays exactly).
+2. **HealthTracker + CircuitBreaker** — every attempt (fleet-routed or
+   passive via ``ProviderFleet.observe`` on the fast path) feeds an EWMA
+   health score and a three-state breaker.  Open circuits are skipped by
+   routing, by the ``PolicyCompiler``'s candidate ordering, and by the
+   background prefetch worker.
+3. **Routing policy** — with chaos active, ``answer`` delegates to
+   ``ProviderFleet.execute``: bounded retry-against-healthy with backoff
+   (candidates re-ranked by live health after every failure) and hedged
+   requests for latency-first callers.  A raising REAL-mode backend is a
+   provider failure like any other: it surfaces as a structured
+   ``ProviderError`` (provider name + attempt count in ``Metadata``)
+   instead of killing the batch.
+
+Cost contract: the returned ``Resolution`` carries the cost of the attempt
+that actually answered — failed attempts add latency only, hedge losers are
+accounted in ``fleet.snapshot()`` — so the ``BudgetLedger`` settles against
+the answering provider and retries/hedges can never double-charge.
 """
 from __future__ import annotations
 
@@ -20,6 +46,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.api import Usage
+from repro.core.providers import ProviderError, ProviderFleet
 from repro.core.workload import Query, Workload, capability_from_params
 
 PRICE_IN_PER_1K_PER_BPARAM = 0.01     # cost units; relative scale is what matters
@@ -94,6 +121,11 @@ class Resolution:
     true_quality: Optional[float] = None
     models_consulted: List[str] = dataclasses.field(default_factory=list)
     verifier_score: Optional[float] = None
+    # -- provider-fleet disclosure (core/providers.py) ----------------------
+    provider: str = ""                 # backend that actually answered
+    attempts: int = 1                  # 1 = first try; >1 = retried
+    provider_events: List[str] = dataclasses.field(default_factory=list)
+    hedge_wasted_cost: float = 0.0     # cancelled hedge loser's spend
 
 
 class ModelPool:
@@ -147,7 +179,7 @@ class ModelPool:
 
 class ModelAdapter:
     def __init__(self, pool: ModelPool, workload: Optional[Workload] = None,
-                 seed: int = 0):
+                 seed: int = 0, fleet: Optional[ProviderFleet] = None):
         self.pool = pool
         self.workload = workload
         self.rng = np.random.default_rng(seed)
@@ -158,6 +190,15 @@ class ModelAdapter:
         # per-model speculative-decode telemetry, accumulated across batched
         # decodes (proxy.stats()["serving"] and Metadata.spec_* read this)
         self.serving_stats: Dict[str, Dict[str, Any]] = {}
+        # the reliability layer: every pool model is a registered provider.
+        # With no FaultSpec injected the fleet is a passive health tap (zero
+        # extra RNG draws, bit-identical behaviour); chaos specs or
+        # always_route switch answer() onto fleet routing.
+        self.fleet = fleet if fleet is not None else ProviderFleet(
+            seed=seed + 2000)
+        for m in pool.list():
+            if m.name not in self.fleet.adapters:
+                self.fleet.register(m)
 
     # -- answering ------------------------------------------------------------
     def answer(self, model: PoolModel, prompt: str, *,
@@ -167,27 +208,61 @@ class ModelAdapter:
                cached_facts: bool = False,
                out_tokens: Optional[int] = None,
                text_override: Optional[str] = None,
-               rng: Optional[np.random.Generator] = None) -> Resolution:
+               rng: Optional[np.random.Generator] = None,
+               hedge: bool = False,
+               fallback: Optional[List[PoolModel]] = None) -> Resolution:
+        """Answer ``prompt`` with ``model`` (SIM template or REAL engine).
+
+        When the provider fleet is routing (chaos injected or
+        ``always_route``) and no pre-batched ``text_override`` is present,
+        the call goes through ``ProviderFleet.execute``: the answering model
+        may be a healthier ``fallback`` candidate, and ``hedge=True``
+        (latency-first plans) races the p95-tail against the
+        next-healthiest provider.  Exhausted fleets raise ``ProviderError``.
+        """
         rng = rng if rng is not None else self.rng
         prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
         in_tokens = prompt_tokens + context_tokens
         out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
 
-        if text_override is not None:
-            text = text_override
-        elif model.engine is not None and model.tokenizer is not None:
-            text = self._real_generate(model, prompt, out_tokens)
-        else:
-            text = f"[{model.name}] response({_count_tokens(prompt)}t prompt): {prompt[:64]}"
+        def run(m: PoolModel) -> Resolution:
+            if text_override is not None:
+                text = text_override
+            elif m.engine is not None and m.tokenizer is not None:
+                text = self._guarded_real_generate(m, prompt, out_tokens)
+            else:
+                text = (f"[{m.name}] response({_count_tokens(prompt)}t "
+                        f"prompt): {prompt[:64]}")
+            tq = None
+            if query is not None and self.workload is not None:
+                tq = self.workload.quality(
+                    query, m.effective_capability(),
+                    has_context=has_context, cached_facts=cached_facts,
+                    rng=rng)
+            usage = m.usage_for(in_tokens, out_tokens, rng=rng)
+            return Resolution(text=text, model=m.name, usage=usage,
+                              true_quality=tq, models_consulted=[m.name],
+                              provider=m.name)
 
-        tq = None
-        if query is not None and self.workload is not None:
-            tq = self.workload.quality(
-                query, model.effective_capability(),
-                has_context=has_context, cached_facts=cached_facts, rng=rng)
-        usage = model.usage_for(in_tokens, out_tokens, rng=rng)
-        return Resolution(text=text, model=model.name, usage=usage,
-                          true_quality=tq, models_consulted=[model.name])
+        if text_override is None and self.fleet.routing_enabled:
+            res = self.fleet.execute(
+                model, fallback if fallback is not None else self.pool.list(),
+                run, lambda m: self.estimate_answer(
+                    m, prompt, context_tokens=context_tokens, query=query,
+                    out_tokens=out_tokens),
+                hedge=hedge)
+            res.models_consulted = [res.model]
+            return res
+
+        try:
+            res = run(model)
+        except ProviderError:
+            self.fleet.observe(model.name, False, 0.0, kind="exception")
+            raise
+        # passive health tap: the fast path still feeds the trackers (no
+        # extra RNG draws, so legacy draw sequences stay bit-identical)
+        self.fleet.observe(model.name, True, res.usage.latency)
+        return res
 
     # -- cost/latency estimation (the compiler's oracle) -----------------------
     def estimate_answer(self, model: PoolModel, prompt: str, *,
@@ -227,6 +302,20 @@ class ModelAdapter:
         gen = model.engine.generate(toks, max_new=min(out_tokens, 32))
         return model.tokenizer.decode(list(np.asarray(gen[0])))
 
+    def _guarded_real_generate(self, model: PoolModel, prompt: str,
+                               out_tokens: int) -> str:
+        """REAL-mode exception boundary: a raising backend (engine or
+        tokenizer) surfaces as a structured ``ProviderError`` — under fleet
+        routing it becomes one failed attempt (retried against healthy
+        providers); on the fast path it reaches the caller with provider
+        name + attempt count instead of a raw stack unwind."""
+        try:
+            return self._real_generate(model, prompt, out_tokens)
+        except Exception as e:
+            raise ProviderError(provider=model.name, attempts=1,
+                                kind=f"exception({type(e).__name__})",
+                                cause=e) from e
+
     # -- batched decode (the serving substrate) --------------------------------
     def generate_batch(self, items) -> List[Optional[str]]:
         """items: ``[(model, prompt, query)]`` with optional trailing
@@ -252,9 +341,17 @@ class ModelAdapter:
             groups.setdefault(model.name, (model, []))[1].append(
                 (i, prompt, out_tokens, deadline, tier))
         for model, rows in groups.values():
-            texts = self._real_generate_batch(
-                model, [r[1] for r in rows], [r[2] for r in rows],
-                deadlines=[r[3] for r in rows], tiers=[r[4] for r in rows])
+            try:
+                texts = self._real_generate_batch(
+                    model, [r[1] for r in rows], [r[2] for r in rows],
+                    deadlines=[r[3] for r in rows], tiers=[r[4] for r in rows])
+            except Exception:
+                # one model's raising backend must not kill the whole batch:
+                # record the provider failure (feeds health + breaker) and
+                # leave these rows un-overridden — answer() retries them
+                # per-request through the fleet's exception boundary
+                self.fleet.observe(model.name, False, 0.0, kind="exception")
+                continue
             for row, text in zip(rows, texts):
                 out[row[0]] = text
         return out

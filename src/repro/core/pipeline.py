@@ -204,29 +204,35 @@ class RouteStage(Stage):
     def fixed(cls) -> "RouteStage":
         return cls(lambda p, r: p.pool.get(r.params["model"]), "fixed")
 
+    # the best/cheapest/mid selectors route over ``proxy.healthy_models()``:
+    # an open-circuit provider drops out of rotation until its breaker
+    # half-opens (when every circuit is open the full pool returns —
+    # degraded service beats none)
+
     @classmethod
     def best(cls) -> "RouteStage":
-        return cls(lambda p, r: p.pool.best(), "best")
+        return cls(lambda p, r: p.pool.best(p.healthy_models()), "best")
 
     @classmethod
     def cheapest(cls) -> "RouteStage":
-        return cls(lambda p, r: p.pool.cheapest(), "cheapest")
+        return cls(lambda p, r: p.pool.cheapest(p.healthy_models()),
+                   "cheapest")
 
     @classmethod
     def param_or_best(cls) -> "RouteStage":
-        return cls(lambda p, r: p._param_model(r, "model") or p.pool.best(),
-                   "param|best")
+        return cls(lambda p, r: p._param_model(r, "model")
+                   or p.pool.best(p.healthy_models()), "param|best")
 
     @classmethod
     def param_or_cheapest(cls) -> "RouteStage":
-        return cls(lambda p, r: p._param_model(r, "model") or p.pool.cheapest(),
-                   "param|cheapest")
+        return cls(lambda p, r: p._param_model(r, "model")
+                   or p.pool.cheapest(p.healthy_models()), "param|cheapest")
 
     @classmethod
     def mid(cls) -> "RouteStage":
         """Median-priced model — the COST preset's escalation step."""
         def select(p, r):
-            ms = sorted(p.pool.list(), key=lambda m: m.price_in)
+            ms = sorted(p.healthy_models(), key=lambda m: m.price_in)
             return ms[len(ms) // 2]
         return cls(select, "mid")
 
@@ -234,8 +240,8 @@ class RouteStage(Stage):
     def m2_or_best(cls) -> "RouteStage":
         """Straight to the expensive model (§3.3) — MODEL_SELECTOR's
         escalation step."""
-        return cls(lambda p, r: p._param_model(r, "m2") or p.pool.best(),
-                   "m2|best")
+        return cls(lambda p, r: p._param_model(r, "m2")
+                   or p.pool.best(p.healthy_models()), "m2|best")
 
     @classmethod
     def named(cls, name: str) -> "RouteStage":
@@ -263,7 +269,9 @@ class ModelStage(Stage):
             state.req, state.model, state.messages, state.strategy,
             state.gate_usage, state.decision_latency,
             verification=self.verification, text_override=state.text_override,
-            resolution_override=state.resolution_override)
+            resolution_override=state.resolution_override,
+            reserved=(state.policy.reserved if state.policy is not None
+                      else 0.0))
 
     def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
         todo = [s for s in states if not s.resolved]
@@ -361,6 +369,12 @@ class PrefetchStage(Stage):
     def run(self, proxy, state: RequestState) -> None:
         req, quick, msgs = state.req, state.response, list(state.messages)
         best = proxy.pool.best()
+        # provider-health gate (mirrors the budget gate below): background
+        # work must not be fired at a provider whose breaker is open — the
+        # decode would burn a probe slot or fail outright off-path
+        if proxy.providers.breaker_open(best.name):
+            state.notes["prefetch"] = "skip(provider_down)"
+            return
         hold = proxy.adapter.estimate_answer(
             best, req.prompt,
             context_tokens=ContextManager.token_count(msgs),

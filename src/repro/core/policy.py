@@ -383,14 +383,23 @@ class PolicyCompiler:
                          req: ProxyRequest, proxy
                          ) -> List[Tuple[PlanSpec, float, float]]:
         """Ordered (most→least capable) candidate specs with deterministic
-        cost/latency estimates; index = degradation level."""
+        cost/latency estimates; index = degradation level.
+
+        Provider health flows in here: open-circuit providers are dropped
+        from the eligible set (compiled plans and escalation ladders skip
+        them), and capability ties break toward the healthier provider —
+        so a flapping best-tier backend loses the ``best`` slot to an
+        equally-capable healthy sibling while its breaker is open."""
         pool = proxy.pool
         eligible = pool.list()
         if cons.min_quality is not None:
             filtered = pool.filter(min_capability=cons.min_quality)
             eligible = filtered or eligible     # best-effort floor
-        best = pool.best(eligible)
-        cheapest = pool.cheapest(eligible)
+        eligible = proxy.healthy_models(eligible)
+        health = proxy.providers.health_score
+        best = max(eligible, key=lambda m: (m.effective_capability(),
+                                            health(m.name)))
+        cheapest = min(eligible, key=lambda m: (m.price_in, -health(m.name)))
         mids = sorted(eligible, key=lambda m: m.price_in)
         mid = mids[len(mids) // 2]
         cfg_k = self.config.default_context_k

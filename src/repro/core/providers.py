@@ -1,0 +1,612 @@
+"""Provider fleet: health-tracked routing, circuit breaking, hedged fallbacks.
+
+The paper's model-selection axis (§3.3) picks models by quality/cost and
+assumes every backend always answers.  A production proxy fronting
+cost-sensitive users must keep serving when upstreams flake, rate-limit or
+stall — the reliability policy belongs in the middlebox, next to the
+cache/route/budget policies it composes with.  This module is that failure
+domain, layered under ``ModelAdapter``:
+
+* ``FaultSpec``       — an injectable failure/latency model per provider:
+  error rate, timeout rate, rate-limit windows, hard-outage windows, and a
+  latency distribution with an explicit p95-straggler tail.  Every draw
+  comes from a per-provider seeded generator with a FIXED number of draws
+  per attempt, so a chaos run replays exactly from its seed (and two runs
+  that differ only in hedging keep their per-provider streams aligned).
+* ``HealthTracker``   — per-provider EWMA success rate, observed p50/p95
+  latency over a bounded window of successful calls, consecutive-failure
+  count, and lifetime counters.
+* ``CircuitBreaker``  — three-state machine fed by the tracker: CLOSED
+  opens after ``failure_threshold`` consecutive failures; OPEN rejects all
+  non-probe traffic until ``cooldown`` elapses on the fleet clock; HALF_OPEN
+  admits at most ``probe_limit`` concurrent probes and closes after
+  ``probe_successes`` successful ones (one probe failure re-opens).  Every
+  transition is timestamped for disclosure.
+* ``ProviderFleet``   — the routing core.  ``execute`` runs one logical
+  request: the primary attempt, bounded **retry-against-healthy** with
+  exponential backoff + deterministic jitter (surviving candidates are
+  re-ranked by health after every failure, open circuits skipped), and
+  **hedged requests** for latency-first callers (once the primary exceeds
+  its tracked p95, a second request fires at the next-healthiest provider;
+  the winner is kept, the loser is cancelled and its cost accounted as
+  wasted — never charged to the user's ledger).  Exhausted attempts raise a
+  structured ``ProviderError`` instead of a raw backend exception.
+
+Time is a **virtual clock**: the fleet advances it by each attempt's
+modelled latency (plus backoff), so breaker cooldowns, rate-limit windows
+and outage schedules run deterministically at benchmark speed.  Pass
+``clock`` to pin it to wall time instead.
+
+Cost accounting contract: only the attempt that actually answered carries
+cost in the returned ``Resolution`` — failed attempts contribute latency
+(the caller waited through them) but zero cost, and a hedge loser's cost is
+disclosed via ``hedge_wasted_cost``/``snapshot()`` without touching the
+response usage.  The ``BudgetLedger`` therefore settles against the
+answering provider and can never be double-charged by retries or hedges.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class BreakerState(str, enum.Enum):
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+
+class ProviderError(RuntimeError):
+    """Structured terminal failure of one logical request: every candidate
+    was exhausted (or skipped on an open circuit).  Carries what ``Metadata``
+    disclosure needs — the last provider tried, the attempt count, the
+    per-attempt event trail and the latency the caller waited through."""
+
+    def __init__(self, provider: str, attempts: int, kind: str,
+                 events: Optional[List[str]] = None, latency: float = 0.0,
+                 cause: Optional[BaseException] = None):
+        self.provider = provider
+        self.attempts = attempts
+        self.kind = kind
+        self.events = list(events or [])
+        self.latency = latency
+        self.cause = cause
+        super().__init__(
+            f"provider {provider!r} failed ({kind}) after {attempts} "
+            f"attempt(s): {self.events}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Injectable failure/latency model for one provider (chaos knob).
+
+    Latency shaping multiplies the underlying model's latency: a lognormal
+    jitter of ``latency_sigma`` around ``latency_mult``, plus a
+    ``tail_rate``-probability straggler at ``tail_mult`` (the p95+ tail the
+    hedger is built to cut).  Faults: ``error_rate`` hard failures (fail
+    fast at a fraction of the base latency), ``timeout_rate`` stalls charged
+    ``timeout_s``, token-bucket style ``rate_limit`` per ``rate_window``
+    seconds of fleet time, and ``outages`` — hard-down [start, end) windows
+    on the fleet clock during which every attempt fails.
+    """
+    error_rate: float = 0.0
+    timeout_rate: float = 0.0
+    timeout_s: float = 10.0
+    latency_mult: float = 1.0
+    latency_sigma: float = 0.0
+    tail_rate: float = 0.0
+    tail_mult: float = 1.0
+    rate_limit: Optional[int] = None     # max attempts per rate_window
+    rate_window: float = 1.0
+    outages: Tuple[Tuple[float, float], ...] = ()
+
+    def down_at(self, now: float) -> bool:
+        return any(s <= now < e for s, e in self.outages)
+
+
+PASSTHROUGH = FaultSpec()
+
+
+class HealthTracker:
+    """EWMA health signal per provider.
+
+    ``success`` is an exponentially-weighted success rate (alpha-smoothed,
+    optimistic start at 1.0 so cold providers are eligible);  latencies of
+    *successful* calls feed a bounded window for the observed p50/p95 (the
+    hedge trigger); failures bump ``consecutive_failures`` (the breaker's
+    trip signal).  Lifetime counters feed ``snapshot()``.
+    """
+
+    def __init__(self, alpha: float = 0.2, window: int = 256):
+        self.alpha = alpha
+        self.success = 1.0
+        self.consecutive_failures = 0
+        self.latencies: collections.deque = collections.deque(maxlen=window)
+        self.calls = 0
+        self.failures = 0
+        self.failure_kinds: Dict[str, int] = {}
+
+    def record(self, ok: bool, latency: float, kind: str = "") -> None:
+        self.calls += 1
+        self.success = ((1 - self.alpha) * self.success
+                        + self.alpha * (1.0 if ok else 0.0))
+        if ok:
+            self.consecutive_failures = 0
+            self.latencies.append(latency)
+        else:
+            self.consecutive_failures += 1
+            self.failures += 1
+            if kind:
+                self.failure_kinds[kind] = self.failure_kinds.get(kind, 0) + 1
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    def p50(self) -> float:
+        return self._pct(50)
+
+    def p95(self) -> float:
+        return self._pct(95)
+
+    def score(self) -> float:
+        """Health in [0, 1]: the success EWMA, shaded down when observed
+        p95 runs far above observed p50 (an unstable tail is a risk even
+        when calls succeed)."""
+        p50, p95 = self.p50(), self.p95()
+        tail_penalty = 0.0
+        if p50 > 0 and p95 > 4 * p50:
+            tail_penalty = min(0.2, 0.02 * (p95 / p50 - 4))
+        return max(0.0, self.success - tail_penalty)
+
+
+class CircuitBreaker:
+    """CLOSED -> OPEN -> HALF_OPEN three-state breaker (fleet-clock time).
+
+    Invariants (property-tested): an OPEN circuit admits **no** traffic
+    before ``cooldown`` elapses; HALF_OPEN admits only probes, at most
+    ``probe_limit`` concurrently; ``probe_successes`` successful probes
+    close the circuit, one failed probe re-opens it with a fresh cooldown.
+    """
+
+    def __init__(self, failure_threshold: int = 5, cooldown: float = 30.0,
+                 probe_limit: int = 2, probe_successes: int = 2):
+        assert failure_threshold >= 1 and probe_limit >= 1
+        self.failure_threshold = failure_threshold
+        self.cooldown = cooldown
+        self.probe_limit = probe_limit
+        self.probe_successes = probe_successes
+        self.state = BreakerState.CLOSED
+        self.opened_at = 0.0
+        self.probes_in_flight = 0
+        self._probe_wins = 0
+        self.transitions: List[Tuple[float, str, str]] = []
+
+    def _move(self, now: float, to: BreakerState) -> None:
+        self.transitions.append((now, self.state.value, to.value))
+        self.state = to
+        if to == BreakerState.OPEN:
+            self.opened_at = now
+        if to != BreakerState.HALF_OPEN:
+            self.probes_in_flight = 0
+            self._probe_wins = 0
+
+    def allow(self, now: float) -> Tuple[bool, bool]:
+        """(admit?, is_probe?) for one attempt.  An admitted probe MUST be
+        settled with ``on_result(..., probe=True)``."""
+        if self.state == BreakerState.OPEN:
+            if now - self.opened_at < self.cooldown:
+                return False, False
+            self._move(now, BreakerState.HALF_OPEN)
+        if self.state == BreakerState.HALF_OPEN:
+            if self.probes_in_flight >= self.probe_limit:
+                return False, False
+            self.probes_in_flight += 1
+            return True, True
+        return True, False
+
+    def on_result(self, now: float, ok: bool, *, probe: bool = False,
+                  consecutive_failures: int = 0) -> None:
+        if probe and self.state == BreakerState.HALF_OPEN:
+            self.probes_in_flight = max(0, self.probes_in_flight - 1)
+            if ok:
+                self._probe_wins += 1
+                if self._probe_wins >= self.probe_successes:
+                    self._move(now, BreakerState.CLOSED)
+            else:
+                self._move(now, BreakerState.OPEN)
+            return
+        if self.state == BreakerState.CLOSED and not ok \
+                and consecutive_failures >= self.failure_threshold:
+            self._move(now, BreakerState.OPEN)
+
+
+class ProviderAdapter:
+    """One backend wrapped with its fault model, health and breaker."""
+
+    def __init__(self, model: Any, fault: FaultSpec = PASSTHROUGH,
+                 breaker: Optional[CircuitBreaker] = None, seed: int = 0,
+                 alpha: float = 0.2):
+        self.model = model
+        self.name = model.name
+        self.fault = fault
+        self.health = HealthTracker(alpha=alpha)
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.rng = np.random.default_rng(seed)
+        self._window_calls: collections.deque = collections.deque()
+
+    def _rate_limited(self, now: float) -> bool:
+        if self.fault.rate_limit is None:
+            return False
+        w = self.fault.rate_window
+        while self._window_calls and self._window_calls[0] <= now - w:
+            self._window_calls.popleft()
+        return len(self._window_calls) >= self.fault.rate_limit
+
+    def roll(self, now: float, base_latency: float
+             ) -> Tuple[Optional[str], float]:
+        """Sample one attempt's fate: (fault_kind | None, attempt latency).
+
+        Draw order and count are FIXED (four draws) regardless of outcome,
+        so per-provider streams replay identically across runs that consult
+        this provider the same number of times.
+        """
+        u_fault = float(self.rng.random())
+        mult = (float(self.rng.lognormal(0.0, self.fault.latency_sigma))
+                if self.fault.latency_sigma > 0 else 1.0)
+        u_tail = float(self.rng.random())
+        u_err = float(self.rng.random())
+        f = self.fault
+        if f.down_at(now):
+            return "outage", base_latency * (0.05 + 0.45 * u_err)
+        if self._rate_limited(now):
+            # a 429 never reached the backend: no window slot consumed
+            return "rate_limit", 0.05 * (1.0 + u_err)
+        self._window_calls.append(now)
+        if u_fault < f.error_rate:
+            return "error", base_latency * (0.05 + 0.45 * u_err)
+        if u_fault < f.error_rate + f.timeout_rate:
+            return "timeout", f.timeout_s
+        lat = base_latency * f.latency_mult * mult
+        if u_tail < f.tail_rate:
+            lat *= f.tail_mult
+        return None, lat
+
+    def snapshot(self) -> Dict[str, Any]:
+        h = self.health
+        return {
+            "state": self.breaker.state.value,
+            "health": h.score(),
+            "success_ewma": h.success,
+            "consecutive_failures": h.consecutive_failures,
+            "p50_s": h.p50(),
+            "p95_s": h.p95(),
+            "calls": h.calls,
+            "failures": h.failures,
+            "failure_kinds": dict(h.failure_kinds),
+            "transitions": [list(t) for t in self.breaker.transitions],
+        }
+
+
+@dataclasses.dataclass
+class _Attempt:
+    """One settled attempt inside ``execute`` (internal bookkeeping)."""
+    provider: str
+    kind: Optional[str]                  # None = success
+    latency: float
+    resolution: Optional[Any] = None
+
+
+class ProviderFleet:
+    """Routing core over the registered ``ProviderAdapter``s.
+
+    ``execute`` is the single entry point ``ModelAdapter.answer`` routes
+    through when chaos is active (``routing_enabled``); ``observe`` is the
+    passive tap the legacy fast path uses so health/stats stay populated
+    even with no faults injected.
+    """
+
+    def __init__(self, seed: int = 0, max_attempts: int = 3,
+                 backoff_base: float = 0.05, backoff_mult: float = 2.0,
+                 hedge_enabled: bool = True, hedge_min_samples: int = 8,
+                 always_route: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
+        assert max_attempts >= 1
+        self.seed = seed
+        self.max_attempts = max_attempts
+        self.backoff_base = backoff_base
+        self.backoff_mult = backoff_mult
+        self.hedge_enabled = hedge_enabled
+        self.hedge_min_samples = hedge_min_samples
+        self.always_route = always_route
+        self.adapters: Dict[str, ProviderAdapter] = {}
+        self._clock = clock
+        self._now = 0.0
+        # deterministic backoff jitter, separate from every provider stream
+        self._jitter_rng = np.random.default_rng(seed + 77)
+        self.retries = 0
+        self.hedges_fired = 0
+        self.hedges_won = 0
+        self.hedges_lost = 0
+        self.wasted_hedge_cost = 0.0
+        self.exhausted = 0
+
+    # -- registry / clock ----------------------------------------------------
+    def register(self, model: Any, fault: FaultSpec = PASSTHROUGH,
+                 breaker: Optional[CircuitBreaker] = None) -> ProviderAdapter:
+        a = ProviderAdapter(
+            model, fault=fault, breaker=breaker,
+            seed=self.seed + (hash(model.name) % (1 << 20)))
+        self.adapters[model.name] = a
+        return a
+
+    def configure(self, name: str, fault: FaultSpec,
+                  breaker: Optional[CircuitBreaker] = None) -> None:
+        """Inject (or clear, with ``PASSTHROUGH``) a chaos spec mid-run."""
+        a = self.adapters[name]
+        a.fault = fault
+        if breaker is not None:
+            a.breaker = breaker
+
+    @property
+    def routing_enabled(self) -> bool:
+        return self.always_route or any(
+            a.fault is not PASSTHROUGH and a.fault != PASSTHROUGH
+            for a in self.adapters.values())
+
+    def now(self) -> float:
+        return self._clock() if self._clock is not None else self._now
+
+    def advance(self, dt: float) -> None:
+        if self._clock is None:
+            self._now += max(0.0, dt)
+
+    # -- health-aware views (PolicyCompiler / RouteStage consult these) ------
+    def breaker_open(self, name: str) -> bool:
+        a = self.adapters.get(name)
+        if a is None:
+            return False
+        if a.breaker.state == BreakerState.OPEN:
+            # a cooled-down circuit is probe-eligible, not hard-down
+            return self.now() - a.breaker.opened_at < a.breaker.cooldown
+        return False
+
+    def health_score(self, name: str) -> float:
+        a = self.adapters.get(name)
+        return a.health.score() if a is not None else 1.0
+
+    def healthy(self, models: Sequence[Any]) -> List[Any]:
+        """``models`` minus open circuits; falls back to the full list when
+        every circuit is open (serving degraded beats serving nothing)."""
+        ok = [m for m in models if not self.breaker_open(m.name)]
+        return ok if ok else list(models)
+
+    def rank(self, models: Sequence[Any]) -> List[Any]:
+        """Healthiest-first candidate order: open circuits last, health
+        bucketed to 0.1 so near-equal health prefers the cheaper provider
+        (reliability never silently buys the most expensive fallback)."""
+        return sorted(models, key=lambda m: (
+            self.breaker_open(m.name),
+            -round(self.health_score(m.name), 1),
+            getattr(m, "price_in", 0.0)))
+
+    # -- passive tap (legacy fast path, REAL-mode boundary) ------------------
+    def observe(self, name: str, ok: bool, latency: float,
+                kind: str = "") -> None:
+        a = self.adapters.get(name)
+        if a is None:
+            return
+        probe = False
+        if a.breaker.state != BreakerState.CLOSED:
+            allowed, probe = a.breaker.allow(self.now())
+            if not allowed:
+                probe = False
+        a.health.record(ok, latency, kind=kind)
+        a.breaker.on_result(
+            self.now(), ok, probe=probe,
+            consecutive_failures=a.health.consecutive_failures)
+        self.advance(latency)
+
+    # -- the routing core ----------------------------------------------------
+    def execute(self, primary: Any, candidates: Sequence[Any],
+                run: Callable[[Any], Any], estimate: Callable[[Any], Any],
+                *, hedge: bool = False) -> Any:
+        """Run one logical request against the fleet.
+
+        ``run(model) -> Resolution`` performs a real attempt (SIM or REAL —
+        the ModelAdapter closure); ``estimate(model) -> Usage`` prices one
+        without side effects (failed attempts charge latency off it).  The
+        returned ``Resolution`` carries the full disclosure trail
+        (``provider_events``, ``attempts``, ``hedge_wasted_cost``) and a
+        usage whose latency includes every failed attempt and backoff the
+        caller waited through — and whose COST is the winner's alone.
+        """
+        events: List[str] = []
+        attempts = 0
+        waited = 0.0                    # latency of failed attempts + backoff
+        backoff = self.backoff_base
+        tried: set = set()
+        last_kind = "exhausted"
+        pool = [m for m in candidates if m.name in self.adapters]
+        if primary.name not in [m.name for m in pool]:
+            pool = [primary] + pool
+
+        while attempts < self.max_attempts:
+            if attempts == 0 and not self.breaker_open(primary.name):
+                order = [primary]
+            else:
+                if attempts == 0 and primary.name not in tried:
+                    events.append(f"skip(open):{primary.name}")
+                    tried.add(primary.name)
+                # re-rank the surviving candidates by live health
+                order = [m for m in self.rank(pool) if m.name not in tried]
+            nxt = next((m for m in order if m.name not in tried), None)
+            if nxt is None:
+                break
+            tried.add(nxt.name)
+            adapter = self.adapters[nxt.name]
+            allowed, probe = adapter.breaker.allow(self.now())
+            if not allowed:
+                events.append(f"skip(open):{nxt.name}")
+                continue
+            if probe:
+                events.append(f"probe:{nxt.name}")
+            attempts += 1
+            att = self._attempt(adapter, run, estimate)
+            if att.kind is None:
+                hedged = None
+                if hedge and self._hedge_ready(adapter, att.latency):
+                    hedged = self._hedge(adapter, att, pool, tried, run,
+                                         estimate, events)
+                win = hedged if hedged is not None else att
+                self._settle(adapter, att, probe, events,
+                             override_ok=True)
+                res = win.resolution
+                self.advance(win.latency + waited)
+                return self._finish(res, win, attempts, waited, events)
+            events.append(f"{att.kind}:{nxt.name}")
+            last_kind = att.kind
+            self._settle(adapter, att, probe, events)
+            if att.kind == "timeout" and hedge \
+                    and self._hedge_ready(adapter, att.latency):
+                # the stall case hedging exists for: the hedge fired at the
+                # p95 mark, long before the primary's timeout landed — a
+                # successful hedge returns without waiting the timeout out
+                # (the primary was cancelled and billed nothing: no waste)
+                win = self._hedge(adapter, att, pool, tried, run, estimate,
+                                  events, primary_failed=True)
+                if win is not None:
+                    self.advance(win.latency + waited)
+                    return self._finish(win.resolution, win, attempts,
+                                        waited, events)
+            waited += att.latency
+            if attempts < self.max_attempts:
+                jitter = float(self._jitter_rng.uniform(0.0, backoff))
+                waited += backoff + jitter
+                events.append(f"backoff:{backoff + jitter:.3f}s")
+                backoff *= self.backoff_mult
+                self.retries += 1
+        self.exhausted += 1
+        self.advance(waited)
+        raise ProviderError(provider=(sorted(tried)[0] if tried
+                                      else primary.name),
+                            attempts=attempts, kind=last_kind,
+                            events=events, latency=waited)
+
+    # -- internals -----------------------------------------------------------
+    def _attempt(self, adapter: ProviderAdapter,
+                 run: Callable[[Any], Any],
+                 estimate: Callable[[Any], Any]) -> _Attempt:
+        base = float(estimate(adapter.model).latency)
+        kind, latency = adapter.roll(self.now(), base)
+        if kind is not None:
+            return _Attempt(adapter.name, kind, latency)
+        try:
+            res = run(adapter.model)
+        except Exception as e:                      # the REAL-mode boundary
+            return _Attempt(adapter.name, f"exception({type(e).__name__})",
+                            base * 0.25)
+        # provider-level shaping replaces the model's own jitter draw: the
+        # fleet's FaultSpec owns the latency distribution under chaos
+        res.usage = dataclasses.replace(res.usage, latency=latency)
+        return _Attempt(adapter.name, None, latency, resolution=res)
+
+    def _settle(self, adapter: ProviderAdapter, att: _Attempt, probe: bool,
+                events: List[str], override_ok: Optional[bool] = None) -> None:
+        ok = att.kind is None if override_ok is None else override_ok
+        before = adapter.breaker.state
+        adapter.health.record(ok, att.latency, kind=att.kind or "")
+        adapter.breaker.on_result(
+            self.now(), ok, probe=probe,
+            consecutive_failures=adapter.health.consecutive_failures)
+        after = adapter.breaker.state
+        if after != before:
+            events.append(f"breaker:{adapter.name}:{before.value}->"
+                          f"{after.value}")
+
+    def _hedge_ready(self, adapter: ProviderAdapter, latency: float) -> bool:
+        if not self.hedge_enabled:
+            return False
+        if len(adapter.health.latencies) < self.hedge_min_samples:
+            return False
+        p95 = adapter.health.p95()
+        return p95 > 0 and latency > p95
+
+    def _hedge(self, primary: ProviderAdapter, att: _Attempt,
+               pool: Sequence[Any], tried: set,
+               run: Callable[[Any], Any], estimate: Callable[[Any], Any],
+               events: List[str],
+               primary_failed: bool = False) -> Optional[_Attempt]:
+        """Primary exceeded its tracked p95: fire at the next-healthiest
+        provider and keep the winner.  Returns the winning attempt (with its
+        latency set to the realised race outcome) or None when no hedge
+        candidate exists / the hedge lost.  The loser's cost is accounted
+        as wasted, never returned to the caller.  With ``primary_failed``
+        (the timeout-stall case) the primary never produced an answer, so a
+        successful hedge wins unconditionally and nothing is wasted."""
+        cand = next((m for m in self.rank(pool)
+                     if m.name != primary.name and m.name not in tried
+                     and not self.breaker_open(m.name)), None)
+        if cand is None:
+            return None
+        adapter = self.adapters[cand.name]
+        allowed, probe = adapter.breaker.allow(self.now())
+        if not allowed:
+            return None
+        fired_at = primary.health.p95()     # hedge launches at the p95 mark
+        self.hedges_fired += 1
+        events.append(f"hedge:fired:{cand.name}@p95={fired_at:.3f}s")
+        h = self._attempt(adapter, run, estimate)
+        self._settle(adapter, h, probe, events)
+        if h.kind is not None:
+            events.append(f"hedge:lost:{cand.name}({h.kind})")
+            self.hedges_lost += 1
+            return None
+        hedge_done = fired_at + h.latency
+        if primary_failed or hedge_done < att.latency:
+            # hedge wins: cancel the primary; a cancelled *successful*
+            # primary's spend is accounted as wasted (a timed-out primary
+            # was billed nothing)
+            self.hedges_won += 1
+            if att.resolution is not None:
+                self.wasted_hedge_cost += att.resolution.usage.cost
+                h.resolution.hedge_wasted_cost = att.resolution.usage.cost
+            h.latency = hedge_done
+            h.resolution.usage = dataclasses.replace(
+                h.resolution.usage, latency=hedge_done)
+            events.append(f"hedge:won:{cand.name}@{hedge_done:.3f}s")
+            return h
+        # primary wins the race: the hedge attempt is the wasted one
+        self.hedges_lost += 1
+        self.wasted_hedge_cost += h.resolution.usage.cost
+        if att.resolution is not None:
+            att.resolution.hedge_wasted_cost = h.resolution.usage.cost
+        events.append(f"hedge:lost:{cand.name}@{hedge_done:.3f}s")
+        return None
+
+    def _finish(self, res: Any, win: _Attempt, attempts: int,
+                waited: float, events: List[str]) -> Any:
+        res.usage = dataclasses.replace(
+            res.usage, latency=res.usage.latency + waited)
+        res.provider = win.provider
+        res.attempts = attempts
+        res.provider_events = events
+        return res
+
+    # -- disclosure ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "providers": {n: a.snapshot() for n, a in self.adapters.items()},
+            "retries": self.retries,
+            "exhausted": self.exhausted,
+            "hedges": {"fired": self.hedges_fired, "won": self.hedges_won,
+                       "lost": self.hedges_lost,
+                       "wasted_cost": self.wasted_hedge_cost},
+            "clock_s": self.now(),
+            "routing_enabled": self.routing_enabled,
+        }

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import queue
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -402,6 +403,9 @@ class LLMBridge:
             # until an engine-backed model decodes a batch with a draft
             "serving": {"spec": {name: dict(s) for name, s in
                                  self.adapter.serving_stats.items()}},
+            # the reliability layer: per-provider health/breaker state plus
+            # fleet-wide retry/hedge accounting (wasted hedge cost included)
+            "providers": self.providers.snapshot(),
         }
         if self._admission is not None:
             out["admission"] = self._admission.stats()
@@ -460,29 +464,95 @@ class LLMBridge:
                  strategy: str, gate_usage: Usage, decision_latency: float,
                  *, verification: bool = False,
                  text_override: Optional[str] = None,
-                 resolution_override=None) -> ProxyResponse:
+                 resolution_override=None, reserved: float = 0.0) -> ProxyResponse:
+        from repro.core.model_adapter import Resolution
+        from repro.core.providers import ProviderError
         ctx_tokens = ContextManager.token_count(msgs)
         has_ctx = self._has_context(req, msgs)
-        if resolution_override is not None:
-            res = resolution_override
-        elif verification:
-            res = self.adapter.verification_select(
-                req.prompt, threshold=self._verify_threshold(req),
-                judge=self.judge, context_tokens=ctx_tokens,
-                query=req.query, has_context=has_ctx,
-                m1=self._param_model(req, "m1"), m2=self._param_model(req, "m2"),
-                verifier=self._param_model(req, "verifier"))
-        else:
-            res = self.adapter.answer(model, req.prompt, context_tokens=ctx_tokens,
-                                      query=req.query, has_context=has_ctx,
-                                      text_override=text_override)
+        try:
+            if resolution_override is not None:
+                res = resolution_override
+            elif verification:
+                res = self.adapter.verification_select(
+                    req.prompt, threshold=self._verify_threshold(req),
+                    judge=self.judge, context_tokens=ctx_tokens,
+                    query=req.query, has_context=has_ctx,
+                    m1=self._param_model(req, "m1"), m2=self._param_model(req, "m2"),
+                    verifier=self._param_model(req, "verifier"))
+            else:
+                res = self.adapter.answer(
+                    model, req.prompt, context_tokens=ctx_tokens,
+                    query=req.query, has_context=has_ctx,
+                    text_override=text_override,
+                    hedge=self._wants_hedge(req),
+                    fallback=self._fallback_candidates(
+                        req, ctx_tokens=ctx_tokens, reserved=reserved))
+        except ProviderError as e:
+            # the structured terminal failure: every candidate exhausted.
+            # The request resolves (the batch lives on) with a disclosed
+            # error response — latency waited through is real, cost is zero.
+            res = Resolution(
+                text=f"[provider-error] {e}", model="error",
+                usage=Usage(latency=e.latency), provider=e.provider,
+                attempts=e.attempts, provider_events=list(e.events),
+                models_consulted=[])
         usage = res.usage.add(gate_usage)
         md = Metadata(model_used=res.model, models_consulted=res.models_consulted,
                       verifier_score=res.verifier_score,
                       context_k=len(msgs), context_strategy=strategy,
-                      context_decision_latency=decision_latency, usage=usage)
+                      context_decision_latency=decision_latency, usage=usage,
+                      provider=res.provider, provider_attempts=res.attempts,
+                      provider_events=list(res.provider_events),
+                      hedge_wasted_cost=res.hedge_wasted_cost)
         return ProxyResponse(text=res.text, metadata=md, request=req,
                              true_quality=res.true_quality)
+
+    # -- provider-fleet views ---------------------------------------------------
+    @property
+    def providers(self):
+        """The reliability layer (``core/providers.py``): per-provider
+        health, breakers and the chaos-injection surface."""
+        return self.adapter.fleet
+
+    def healthy_models(self, candidates: Optional[List[PoolModel]] = None
+                       ) -> List[PoolModel]:
+        """Pool candidates minus open-circuit providers (all of them when
+        every circuit is open — degraded service beats none).  RouteStage
+        and the PolicyCompiler's candidate ordering consult this."""
+        return self.providers.healthy(candidates or self.pool.list())
+
+    def _wants_hedge(self, req: ProxyRequest) -> bool:
+        """Hedged requests are a latency-first privilege: the tail matters
+        more than the duplicated spend (which is disclosed as wasted)."""
+        from repro.core.api import Preference
+        return req.preference == Preference.LATENCY_FIRST
+
+    def _fallback_candidates(self, req: ProxyRequest, ctx_tokens: int = 0,
+                             reserved: float = 0.0) -> List[PoolModel]:
+        """Retry-against-healthy candidate set: the pool, min_quality
+        honored best-effort (the fleet re-ranks by live health), filtered to
+        what the request may still spend.  ``reserved`` is the compiled
+        plan's ledger hold for this request: the affordability ceiling is
+        remaining + reserved (and ``max_cost`` when stated), and the
+        adapter's estimates are cost-exact, so a retry or hedge answering
+        with a pricier model can never overdraw the ledger or breach the
+        client's cost ceiling."""
+        cands = self.pool.list()
+        if req.constraints is not None and req.constraints.min_quality is not None:
+            filtered = self.pool.filter(
+                min_capability=req.constraints.min_quality)
+            if filtered:
+                cands = filtered
+        allow = self.ledger.remaining(req.user) + reserved
+        if req.constraints is not None and req.constraints.max_cost is not None:
+            allow = min(allow, req.constraints.max_cost)
+        if math.isfinite(allow):
+            # an empty result is valid: execute() then retries the routed
+            # primary only, and exhaustion surfaces as ProviderError
+            cands = [m for m in cands if self.adapter.estimate_answer(
+                m, req.prompt, context_tokens=ctx_tokens,
+                query=req.query).cost <= allow + 1e-9]
+        return cands
 
     def _param_model(self, req: ProxyRequest, key: str) -> Optional[PoolModel]:
         name = req.params.get(key)

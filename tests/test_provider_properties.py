@@ -1,0 +1,182 @@
+"""Property-based invariants of the provider reliability layer (hypothesis).
+
+The contracts the provider fleet must hold under ANY interleaving:
+
+* Circuit breaker — an OPEN circuit admits no traffic before its cooldown
+  elapses; HALF_OPEN admits only probes, never more than ``probe_limit``
+  concurrently; the state only changes along the closed -> open ->
+  half_open -> {closed, open} edges recorded in ``transitions``.
+* Retry accounting — whatever faults are injected, a fleet-routed request
+  charges exactly the answering provider's cost-exact estimate (failed
+  attempts and hedge losers bill nothing), or raises ``ProviderError`` and
+  charges nothing.
+* Replay — identical seeds and fault specs produce identical event traces.
+"""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (BreakerState, CircuitBreaker, FaultSpec, PoolModel,
+                        ProviderError, ProviderFleet, Resolution)
+
+
+def _model(name, params=1_000_000_000):
+    return PoolModel(name=name, active_params=params, capability=0.5)
+
+
+def _run(m):
+    return Resolution(text=f"[{m.name}]", model=m.name,
+                      usage=m.estimate_usage(100, 50), provider=m.name)
+
+
+def _est(m):
+    return m.estimate_usage(100, 50)
+
+
+# -- breaker state machine ----------------------------------------------------
+
+_ops = st.lists(
+    st.tuples(st.sampled_from(["allow", "ok", "fail", "tick"]),
+              st.floats(min_value=0.1, max_value=20.0)),
+    min_size=1, max_size=60)
+
+
+@given(ops=_ops,
+       threshold=st.integers(min_value=1, max_value=4),
+       cooldown=st.floats(min_value=1.0, max_value=30.0),
+       probe_limit=st.integers(min_value=1, max_value=3))
+@settings(max_examples=120, deadline=None)
+def test_breaker_invariants(ops, threshold, cooldown, probe_limit):
+    b = CircuitBreaker(failure_threshold=threshold, cooldown=cooldown,
+                       probe_limit=probe_limit, probe_successes=2)
+    now = 0.0
+    consecutive = 0
+    in_flight_probes = 0
+    for op, dt in ops:
+        if op == "tick":
+            now += dt
+            continue
+        if op == "allow":
+            was_open = (b.state == BreakerState.OPEN)
+            admit, probe = b.allow(now)
+            if was_open and now - b.opened_at < cooldown \
+                    and b.state == BreakerState.OPEN:
+                # an open circuit inside its cooldown admits NOTHING
+                assert (admit, probe) == (False, False)
+            if b.state == BreakerState.HALF_OPEN:
+                # half-open admits probes only, boundedly
+                assert not admit or probe
+                if admit:
+                    in_flight_probes += 1
+                assert in_flight_probes <= probe_limit
+                assert b.probes_in_flight <= probe_limit
+            continue
+        ok = (op == "ok")
+        probe_settle = in_flight_probes > 0 and b.state == BreakerState.HALF_OPEN
+        if probe_settle:
+            in_flight_probes -= 1
+        consecutive = 0 if ok else consecutive + 1
+        b.on_result(now, ok, probe=probe_settle,
+                    consecutive_failures=consecutive)
+        if b.state != BreakerState.HALF_OPEN:
+            in_flight_probes = 0
+    # every recorded transition walks a legal edge
+    legal = {("closed", "open"), ("open", "half_open"),
+             ("half_open", "closed"), ("half_open", "open")}
+    assert all((a, c) in legal for _, a, c in b.transitions)
+
+
+# -- retry / hedge accounting -------------------------------------------------
+
+_fault = st.builds(
+    FaultSpec,
+    error_rate=st.floats(min_value=0.0, max_value=1.0),
+    timeout_rate=st.floats(min_value=0.0, max_value=0.5),
+    latency_sigma=st.floats(min_value=0.0, max_value=0.5),
+    tail_rate=st.floats(min_value=0.0, max_value=0.3),
+    tail_mult=st.floats(min_value=1.0, max_value=20.0))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       faults=st.lists(_fault, min_size=2, max_size=4),
+       n=st.integers(min_value=1, max_value=12),
+       hedge=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_fleet_charges_exactly_the_answering_provider(seed, faults, n, hedge):
+    fleet = ProviderFleet(seed=seed, max_attempts=3)
+    models = []
+    for i, f in enumerate(faults):
+        m = _model(f"m{i}", params=(i + 1) * 500_000_000)
+        fleet.register(m, fault=f)
+        models.append(m)
+    est = {m.name: _est(m).cost for m in models}
+    charged = 0.0
+    expected = 0.0
+    for _ in range(n):
+        try:
+            res = fleet.execute(models[0], models, _run, _est, hedge=hedge)
+        except ProviderError as e:
+            assert e.attempts <= fleet.max_attempts
+            continue
+        charged += res.usage.cost
+        expected += est[res.provider]
+        # the disclosure trail matches the accounting
+        assert res.attempts >= 1
+        assert res.usage.cost == est[res.provider]
+        assert res.hedge_wasted_cost >= 0.0
+    assert charged == expected
+    # fleet-level waste is disclosed, never folded into response usage
+    assert fleet.wasted_hedge_cost >= 0.0
+
+
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       faults=st.lists(_fault, min_size=2, max_size=3),
+       n=st.integers(min_value=1, max_value=10),
+       hedge=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_chaos_replays_identically_from_seed(seed, faults, n, hedge):
+    def trace():
+        fleet = ProviderFleet(seed=seed, max_attempts=3)
+        models = []
+        for i, f in enumerate(faults):
+            m = _model(f"m{i}", params=(i + 1) * 500_000_000)
+            fleet.register(m, fault=f)
+            models.append(m)
+        out = []
+        for _ in range(n):
+            try:
+                res = fleet.execute(models[0], models, _run, _est, hedge=hedge)
+                out.append((res.provider, res.attempts,
+                            tuple(res.provider_events),
+                            round(res.usage.latency, 12)))
+            except ProviderError as e:
+                out.append(("!", e.attempts, tuple(e.events),
+                            round(e.latency, 12)))
+        out.append(round(fleet.now(), 12))
+        return out
+
+    assert trace() == trace()
+
+
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       rate=st.floats(min_value=0.3, max_value=1.0),
+       n=st.integers(min_value=6, max_value=20))
+@settings(max_examples=40, deadline=None)
+def test_open_circuits_receive_no_non_probe_traffic(seed, rate, n):
+    """While a breaker is OPEN inside its cooldown, execute() must not
+    land attempts on it: its call counter only moves when its breaker
+    admitted the attempt (probe or closed-state traffic)."""
+    fleet = ProviderFleet(seed=seed, max_attempts=2)
+    bad = _model("bad", params=500_000_000)
+    good = _model("good", params=1_000_000_000)
+    fleet.register(bad, fault=FaultSpec(error_rate=rate))
+    fleet.register(good)
+    models = [bad, good]
+    for _ in range(n):
+        calls_before = fleet.adapters["bad"].health.calls
+        was_blocked = fleet.breaker_open("bad")
+        try:
+            fleet.execute(models[0], models, _run, _est)
+        except ProviderError:
+            pass
+        if was_blocked:
+            assert fleet.adapters["bad"].health.calls == calls_before

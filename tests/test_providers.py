@@ -1,0 +1,436 @@
+"""Provider fleet: breaker state machine, retry/hedge routing, disclosure.
+
+Covers the reliability layer end to end: the CircuitBreaker's three-state
+contract, HealthTracker percentiles, deterministic chaos replay, fleet
+retry-against-healthy with event disclosure, hedge winner/loser accounting,
+ledger conservation under chaos, the ProviderError boundary (single and
+batch), the prefetch provider-health gate, and the REAL-mode exception
+boundary recovering through fleet fallback.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (BreakerState, CircuitBreaker, Constraints, FaultSpec,
+                        HealthTracker, ModelAdapter, ModelPool, PoolModel,
+                        Preference, ProviderError, ProviderFleet, ProxyRequest,
+                        Resolution, ServiceType, Workload, WorkloadConfig,
+                        build_bridge)
+
+
+def _wl():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=6,
+                                   seed=5))
+
+
+def _req(wl, i, user="u", **kw):
+    q = wl.queries[i % len(wl.queries)]
+    kw.setdefault("service_type", ServiceType.COST)
+    return ProxyRequest(prompt=q.text, user=user, conversation=user,
+                        query=q, update_context=False, **kw)
+
+
+def _model(name, params=1_000_000_000, cap=0.5):
+    return PoolModel(name=name, active_params=params, capability=cap)
+
+
+def _fleet(specs, **kw):
+    """A fleet over synthetic models; specs = {name: FaultSpec}."""
+    fleet = ProviderFleet(seed=7, **kw)
+    for name, spec in specs.items():
+        fleet.register(_model(name), fault=spec)
+    return fleet
+
+
+def _run(m):
+    return Resolution(text=f"[{m.name}]", model=m.name,
+                      usage=m.estimate_usage(100, 50), provider=m.name)
+
+
+def _est(m):
+    return m.estimate_usage(100, 50)
+
+
+# -- circuit breaker state machine -------------------------------------------
+
+
+def test_breaker_opens_after_threshold():
+    b = CircuitBreaker(failure_threshold=3, cooldown=10.0)
+    for k in range(1, 3):
+        b.on_result(0.0, False, consecutive_failures=k)
+        assert b.state == BreakerState.CLOSED
+    b.on_result(1.0, False, consecutive_failures=3)
+    assert b.state == BreakerState.OPEN
+    assert b.transitions == [(1.0, "closed", "open")]
+
+
+def test_open_rejects_until_cooldown_then_probes():
+    b = CircuitBreaker(failure_threshold=1, cooldown=10.0, probe_limit=2,
+                       probe_successes=2)
+    b.on_result(0.0, False, consecutive_failures=1)
+    assert b.state == BreakerState.OPEN
+    # inside the cooldown: no traffic, probe or otherwise
+    for t in (0.0, 5.0, 9.99):
+        assert b.allow(t) == (False, False)
+    # cooldown elapsed: half-open, probes only, bounded
+    admit, probe = b.allow(10.0)
+    assert (admit, probe) == (True, True) and b.state == BreakerState.HALF_OPEN
+    assert b.allow(10.1) == (True, True)
+    assert b.allow(10.2) == (False, False)      # probe_limit=2 in flight
+    # two probe successes close the circuit
+    b.on_result(11.0, True, probe=True)
+    assert b.state == BreakerState.HALF_OPEN
+    b.on_result(11.5, True, probe=True)
+    assert b.state == BreakerState.CLOSED
+
+
+def test_failed_probe_reopens_with_fresh_cooldown():
+    b = CircuitBreaker(failure_threshold=1, cooldown=10.0)
+    b.on_result(0.0, False, consecutive_failures=1)
+    assert b.allow(10.0) == (True, True)
+    b.on_result(10.5, False, probe=True)
+    assert b.state == BreakerState.OPEN
+    assert b.opened_at == 10.5
+    assert b.allow(15.0) == (False, False)      # fresh cooldown counts anew
+    assert b.allow(20.5)[0] is True
+
+
+# -- health tracker -----------------------------------------------------------
+
+
+def test_health_tracker_percentiles_and_score():
+    h = HealthTracker(alpha=0.5)
+    for lat in [1.0] * 15 + [10.0] * 5:
+        h.record(True, lat)
+    assert h.p50() == pytest.approx(1.0)
+    assert h.p95() > 1.0
+    assert h.score() < h.success        # unstable tail shades the score
+    h.record(False, 0.0, kind="error")
+    assert h.consecutive_failures == 1
+    h.record(True, 1.0)
+    assert h.consecutive_failures == 0
+    assert h.failure_kinds == {"error": 1}
+
+
+# -- deterministic chaos ------------------------------------------------------
+
+
+def test_fault_rolls_replay_from_seed():
+    def rolls():
+        f = _fleet({"a": FaultSpec(error_rate=0.3, timeout_rate=0.2,
+                                   latency_sigma=0.4, tail_rate=0.1,
+                                   tail_mult=8.0)})
+        a = f.adapters["a"]
+        return [a.roll(0.0, 1.0) for _ in range(64)]
+
+    assert rolls() == rolls()
+
+
+def test_rate_limit_window_and_outage():
+    f = _fleet({"a": FaultSpec(rate_limit=2, rate_window=1.0,
+                               outages=((10.0, 20.0),))})
+    a = f.adapters["a"]
+    assert a.roll(0.0, 1.0)[0] is None
+    assert a.roll(0.1, 1.0)[0] is None
+    assert a.roll(0.2, 1.0)[0] == "rate_limit"   # 3rd call inside the window
+    assert a.roll(1.5, 1.0)[0] is None           # window slid
+    assert a.roll(10.0, 1.0)[0] == "outage"
+    assert a.roll(19.9, 1.0)[0] == "outage"
+    assert a.roll(20.0, 1.0)[0] is None
+
+
+# -- fleet routing ------------------------------------------------------------
+
+
+def test_execute_retries_against_healthy_and_discloses():
+    f = _fleet({"bad": FaultSpec(error_rate=1.0), "good": FaultSpec()})
+    models = [_model("bad"), _model("good")]
+    res = f.execute(models[0], models, _run, _est)
+    assert res.provider == "good"
+    assert res.model == "good"
+    assert res.attempts == 2
+    assert any(e.startswith("error:bad") for e in res.provider_events)
+    assert any(e.startswith("backoff:") for e in res.provider_events)
+    # the caller waited through the failed attempt: latency > winner's own
+    assert res.usage.latency > _est(models[1]).latency
+    # ...but pays only the winner's cost
+    assert res.usage.cost == pytest.approx(_est(models[1]).cost)
+    assert f.retries == 1
+
+
+def test_execute_exhaustion_raises_provider_error():
+    f = _fleet({"a": FaultSpec(error_rate=1.0), "b": FaultSpec(error_rate=1.0),
+                "c": FaultSpec(error_rate=1.0)}, max_attempts=3)
+    models = [_model("a"), _model("b"), _model("c")]
+    with pytest.raises(ProviderError) as ei:
+        f.execute(models[0], models, _run, _est)
+    assert ei.value.attempts == 3
+    assert ei.value.kind == "error"
+    assert ei.value.latency > 0
+    assert f.exhausted == 1
+
+
+def test_open_circuit_skipped_and_ranked_last():
+    f = _fleet({"a": FaultSpec(), "b": FaultSpec()})
+    f.adapters["a"].breaker.state = BreakerState.OPEN
+    f.adapters["a"].breaker.opened_at = f.now()
+    models = [_model("a"), _model("b", params=2_000_000_000)]
+    assert [m.name for m in f.healthy(models)] == ["b"]
+    assert [m.name for m in f.rank(models)] == ["b", "a"]
+    res = f.execute(models[0], models, _run, _est)
+    assert res.provider == "b"
+    assert "skip(open):a" in res.provider_events
+    # when EVERY circuit is open, degraded service beats none
+    f.adapters["b"].breaker.state = BreakerState.OPEN
+    f.adapters["b"].breaker.opened_at = f.now()
+    assert [m.name for m in f.healthy(models)] == ["a", "b"]
+
+
+def test_breaker_trips_under_fleet_traffic_and_recovers():
+    f = _fleet({"a": FaultSpec(error_rate=1.0), "b": FaultSpec()})
+    models = [_model("a"), _model("b")]
+    for _ in range(6):
+        f.execute(models[0], models, _run, _est)
+    snap = f.snapshot()["providers"]["a"]
+    assert snap["state"] == "open"
+    assert ["closed", "open"] in [t[1:] for t in snap["transitions"]]
+    # heal the provider, jump past the cooldown: probes close the circuit
+    f.configure("a", FaultSpec())
+    f.advance(f.adapters["a"].breaker.cooldown + 1.0)
+    for _ in range(2):
+        f.execute(models[0], models, _run, _est)
+    assert f.adapters["a"].breaker.state == BreakerState.CLOSED
+
+
+# -- hedging ------------------------------------------------------------------
+
+
+def _warm(fleet, model, others, n=10):
+    for _ in range(n):
+        fleet.execute(model, others, _run, _est)
+
+
+def test_hedge_rescues_timed_out_primary():
+    f = _fleet({"a": FaultSpec(), "b": FaultSpec()}, max_attempts=2)
+    models = [_model("a"), _model("b")]
+    _warm(f, models[0], models)
+    f.configure("a", FaultSpec(timeout_rate=1.0, timeout_s=5.0))
+    res = f.execute(models[0], models, _run, _est, hedge=True)
+    assert res.provider == "b"
+    assert any(e.startswith("hedge:fired:b") for e in res.provider_events)
+    assert any(e.startswith("hedge:won:b") for e in res.provider_events)
+    # rescued at ~p95 + hedge latency, far below the 5s stall
+    assert res.usage.latency < 5.0
+    # a timed-out primary was billed nothing: no waste to account
+    assert f.hedges_won == 1
+    assert f.wasted_hedge_cost == 0.0
+    assert res.usage.cost == pytest.approx(_est(models[1]).cost)
+
+
+def test_hedge_win_over_straggler_accounts_wasted_cost():
+    f = _fleet({"a": FaultSpec(), "b": FaultSpec()})
+    models = [_model("a"), _model("b")]
+    _warm(f, models[0], models)
+    f.configure("a", FaultSpec(tail_rate=1.0, tail_mult=50.0))
+    res = f.execute(models[0], models, _run, _est, hedge=True)
+    assert res.provider == "b"
+    # the cancelled successful primary's spend is disclosed as wasted...
+    assert res.hedge_wasted_cost == pytest.approx(_est(models[0]).cost)
+    assert f.wasted_hedge_cost == pytest.approx(_est(models[0]).cost)
+    # ...and the returned usage charges the winner only
+    assert res.usage.cost == pytest.approx(_est(models[1]).cost)
+
+
+def test_hedge_needs_warmup_and_enable():
+    f = _fleet({"a": FaultSpec(tail_rate=1.0, tail_mult=50.0),
+                "b": FaultSpec()})
+    models = [_model("a"), _model("b")]
+    res = f.execute(models[0], models, _run, _est, hedge=True)
+    assert f.hedges_fired == 0              # < hedge_min_samples: no trigger
+    assert res.provider == "a"
+    f2 = _fleet({"a": FaultSpec(), "b": FaultSpec()}, hedge_enabled=False)
+    _warm(f2, models[0], models)
+    f2.configure("a", FaultSpec(tail_rate=1.0, tail_mult=50.0))
+    res = f2.execute(models[0], models, _run, _est, hedge=True)
+    assert f2.hedges_fired == 0             # fleet-wide kill switch wins
+
+
+# -- proxy integration --------------------------------------------------------
+
+
+def test_no_chaos_keeps_legacy_path_and_feeds_health():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    assert not bridge.providers.routing_enabled
+    r = bridge.request(_req(wl, 0))
+    # fleet never intercepted: single direct attempt, no event trail
+    assert r.metadata.provider_attempts == 1
+    assert r.metadata.provider == r.metadata.model_used
+    assert r.metadata.provider_events == []
+    snap = bridge.stats()["providers"]
+    assert snap["providers"][r.metadata.model_used]["calls"] == 1
+
+
+def test_fleet_fallback_answers_and_discloses_via_metadata():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    cheap = bridge.pool.cheapest().name
+    bridge.providers.configure(cheap, FaultSpec(error_rate=1.0))
+    r = bridge.request(_req(wl, 0))
+    assert r.metadata.model_used != cheap
+    assert r.metadata.provider == r.metadata.model_used
+    assert r.metadata.provider_attempts == 2
+    assert any(e.startswith(f"error:{cheap}")
+               for e in r.metadata.provider_events)
+
+
+def test_all_down_resolves_as_error_response_batch_survives():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    bridge.providers.max_attempts = 2
+    for m in bridge.pool.list():
+        bridge.providers.configure(m.name, FaultSpec(error_rate=1.0))
+    out = bridge.request_batch([_req(wl, i) for i in range(4)])
+    assert len(out) == 4
+    for r in out:
+        assert r.metadata.model_used == "error"
+        assert r.metadata.usage.cost == 0.0
+        assert r.metadata.usage.latency > 0.0
+        assert r.metadata.provider_attempts == 2
+    assert bridge.ledger.spent("u") == 0.0
+
+
+def test_ledger_conservation_under_chaos():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    for m in bridge.pool.list():
+        bridge.providers.configure(m.name, FaultSpec(error_rate=0.3))
+    charged = 0.0
+    for i in range(30):
+        r = bridge.request(_req(wl, i))
+        charged += r.metadata.usage.cost
+    spent = sum(u["spent"] for u in bridge.ledger.summary().values())
+    assert spent == pytest.approx(charged)
+    assert bridge.providers.retries > 0          # chaos actually engaged
+
+
+def test_capped_user_never_overdrawn_by_pricier_fallback():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    unit = bridge.adapter.estimate_answer(
+        bridge.pool.cheapest(), wl.queries[0].text, query=wl.queries[0]).cost
+    bridge.ledger.set_budget("u", 4 * unit)
+    for m in bridge.pool.list():
+        bridge.providers.configure(m.name, FaultSpec(error_rate=0.4))
+    declines = 0
+    for i in range(24):
+        r = bridge.request(_req(
+            wl, i, constraints=Constraints(allow_cache=False,
+                                           allow_prefetch=False),
+            preference=Preference.COST_FIRST))
+        declines += r.metadata.context_strategy == "declined"
+        assert bridge.ledger.remaining("u") >= -1e-9
+    assert declines > 0
+    assert bridge.ledger.remaining("u") >= -1e-9
+
+
+def test_seeded_chaos_replays_identical_decision_trace():
+    wl = _wl()
+
+    def trace():
+        bridge = build_bridge(workload=wl, seed=3)
+        for m in bridge.pool.list():
+            bridge.providers.configure(
+                m.name, FaultSpec(error_rate=0.3, timeout_rate=0.1,
+                                  latency_sigma=0.3))
+        out = []
+        for i in range(25):
+            r = bridge.request(_req(wl, i))
+            out.append((r.metadata.model_used, r.metadata.provider,
+                        r.metadata.provider_attempts,
+                        tuple(r.metadata.provider_events),
+                        round(r.metadata.usage.latency, 9),
+                        round(r.metadata.usage.cost, 12)))
+        return out
+
+    assert trace() == trace()
+
+
+def test_policy_compiler_and_route_skip_open_circuits():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    cheap = bridge.pool.cheapest().name
+    a = bridge.providers.adapters[cheap]
+    a.breaker.state = BreakerState.OPEN
+    a.breaker.opened_at = bridge.providers.now()
+    # preset path: RouteStage.cheapest routes over healthy models
+    r = bridge.request(_req(wl, 0))
+    assert r.metadata.model_used != cheap
+    # intent path: the compiler's candidate ordering skips the open circuit
+    r = bridge.request(_req(wl, 1, preference=Preference.COST_FIRST,
+                            constraints=Constraints(allow_cache=False,
+                                                    allow_prefetch=False)))
+    assert r.metadata.model_used != cheap
+
+
+def test_prefetch_skips_when_best_provider_down():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    best = bridge.pool.best().name
+    a = bridge.providers.adapters[best]
+    a.breaker.state = BreakerState.OPEN
+    a.breaker.opened_at = bridge.providers.now()
+    r = bridge.request(_req(wl, 0, service_type=ServiceType.FAST_THEN_BETTER))
+    rec = next(x for x in r.metadata.stage_records if x.name == "prefetch")
+    assert rec.decision == "skip(provider_down)"
+    assert f"prefetch:{best}" not in r.metadata.models_consulted
+
+
+def test_stats_exposes_provider_snapshot():
+    wl = _wl()
+    bridge = build_bridge(workload=wl, seed=0)
+    bridge.request(_req(wl, 0))
+    snap = bridge.stats()["providers"]
+    assert set(snap) >= {"providers", "retries", "hedges", "clock_s",
+                         "routing_enabled"}
+    assert set(snap["providers"]) == {m.name for m in bridge.pool.list()}
+
+
+# -- REAL-mode exception boundary --------------------------------------------
+
+
+class _BrokenTokenizer:
+    def encode(self, text):
+        raise RuntimeError("backend down")
+
+    def decode(self, ids):
+        return ""
+
+
+def _broken_model():
+    return PoolModel(name="broken", active_params=1_000_000_000,
+                     capability=0.5, engine=object(),
+                     tokenizer=_BrokenTokenizer())
+
+
+def test_real_mode_raises_structured_provider_error():
+    pool = ModelPool([_broken_model()])
+    adapter = ModelAdapter(pool, seed=0)
+    with pytest.raises(ProviderError) as ei:
+        adapter.answer(pool.get("broken"), "hello world")
+    assert ei.value.provider == "broken"
+    assert ei.value.kind == "exception(RuntimeError)"
+    assert isinstance(ei.value.cause, RuntimeError)
+    # the failure fed the health tracker through the passive tap
+    assert adapter.fleet.adapters["broken"].health.failures == 1
+
+
+def test_real_mode_failure_recovers_via_fleet_fallback():
+    pool = ModelPool([_broken_model(), _model("sim-ok")])
+    adapter = ModelAdapter(pool, seed=0)
+    adapter.fleet.always_route = True
+    res = adapter.answer(pool.get("broken"), "hello world")
+    assert res.model == "sim-ok"
+    assert res.attempts == 2
+    assert any(e.startswith("exception(ProviderError):broken")
+               for e in res.provider_events)
