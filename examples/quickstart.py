@@ -1,12 +1,14 @@
-"""Quickstart: the LLMBridge public API in ~40 lines.
+"""Quickstart: the LLMBridge public API in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the default bridge (model pool over the assigned architectures,
-semantic cache, context manager, judge), sends a few prompts under different
-service types, inspects the transparency metadata, and regenerates.
+semantic cache, context manager, judge), states *intents* (Constraints +
+Preference — the compiler picks the mechanisms), streams a response
+token-by-token, inspects the transparency metadata, and regenerates.
 """
-from repro.core import ProxyRequest, ServiceType, Workload, WorkloadConfig, build_bridge
+from repro.core import (Constraints, Preference, ProxyRequest, Workload,
+                        WorkloadConfig, build_bridge)
 
 # a small planted workload (stands in for live WhatsApp traffic — DESIGN.md §2)
 workload = Workload(WorkloadConfig(n_conversations=1, turns_per_conversation=6))
@@ -14,28 +16,37 @@ bridge = build_bridge(workload=workload)
 
 q0, q1 = workload.queries[0], workload.queries[1]
 
-# 1) delegate everything: verification-based model selection (paper §3.3)
+# 1) state an intent: quality floor + cost ceiling; the policy compiler
+#    picks the mechanisms (verification, context, caching) to honor it
 resp = bridge.request(ProxyRequest(
     prompt=q0.text, user="alice", conversation="demo",
-    service_type=ServiceType.MODEL_SELECTOR, query=q0))
+    constraints=Constraints(min_quality=6.0, max_cost=0.05),
+    preference=Preference.BALANCED, query=q0))
 md = resp.metadata
 print(f"Q: {q0.text}")
 print(f"A: {resp.text[:70]}")
-print(f"   model={md.model_used} consulted={md.models_consulted}")
+print(f"   policy={md.policy} model={md.model_used} "
+      f"consulted={md.models_consulted}")
 print(f"   verifier_score={md.verifier_score} context_k={md.context_k}")
 print(f"   cost={md.usage.cost:.4f} latency~{md.usage.latency:.2f}s")
 
-# 2) not satisfied? iterate — same service type escalates quality (§3.2)
+# 2) not satisfied? iterate — the escalation ladder raises quality (§3.2)
 better = bridge.regenerate(resp)
 print(f"regenerated with {better.metadata.model_used} "
       f"(cost={better.metadata.usage.cost:.4f})")
 
-# 3) smart context: a low-cost model decides whether history is needed (§3.4)
-resp2 = bridge.request(ProxyRequest(
-    prompt=q1.text, user="alice", conversation="demo",
-    service_type=ServiceType.SMART_CONTEXT, query=q1))
-print(f"smart_context kept k={resp2.metadata.context_k} messages "
-      f"({resp2.metadata.context_strategy})")
+# 3) stream a response: chunks arrive as tokens land; the final chunk
+#    carries the full ProxyResponse with TTFT disclosed in the metadata
+chunks = []
+for chunk in bridge.request_stream(ProxyRequest(
+        prompt=q1.text, user="alice", conversation="demo",
+        constraints=Constraints(allow_cache=False),
+        preference=Preference.COST_FIRST, query=q1)):
+    chunks.append(chunk)
+streamed = chunks[-1].response
+print(f"streamed {len(chunks) - 1} chunks, "
+      f"ttft={streamed.metadata.ttft * 1e3:.2f}ms, "
+      f"text == buffered shape: {''.join(c.text for c in chunks) == streamed.text}")
 
 # 4) populate the semantic cache and answer from it (§3.5)
 bridge.cache.put("Use data structures like B-trees & Tries",

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import (ModelPool, PoolModel, ProxyRequest, ServiceType,
-                        Workload, WorkloadConfig, build_bridge,
+from repro.core import (Constraints, ModelPool, PoolModel, Preference,
+                        ProxyRequest, Workload, WorkloadConfig, build_bridge,
                         pool_model_from_config)
 from repro.core.judge import Judge
 from repro.data.tokenizer import ByteTokenizer
@@ -62,9 +62,11 @@ def main() -> None:
     for conv, qs in wl.conversations().items():
         user = conv.replace("conv", "user")
         for q in qs:
+            # balanced intent: the compiler's first ladder rung is
+            # verification-based model selection (the old MODEL_SELECTOR)
             r = bridge.request(ProxyRequest(
                 prompt=q.text, user=user, conversation=conv,
-                service_type=ServiceType.MODEL_SELECTOR))
+                constraints=Constraints(), preference=Preference.BALANCED))
             n += 1
             cache_hits += r.metadata.cache_hit
             # prefetch 2 follow-ups into the exact-match cache (buttons)
@@ -74,9 +76,11 @@ def main() -> None:
             print(f"[{user}] {q.text[:44]:44s} -> {r.metadata.model_used:12s} "
                   f"score={r.metadata.verifier_score}")
         # the user presses a follow-up button: served from cache, no LLM call
+        # (cost-first intents consult the cache before spending on a model)
         b = bridge.request(ProxyRequest(
             prompt=f"{qs[-1].text} — tell me more (0)", user=user,
-            conversation=conv, service_type=ServiceType.SMART_CACHE))
+            conversation=conv, constraints=Constraints(),
+            preference=Preference.COST_FIRST))
         assert b.metadata.cache_hit and b.metadata.cache_types == ["exact"]
         cache_hits += 1
         n += 1
@@ -85,7 +89,8 @@ def main() -> None:
     last_q = qs[-1]
     r = bridge.request(ProxyRequest(prompt=last_q.text, user=user,
                                     conversation=conv,
-                                    service_type=ServiceType.MODEL_SELECTOR))
+                                    constraints=Constraints(),
+                                    preference=Preference.BALANCED))
     better = bridge.regenerate(r)
     print(f"\n'Get Better Answer': {r.metadata.model_used} -> "
           f"{better.metadata.model_used}")

@@ -9,8 +9,11 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.admission import AdmissionController, Ticket, jain_index
-from repro.core.api import (Constraints, Metadata, Preference, ProxyRequest,
-                            ProxyResponse, ServiceType, StageRecord, Usage)
+from repro.core.api import (ChatCompletionChunk, ChatCompletionRequest,
+                            ChatCompletionResponse, ChatMessage, Constraints,
+                            Metadata, Preference, ProxyRequest, ProxyResponse,
+                            ServiceType, StageRecord, StreamChunk, TokenStream,
+                            Usage)
 from repro.core.cache import CachedType, SemanticCache
 from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
                                         SmartContext, Summarize, apply_filters)
@@ -35,8 +38,10 @@ from repro.core.workload import (Query, Workload, WorkloadConfig,
 
 __all__ = [
     "AdmissionController", "Ticket", "jain_index",
-    "Constraints", "Metadata", "Preference", "ProxyRequest", "ProxyResponse",
-    "ServiceType", "StageRecord", "Usage",
+    "ChatCompletionChunk", "ChatCompletionRequest", "ChatCompletionResponse",
+    "ChatMessage", "Constraints", "Metadata", "Preference", "ProxyRequest",
+    "ProxyResponse", "ServiceType", "StageRecord", "StreamChunk",
+    "TokenStream", "Usage",
     "CachedType", "SemanticCache", "ContextManager", "LastK", "Message",
     "Similar", "SmartContext", "Summarize", "apply_filters", "Judge",
     "ModelAdapter", "ModelPool", "PoolModel", "Resolution",

@@ -73,17 +73,34 @@ class Ticket:
     error: Optional[BaseException] = None
     queue_wait: float = 0.0             # filled at dispatch
     batch_size: int = 0                 # size of the batch that carried it
+    stream: Optional[Any] = None        # TokenStream when submitted streaming
 
     @property
     def done(self) -> bool:
         return self.response is not None or self.error is not None
 
-    def result(self) -> ProxyResponse:
+    def result(self, timeout: Optional[float] = None) -> ProxyResponse:
+        if self.stream is not None:
+            # streaming batches dispatch on a background worker — wait for
+            # the terminal marker instead of requiring a prior drain()
+            self.stream.wait(timeout)
         if self.error is not None:
             raise self.error
         if self.response is None:
             raise RuntimeError("ticket not dispatched yet; call drain()/pump()")
         return self.response
+
+    def chunks(self):
+        """Iterate live ``StreamChunk``s (``submit_stream`` tickets only)."""
+        if self.stream is None:
+            raise RuntimeError("ticket was not submitted with submit_stream()")
+        return iter(self.stream)
+
+    def cancel(self) -> None:
+        """Drop interest in a streaming ticket: in-flight decode stops at
+        the next emit and the ledger settles only generated tokens."""
+        if self.stream is not None:
+            self.stream.cancel()
 
 
 class AdmissionController:
@@ -113,6 +130,8 @@ class AdmissionController:
         self._submitted = 0
         self._completed: Dict[str, int] = {}
         self._yield_total = 0
+        self._streamed = 0
+        self._worker = None     # lazy dispatch worker for streaming batches
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: ProxyRequest) -> Ticket:
@@ -141,6 +160,18 @@ class AdmissionController:
             self._queues[req.user] = collections.deque()
             self._users_order.append(req.user)
         self._queues[req.user].append(ticket)
+        return ticket
+
+    def submit_stream(self, req: ProxyRequest) -> Ticket:
+        """``submit`` with a live token channel: the ticket's ``chunks()``
+        yields deltas as its batch decodes.  A streaming ticket's batch is
+        dispatched on a background worker, so decode never blocks the next
+        batch's formation and ``max_wait`` is honored against first token."""
+        from repro.core.api import TokenStream
+        ticket = self.submit(req)
+        ticket.stream = TokenStream()
+        ticket.state.stream = ticket.stream
+        self._streamed += 1
         return ticket
 
     def pending(self) -> int:
@@ -215,7 +246,14 @@ class AdmissionController:
 
     # -- dispatch ------------------------------------------------------------
     def dispatch(self) -> List[Ticket]:
-        """Form one batch and run it through the proxy's batched hot path."""
+        """Form one batch and run it through the proxy's batched hot path.
+
+        A batch containing streaming tickets executes on a background
+        worker: the tickets return immediately (consumers are already
+        iterating ``chunks()``), decode proceeds off the formation path,
+        and the next ``pump()`` can form its batch while this one streams.
+        Purely buffered batches keep the historical synchronous dispatch.
+        """
         batch = self.form_batch()
         if not batch:
             return []
@@ -224,12 +262,21 @@ class AdmissionController:
             t.queue_wait = max(0.0, now - t.enqueued_at)
             t.batch_size = len(batch)
         self._batch_sizes[len(batch)] = self._batch_sizes.get(len(batch), 0) + 1
+        if any(t.stream is not None for t in batch):
+            self._dispatch_worker().submit(lambda: self._execute(batch))
+            return batch
+        self._execute(batch)
+        return batch
+
+    def _execute(self, batch: List[Ticket]) -> None:
         try:
             responses = self.bridge._run_states(
                 [t.state for t in batch], path="admission")
         except BaseException as e:       # holds already released by the proxy
             for t in batch:
                 t.error = e
+                if t.stream is not None:
+                    t.stream.close(error=e)
             raise
         for t, resp in zip(batch, responses):
             resp.metadata.queue_wait = t.queue_wait
@@ -237,7 +284,21 @@ class AdmissionController:
             t.response = resp
             self._waits.append(t.queue_wait)
             self._completed[t.req.user] = self._completed.get(t.req.user, 0) + 1
-        return batch
+            if t.stream is not None:
+                t.stream.close(response=resp)
+
+    def _dispatch_worker(self):
+        if self._worker is None:
+            from repro.core.proxy import _PrefetchWorker
+            self._worker = _PrefetchWorker()
+        return self._worker
+
+    def flush(self) -> None:
+        """Join in-flight streaming dispatches (deterministic-test hook).
+        Worker-captured errors stay on their tickets — ``result()`` raises
+        them — rather than re-raising here."""
+        if self._worker is not None:
+            self._worker.flush(raise_errors=False)
 
     def pump(self) -> List[Ticket]:
         """Dispatch one batch iff one is due (``ready()``) — the poll-driven
@@ -245,10 +306,12 @@ class AdmissionController:
         return self.dispatch() if self.ready() else []
 
     def drain(self) -> List[Ticket]:
-        """Dispatch until every queue is empty (ignores ``max_wait``)."""
+        """Dispatch until every queue is empty (ignores ``max_wait``), then
+        join any streaming dispatches still decoding on the worker."""
         out: List[Ticket] = []
         while self.pending():
             out.extend(self.dispatch())
+        self.flush()
         return out
 
     # -- telemetry -----------------------------------------------------------
@@ -266,4 +329,5 @@ class AdmissionController:
             "completed_per_user": dict(sorted(self._completed.items())),
             "jain_index": jain_index(list(self._completed.values())),
             "budget_yields": self._yield_total,
+            "streamed": self._streamed,
         }

@@ -1,25 +1,43 @@
-"""LLMBridge API v2: an intent-based, bidirectional contract (paper §3.2).
+"""LLMBridge API v3: intent-based delegation, OpenAI compatibility, streaming.
 
 The paper's interface idea is *delegation with transparency*: applications
 hand the proxy a high-level intent, the proxy picks the low-level mechanisms
 (model, context window, cache), discloses every choice it made, and the
-application iterates.  Version 2 of the request plane makes the delegation
-genuinely high-level:
+application iterates.  Version 3 of the request plane has three faces:
 
-* **Intents** — a request carries :class:`Constraints` (``max_cost``,
-  ``max_latency``, ``min_quality``, ``allow_cache``, ``allow_prefetch``) and
-  a :class:`Preference` (cost-first / balanced / quality-first /
-  latency-first).  The proxy's ``PolicyCompiler`` (``core/policy.py``)
-  compiles the intent into a concrete ``PromptPipeline`` composition, and a
-  per-user ``BudgetLedger`` lets compiled plans degrade gracefully (cheaper
-  route, tighter context-k, cache-only) as a budget depletes.
-* **Presets** — the seven v1 :class:`ServiceType` values survive as *named
-  presets*: each maps to a declarative plan that compiles through the same
-  compiler path.  The enum is a back-compat shim, not a dispatch key.
-* **Transparency v2** — :class:`Metadata` discloses the compiled policy, the
-  budget tier, the stage trajectory, and per-stage :class:`StageRecord`
-  entries (wall-time, decision, cost delta); ``proxy.stats()`` aggregates
-  them proxy-wide (the paper's Fig 6-style CDFs, live).
+* **Intents** (v2, the native surface) — a request carries
+  :class:`Constraints` (``max_cost``, ``max_latency``, ``min_quality``,
+  ``allow_cache``, ``allow_prefetch``) and a :class:`Preference`
+  (cost-first / balanced / quality-first / latency-first).  The proxy's
+  ``PolicyCompiler`` (``core/policy.py``) compiles the intent into a
+  concrete ``PromptPipeline`` composition, and a per-user ``BudgetLedger``
+  lets compiled plans degrade gracefully (cheaper route, tighter context-k,
+  cache-only) as a budget depletes.
+* **OpenAI compatibility** — :class:`ChatCompletionRequest` /
+  :class:`ChatCompletionResponse` / :class:`ChatCompletionChunk` mirror the
+  ``/v1/chat/completions`` wire schema, so existing OpenAI SDKs point at the
+  proxy unchanged (``launch/serve.py`` serves the HTTP surface).  The intent
+  API rides on ``x_``-prefixed extension fields (``x_max_cost``,
+  ``x_preference``, ...); unknown wire fields are ignored, and responses
+  disclose the proxy's decisions in an ``x_llmbridge`` extension block.
+* **Streaming** — :class:`TokenStream` is the incremental token channel
+  threaded through the serving stack (``LLMBridge.request_stream`` /
+  ``submit_stream``): the engine yields per decode step (speculative rounds
+  yield their accepted prefix as a burst), each delta arrives as a
+  :class:`StreamChunk`, and the final chunk carries the full
+  ``ProxyResponse`` — whose buffered text is bit-exact with the
+  non-streamed path and still feeds semantic-cache insertion, judge scoring
+  and the ledger settle.  ``Metadata.ttft`` / ``inter_token_p50`` disclose
+  the realised streaming latency.
+* **Presets** (v1, deprecated) — the seven :class:`ServiceType` values
+  survive as *named presets* compiling through the same compiler path, but
+  ``LLMBridge.request(service_type=...)`` now emits a ``DeprecationWarning``;
+  state an intent (or speak OpenAI) instead.
+* **Transparency** — :class:`Metadata` disclosures cover the compiled
+  policy, budget tier, stage trajectory, per-stage :class:`StageRecord`
+  entries, serving/speculation/provider telemetry and streaming latency;
+  ``proxy.stats()`` aggregates them proxy-wide (the paper's Fig 6-style
+  CDFs, live, plus a TTFT CDF under ``stats()["serving"]``).
 * **Iteration** — ``proxy.regenerate`` walks the compiler-produced
   *escalation ladder*: each regeneration attempt is an alternate pipeline
   composition, so escalation composes with caching and batching.
@@ -28,11 +46,18 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Dict, List, Optional
+import queue
+import statistics
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence
 
 
 class ServiceType(str, enum.Enum):
-    """v1 delegation presets (paper Table 2), kept as named intents."""
+    """v1 delegation presets (paper Table 2), kept as named intents.
+
+    Deprecated as an entrypoint: ``LLMBridge.request(service_type=...)``
+    warns and routes through the preset's compiled ``PlanSpec``."""
     FIXED = "fixed"
     QUALITY = "quality"
     COST = "cost"
@@ -178,6 +203,15 @@ class Metadata:
     provider_attempts: int = 0
     provider_events: List[str] = dataclasses.field(default_factory=list)
     hedge_wasted_cost: float = 0.0
+    # -- streaming disclosure (request_stream / submit_stream) --------------
+    # realised time-to-first-token and median inter-chunk gap (seconds,
+    # wall-clock from stream creation); ``stream_cancelled`` means the
+    # client dropped mid-stream — the slot was torn down and the ledger
+    # settled only the tokens actually generated
+    stream: bool = False
+    stream_cancelled: bool = False
+    ttft: Optional[float] = None
+    inter_token_p50: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -190,3 +224,344 @@ class ProxyResponse:
     # internal: cost units already posted to the BudgetLedger for this
     # response (async prefetch tops usage up after the response returns)
     _ledger_charged: float = dataclasses.field(default=0.0, repr=False)
+
+
+# ---------------------------------------------------------------------------
+# Streaming channel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamChunk:
+    """One incremental piece of a streamed response.
+
+    ``text`` is the decoded delta (concatenating every chunk's text
+    reproduces the buffered response bit-for-bit); ``token_ids`` are the
+    engine tokens behind it (empty in SIM mode).  The terminal chunk has
+    ``final=True``, empty text, and carries the full :class:`ProxyResponse`
+    (metadata, ledger settle and cache insertion already done)."""
+    text: str
+    token_ids: List[int] = dataclasses.field(default_factory=list)
+    final: bool = False
+    response: Optional[ProxyResponse] = None
+
+
+class _StreamError:
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
+class TokenStream:
+    """Thread-safe producer/consumer channel for one streamed response.
+
+    The pipeline's producer side calls :meth:`emit` per decode event and
+    :meth:`close` once the response is finalized; the consumer iterates.
+    ``emit`` returns ``False`` once the consumer cancelled (generator
+    closed / client dropped), which the producer treats as a stop signal —
+    the serving slot is torn down and only emitted tokens are charged.
+
+    ``maxsize`` bounds the queue: a slow or gone consumer backpressures the
+    producer instead of buffering unboundedly (0 = unbounded).  Timing is
+    recorded per successful emit, feeding ``Metadata.ttft`` /
+    ``inter_token_p50`` and the proxy-wide TTFT CDF.
+    """
+
+    #: producer put() poll interval while checking the cancel flag
+    _POLL_S = 0.05
+
+    def __init__(self, maxsize: int = 0):
+        self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self._cancel = threading.Event()
+        self._finished = threading.Event()
+        self._t0 = time.perf_counter()
+        self.arrivals: List[float] = []     # seconds since stream creation
+        self.pieces: List[str] = []         # emitted text deltas, in order
+        self.chunks_emitted = 0
+        self.response: Optional[ProxyResponse] = None
+        self.error: Optional[BaseException] = None
+
+    # -- producer side -------------------------------------------------------
+    def emit(self, text: str, token_ids: Sequence[int] = ()) -> bool:
+        """Push one delta.  Returns False iff the consumer cancelled — the
+        producer must stop decoding (the chunk may or may not have been
+        delivered; it is not counted as emitted after a cancel)."""
+        if self._cancel.is_set():
+            return False
+        chunk = StreamChunk(text=text, token_ids=list(token_ids))
+        while True:
+            try:
+                self._q.put(chunk, timeout=self._POLL_S)
+                break
+            except queue.Full:
+                if self._cancel.is_set():
+                    return False
+        self.arrivals.append(time.perf_counter() - self._t0)
+        self.pieces.append(text)
+        self.chunks_emitted += 1
+        return not self._cancel.is_set()
+
+    def close(self, response: Optional[ProxyResponse] = None,
+              error: Optional[BaseException] = None) -> None:
+        """Terminal marker: the pipeline finished (or died).  Always lands,
+        even against a full queue whose consumer is gone — after a cancel
+        the buffered chunks are dropped to make room (nobody reads them)."""
+        self.response = response
+        self.error = error
+        item = (_StreamError(error) if error is not None
+                else StreamChunk(text="", final=True, response=response))
+        while True:
+            try:
+                self._q.put(item, timeout=self._POLL_S)
+                break
+            except queue.Full:
+                if self._cancel.is_set():
+                    try:
+                        while True:
+                            self._q.get_nowait()
+                    except queue.Empty:
+                        pass
+        self._finished.set()
+
+    # -- consumer side -------------------------------------------------------
+    def __iter__(self) -> Iterator[StreamChunk]:
+        while True:
+            item = self._q.get()
+            if isinstance(item, _StreamError):
+                raise item.error
+            yield item
+            if item.final:
+                return
+
+    def cancel(self) -> None:
+        """Consumer dropped: unblock the producer and make further emits
+        return False."""
+        self._cancel.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the producer closed the stream (submit_stream
+        tickets use this for ``result()``)."""
+        return self._finished.wait(timeout)
+
+    # -- telemetry -----------------------------------------------------------
+    @property
+    def cancelled(self) -> bool:
+        return self._cancel.is_set()
+
+    @property
+    def text(self) -> str:
+        """Everything emitted so far, concatenated (== the buffered response
+        text once the stream completes uncancelled)."""
+        return "".join(self.pieces)
+
+    def ttft(self) -> Optional[float]:
+        """Time-to-first-token: seconds from stream creation to the first
+        delivered chunk."""
+        return self.arrivals[0] if self.arrivals else None
+
+    def inter_token_p50(self) -> Optional[float]:
+        """Median gap between consecutive chunk deliveries."""
+        if len(self.arrivals) < 2:
+            return None
+        gaps = [b - a for a, b in zip(self.arrivals, self.arrivals[1:])]
+        return statistics.median(gaps)
+
+
+# ---------------------------------------------------------------------------
+# OpenAI-compatible wire schema (/v1/chat/completions)
+# ---------------------------------------------------------------------------
+
+#: "model" values that mean "let the proxy route" (the native mode)
+AUTO_MODELS = ("", "auto", "llmbridge", "llmbridge-auto")
+
+
+@dataclasses.dataclass
+class ChatMessage:
+    role: str = "user"
+    content: str = ""
+
+    def to_wire(self) -> Dict[str, str]:
+        return {"role": self.role, "content": self.content}
+
+
+@dataclasses.dataclass
+class ChatCompletionRequest:
+    """The OpenAI ``/v1/chat/completions`` request body, plus ``x_``
+    extension fields that carry the intent API over the wire.
+
+    ``from_wire`` ignores unknown fields (SDKs evolve; the proxy must not
+    400 on fields it doesn't know) and ``to_proxy`` maps the result onto a
+    native :class:`ProxyRequest`: extension fields become
+    :class:`Constraints` / :class:`Preference`; a concrete ``model`` pins
+    the route through the FIXED preset; ``max_tokens`` caps the decode."""
+    messages: List[ChatMessage] = dataclasses.field(default_factory=list)
+    model: str = "auto"
+    stream: bool = False
+    max_tokens: Optional[int] = None
+    temperature: Optional[float] = None
+    user: Optional[str] = None
+    # -- x_ extensions: the intent API over the OpenAI wire ------------------
+    x_max_cost: Optional[float] = None
+    x_max_latency: Optional[float] = None
+    x_min_quality: Optional[float] = None
+    x_preference: Optional[str] = None      # a Preference value
+    x_conversation: Optional[str] = None
+    x_allow_cache: bool = True
+    x_allow_prefetch: bool = True
+
+    @classmethod
+    def from_wire(cls, payload: Mapping[str, Any]) -> "ChatCompletionRequest":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in payload.items() if k in known}
+        kw["messages"] = [
+            m if isinstance(m, ChatMessage)
+            else ChatMessage(role=str(m.get("role", "user")),
+                             content=str(m.get("content", "")))
+            for m in kw.get("messages", [])]
+        return cls(**kw)
+
+    def to_wire(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "messages": [m.to_wire() for m in self.messages],
+            "model": self.model,
+            "stream": self.stream,
+        }
+        for f in ("max_tokens", "temperature", "user", "x_max_cost",
+                  "x_max_latency", "x_min_quality", "x_preference",
+                  "x_conversation"):
+            v = getattr(self, f)
+            if v is not None:
+                out[f] = v
+        if not self.x_allow_cache:
+            out["x_allow_cache"] = False
+        if not self.x_allow_prefetch:
+            out["x_allow_prefetch"] = False
+        return out
+
+    @property
+    def prompt(self) -> str:
+        """The prompt the proxy answers: the last user-role message (the
+        conversation history lives in the proxy's own ContextManager,
+        keyed by ``x_conversation``)."""
+        for m in reversed(self.messages):
+            if m.role == "user":
+                return m.content
+        return self.messages[-1].content if self.messages else ""
+
+    def to_proxy(self) -> ProxyRequest:
+        user = self.user or "anon"
+        conversation = self.x_conversation or f"openai:{user}"
+        params: Dict[str, Any] = {"_wire": "openai"}
+        if self.max_tokens is not None:
+            params["max_tokens"] = int(self.max_tokens)
+        if self.model not in AUTO_MODELS:
+            # explicit model pin: route through the FIXED preset
+            params["model"] = self.model
+            return ProxyRequest(prompt=self.prompt, user=user,
+                                conversation=conversation,
+                                service_type=ServiceType.FIXED,
+                                params=params)
+        constraints = Constraints(
+            max_cost=self.x_max_cost, max_latency=self.x_max_latency,
+            min_quality=self.x_min_quality,
+            allow_cache=self.x_allow_cache,
+            allow_prefetch=self.x_allow_prefetch)
+        preference = (Preference(self.x_preference)
+                      if self.x_preference is not None else None)
+        return ProxyRequest(prompt=self.prompt, user=user,
+                            conversation=conversation, params=params,
+                            constraints=constraints, preference=preference)
+
+
+def _x_llmbridge(md: Metadata) -> Dict[str, Any]:
+    """The proxy's transparency disclosure on the OpenAI wire."""
+    out: Dict[str, Any] = {
+        "model_used": md.model_used,
+        "policy": md.policy,
+        "cost": md.usage.cost,
+        "cache_hit": md.cache_hit,
+        "budget_tier": md.budget_tier,
+    }
+    if md.ttft is not None:
+        out["ttft"] = md.ttft
+    if md.inter_token_p50 is not None:
+        out["inter_token_p50"] = md.inter_token_p50
+    return out
+
+
+@dataclasses.dataclass
+class ChatCompletionResponse:
+    """Buffered (non-stream) response object: ``chat.completion``."""
+    id: str
+    created: int
+    model: str
+    response: ProxyResponse
+    object: str = "chat.completion"
+
+    def to_wire(self) -> Dict[str, Any]:
+        md = self.response.metadata
+        return {
+            "id": self.id,
+            "object": self.object,
+            "created": self.created,
+            "model": self.model,
+            "choices": [{
+                "index": 0,
+                "message": {"role": "assistant", "content": self.response.text},
+                "finish_reason": "stop",
+            }],
+            "usage": {
+                "prompt_tokens": md.usage.input_tokens,
+                "completion_tokens": md.usage.output_tokens,
+                "total_tokens": md.usage.input_tokens + md.usage.output_tokens,
+            },
+            "x_llmbridge": _x_llmbridge(md),
+        }
+
+    @classmethod
+    def from_proxy(cls, resp: ProxyResponse, *, rid: str, created: int,
+                   model: str) -> "ChatCompletionResponse":
+        return cls(id=rid, created=created,
+                   model=resp.metadata.model_used or model, response=resp)
+
+
+@dataclasses.dataclass
+class ChatCompletionChunk:
+    """One SSE frame of a streamed response: ``chat.completion.chunk``."""
+    id: str
+    created: int
+    model: str
+    delta: Dict[str, Any]
+    finish_reason: Optional[str] = None
+    x_llmbridge: Optional[Dict[str, Any]] = None
+    object: str = "chat.completion.chunk"
+
+    def to_wire(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "id": self.id,
+            "object": self.object,
+            "created": self.created,
+            "model": self.model,
+            "choices": [{
+                "index": 0,
+                "delta": self.delta,
+                "finish_reason": self.finish_reason,
+            }],
+        }
+        if self.x_llmbridge is not None:
+            out["x_llmbridge"] = self.x_llmbridge
+        return out
+
+    @classmethod
+    def from_stream(cls, chunk: StreamChunk, *, rid: str, created: int,
+                    model: str, first: bool = False) -> "ChatCompletionChunk":
+        if chunk.final:
+            md = chunk.response.metadata if chunk.response is not None else None
+            return cls(id=rid, created=created,
+                       model=(md.model_used if md is not None else model),
+                       delta={}, finish_reason="stop",
+                       x_llmbridge=_x_llmbridge(md) if md is not None else None)
+        delta: Dict[str, Any] = {"content": chunk.text}
+        if first:
+            delta["role"] = "assistant"
+        return cls(id=rid, created=created, model=model, delta=delta)

@@ -178,6 +178,12 @@ class ModelPool:
 
 
 class ModelAdapter:
+    #: decode cap for engine-backed generation (reduced CPU configs keep the
+    #: test suite fast).  BOTH the buffered and the streamed paths honor the
+    #: same cap, so streamed output stays bit-exact with ``request()``;
+    #: benchmarks raise it per-instance for long-output sweeps.
+    max_engine_tokens = 32
+
     def __init__(self, pool: ModelPool, workload: Optional[Workload] = None,
                  seed: int = 0, fleet: Optional[ProviderFleet] = None):
         self.pool = pool
@@ -210,7 +216,8 @@ class ModelAdapter:
                text_override: Optional[str] = None,
                rng: Optional[np.random.Generator] = None,
                hedge: bool = False,
-               fallback: Optional[List[PoolModel]] = None) -> Resolution:
+               fallback: Optional[List[PoolModel]] = None,
+               stream=None) -> Resolution:
         """Answer ``prompt`` with ``model`` (SIM template or REAL engine).
 
         When the provider fleet is routing (chaos injected or
@@ -219,6 +226,15 @@ class ModelAdapter:
         may be a healthier ``fallback`` candidate, and ``hedge=True``
         (latency-first plans) races the p95-tail against the
         next-healthiest provider.  Exhausted fleets raise ``ProviderError``.
+
+        ``stream`` (a ``core.api.TokenStream``) switches generation onto the
+        incremental path: engine-backed models decode step-wise through the
+        streaming Scheduler and each delta is emitted as it lands; SIM
+        models chunk their templated text.  Streamed text is bit-exact with
+        the buffered path (same greedy decode, same token cap).  A cancelled
+        stream stops decoding and charges only the emitted tokens.
+        Streaming bypasses fleet *routing* (chunks already delivered cannot
+        be unsent by a retry) but still feeds the passive health tap.
         """
         rng = rng if rng is not None else self.rng
         prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
@@ -226,8 +242,12 @@ class ModelAdapter:
         out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
 
         def run(m: PoolModel) -> Resolution:
+            charged_out = out_tokens
             if text_override is not None:
                 text = text_override
+            elif stream is not None:
+                text, charged_out = self._stream_generate(
+                    m, prompt, out_tokens, stream)
             elif m.engine is not None and m.tokenizer is not None:
                 text = self._guarded_real_generate(m, prompt, out_tokens)
             else:
@@ -239,12 +259,12 @@ class ModelAdapter:
                     query, m.effective_capability(),
                     has_context=has_context, cached_facts=cached_facts,
                     rng=rng)
-            usage = m.usage_for(in_tokens, out_tokens, rng=rng)
+            usage = m.usage_for(in_tokens, charged_out, rng=rng)
             return Resolution(text=text, model=m.name, usage=usage,
                               true_quality=tq, models_consulted=[m.name],
                               provider=m.name)
 
-        if text_override is None and self.fleet.routing_enabled:
+        if text_override is None and stream is None and self.fleet.routing_enabled:
             res = self.fleet.execute(
                 model, fallback if fallback is not None else self.pool.list(),
                 run, lambda m: self.estimate_answer(
@@ -299,8 +319,84 @@ class ModelAdapter:
         import jax.numpy as jnp
         ids = model.tokenizer.encode(prompt)[-64:]
         toks = jnp.asarray([ids], jnp.int32)
-        gen = model.engine.generate(toks, max_new=min(out_tokens, 32))
+        gen = model.engine.generate(
+            toks, max_new=min(out_tokens, self.max_engine_tokens))
         return model.tokenizer.decode(list(np.asarray(gen[0])))
+
+    # -- streaming generation (the incremental token channel) ------------------
+    def _stream_generate(self, model: PoolModel, prompt: str,
+                         out_tokens: int, stream) -> Tuple[str, int]:
+        """Generate while emitting deltas into ``stream``.  Returns
+        ``(full_text, charged_out_tokens)``: a completed stream charges the
+        same ``out_tokens`` the buffered path would; a cancelled stream
+        charges only the tokens actually generated."""
+        if model.engine is not None and model.tokenizer is not None:
+            try:
+                return self._stream_real_generate(model, prompt, out_tokens,
+                                                  stream)
+            except ProviderError:
+                raise
+            except Exception as e:
+                raise ProviderError(provider=model.name, attempts=1,
+                                    kind=f"exception({type(e).__name__})",
+                                    cause=e) from e
+        return self._stream_sim(model, prompt, out_tokens, stream)
+
+    def _stream_real_generate(self, model: PoolModel, prompt: str,
+                              out_tokens: int, stream) -> Tuple[str, int]:
+        """Step-wise engine decode through the streaming Scheduler —
+        configured exactly like the buffered batch path (paged +
+        speculative when the model carries a draft engine), so the emitted
+        token sequence is bit-exact with ``request()``'s text.  The text
+        delta per event is a prefix diff of the full decode (byte-level
+        tokenizers make per-token decode non-concatenative; the diff is
+        concat-safe by construction)."""
+        import jax.numpy as jnp
+        from repro.serving.scheduler import Request, Scheduler
+        ids = model.tokenizer.encode(prompt)[-64:]
+        cap = min(out_tokens, self.max_engine_tokens)
+        if model.draft_engine is not None:
+            from repro.serving.engine import DraftEngine
+            draft = DraftEngine(model.draft_engine, n_slots=1,
+                                max_len=model.engine.max_len)
+            sched = Scheduler(model.engine, n_slots=1, paged=True,
+                              draft=draft, spec_k=model.spec_k)
+        else:
+            sched = Scheduler(model.engine, n_slots=1)
+        sched.submit(Request(rid=0, user="__stream__",
+                             prompt=jnp.asarray(ids, jnp.int32), max_new=cap))
+        emitted: List[int] = []
+        text = ""
+        cancelled = False
+        while sched.pending() and not cancelled:
+            for _req, new_toks, _done in sched.step_stream():
+                emitted.extend(new_toks)
+                full = model.tokenizer.decode(emitted)
+                delta, text = full[len(text):], full
+                if not stream.emit(delta, token_ids=new_toks):
+                    cancelled = True
+                    sched.cancel(0)
+                    break
+        if model.draft_engine is not None:
+            self._note_spec(model.name, sched.spec_summary())
+        return text, (len(emitted) if cancelled else out_tokens)
+
+    def _stream_sim(self, model: PoolModel, prompt: str, out_tokens: int,
+                    stream) -> Tuple[str, int]:
+        """SIM-mode streaming: the templated text arrives in fixed-size
+        chunks, each mapped to a share of the modelled output tokens so a
+        cancelled SIM stream still settles proportionally."""
+        text = (f"[{model.name}] response({_count_tokens(prompt)}t "
+                f"prompt): {prompt[:64]}")
+        chunk = 8
+        pieces = [text[i:i + chunk] for i in range(0, len(text), chunk)] or [""]
+        per_piece = max(1, out_tokens // len(pieces))
+        sent = ""
+        for i, piece in enumerate(pieces):
+            if not stream.emit(piece):
+                return sent, min(out_tokens, (i + 1) * per_piece)
+            sent += piece
+        return sent, out_tokens
 
     def _guarded_real_generate(self, model: PoolModel, prompt: str,
                                out_tokens: int) -> str:
@@ -389,7 +485,8 @@ class ModelAdapter:
             ids = model.tokenizer.encode(prompt)[-64:]
             sched.submit(Request(rid=i, user=f"__batch__{i}",
                                  prompt=jnp.asarray(ids, jnp.int32),
-                                 max_new=min(ot, 32), deadline=dl, tier=tier))
+                                 max_new=min(ot, self.max_engine_tokens),
+                                 deadline=dl, tier=tier))
         done = sched.run_to_completion()
         if model.draft_engine is not None:
             self._note_spec(model.name, sched.spec_summary())

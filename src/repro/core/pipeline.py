@@ -63,6 +63,10 @@ class RequestState:
     miss_usage: Usage = dataclasses.field(default_factory=Usage)
     # per-stage disclosure scratch (e.g. the prefetch budget gate's verdict)
     notes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # incremental token channel (core.api.TokenStream) attached by
+    # request_stream/submit_stream: ModelStage threads it to the adapter so
+    # deltas are emitted as they decode; None = buffered delivery
+    stream: Optional[Any] = None
 
     @property
     def resolved(self) -> bool:
@@ -265,23 +269,38 @@ class ModelStage(Stage):
             self.name = "model[verify]"
 
     def run(self, proxy, state: RequestState) -> None:
+        # the incremental channel only engages for a plain model resolve:
+        # verification must score the COMPLETE answer before anything is
+        # served, and pre-batched overrides are already decoded — those
+        # paths fall back to one final full-text chunk (proxy.request_stream)
+        stream = (state.stream
+                  if (state.stream is not None and not self.verification
+                      and state.text_override is None
+                      and state.resolution_override is None)
+                  else None)
         state.response = proxy._resolve(
             state.req, state.model, state.messages, state.strategy,
             state.gate_usage, state.decision_latency,
             verification=self.verification, text_override=state.text_override,
             resolution_override=state.resolution_override,
             reserved=(state.policy.reserved if state.policy is not None
-                      else 0.0))
+                      else 0.0),
+            stream=stream)
 
     def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
         todo = [s for s in states if not s.resolved]
         if self.verification:
             self._run_batch_verification(proxy, todo)
             return
+        # streaming members skip the buffered continuous batch — their
+        # run() decodes step-wise through the streaming Scheduler so a
+        # live stream never blocks the batch's buffered members (and vice
+        # versa: the buffered decode completes in one scheduler run)
+        buffered = [s for s in todo if s.stream is None]
         texts = proxy.adapter.generate_batch(
             [(s.model, s.req.prompt, s.req.query, _latency_budget(s.req),
-              _ledger_tier(proxy, s.req)) for s in todo])
-        for s, t in zip(todo, texts):
+              _ledger_tier(proxy, s.req)) for s in buffered])
+        for s, t in zip(buffered, texts):
             if t is not None:
                 s.text_override = t
         for s in todo:

@@ -44,12 +44,13 @@ import dataclasses
 import math
 import queue
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.api import (Metadata, ProxyRequest, ProxyResponse, ServiceType,
-                            Usage)
+                            StreamChunk, TokenStream, Usage)
 from repro.core.cache import SemanticCache
 from repro.core.context_manager import (ContextManager, LastK, SmartContext,
                                         apply_filters)
@@ -144,6 +145,36 @@ class ProxyStats:
 
     def __init__(self):
         self._paths: Dict[str, Dict[str, Any]] = {}
+        # streaming latency rings: realised TTFTs and median inter-chunk
+        # gaps of the most recent streamed responses (stats()["serving"])
+        self._ttft: collections.deque = collections.deque(maxlen=self.WINDOW)
+        self._inter: collections.deque = collections.deque(maxlen=self.WINDOW)
+        self._streams = 0
+        self._streams_cancelled = 0
+
+    def record_stream(self, sink: TokenStream) -> None:
+        self._streams += 1
+        if sink.cancelled:
+            self._streams_cancelled += 1
+        t = sink.ttft()
+        if t is not None:
+            self._ttft.append(t)
+        g = sink.inter_token_p50()
+        if g is not None:
+            self._inter.append(g)
+
+    def stream_snapshot(self) -> Dict[str, Any]:
+        t = np.asarray(self._ttft, dtype=np.float64)
+        g = np.asarray(self._inter, dtype=np.float64)
+        return {
+            "streams": self._streams,
+            "streams_cancelled": self._streams_cancelled,
+            "ttft_cdf": sorted(float(x) for x in t),
+            "ttft_p50_s": float(np.percentile(t, 50)) if t.size else 0.0,
+            "ttft_p95_s": float(np.percentile(t, 95)) if t.size else 0.0,
+            "inter_token_p50_s": (float(np.percentile(g, 50))
+                                  if g.size else 0.0),
+        }
 
     def record(self, path: str, state: RequestState) -> None:
         p = self._paths.setdefault(path, {"requests": 0, "stages": {}})
@@ -239,8 +270,22 @@ class LLMBridge:
             pol = dataclasses.replace(pol, pipeline=pipe)
         return pol
 
+    def _warn_legacy(self, req: ProxyRequest) -> None:
+        """v1 deprecation: a non-intent request through a public entry point
+        warns (the preset PlanSpecs still compile and route identically).
+        Requests mapped from the OpenAI wire surface are v3, not v1 — a
+        model pin legitimately rides the FIXED preset without warning."""
+        if not req.is_intent and req.params.get("_wire") is None:
+            warnings.warn(
+                "LLMBridge.request(service_type=...) is deprecated: state "
+                "Constraints/Preference (the intent API) or use the "
+                "OpenAI-compatible surface; ServiceType presets keep "
+                "routing through their compiled PlanSpecs for now.",
+                DeprecationWarning, stacklevel=3)
+
     # -- main entry ------------------------------------------------------------
     def request(self, req: ProxyRequest) -> ProxyResponse:
+        self._warn_legacy(req)
         policy = self._policy_for(req)
         state = RequestState(req=req, policy=policy)
         try:
@@ -249,6 +294,47 @@ class LLMBridge:
             self._release_hold(state)   # a failed request must not leak it
             raise
         return self._finalize(state, path="request")
+
+    def request_stream(self, req: ProxyRequest, *,
+                       buffer: int = 0) -> Iterator[StreamChunk]:
+        """Execute ``req`` while yielding ``StreamChunk``s as tokens land.
+
+        The pipeline runs on a worker thread with a ``TokenStream`` attached
+        to the request state; the caller iterates chunks here.  The final
+        chunk carries the full ``ProxyResponse`` (``chunk.final`` /
+        ``chunk.response``) — full text is still buffered internally, so
+        semantic-cache insertion, judge scoring and ledger settlement see
+        exactly what ``request()`` would have, and the concatenated chunk
+        text is bit-exact with the buffered path.  Closing the generator
+        mid-stream cancels decode: the serving slot is torn down, pages are
+        released, and the ledger settles only the tokens actually generated.
+        ``buffer`` bounds the chunk queue (0 = unbounded); a bounded queue
+        backpressures the decode loop against a slow consumer.
+        """
+        self._warn_legacy(req)
+        policy = self._policy_for(req)
+        state = RequestState(req=req, policy=policy)
+        sink = TokenStream(maxsize=buffer)
+        state.stream = sink
+
+        def work() -> None:
+            try:
+                policy.pipeline.run(self, state)
+                resp = self._finalize(state, path="request_stream")
+                sink.close(response=resp)
+            except BaseException as e:   # surface to the consumer, don't leak
+                self._release_hold(state)
+                sink.close(error=e)
+
+        t = threading.Thread(target=work, name="llmbridge-stream", daemon=True)
+        t.start()
+        try:
+            yield from sink
+        except GeneratorExit:
+            sink.cancel()
+            t.join()
+            raise
+        t.join()
 
     def request_batch(self, reqs: Sequence[ProxyRequest]) -> List[ProxyResponse]:
         """Execute B in-flight requests batch-first.
@@ -313,6 +399,17 @@ class LLMBridge:
             resp.metadata.spec_acceptance = spec["acceptance_rate"]
             resp.metadata.spec_draft_time = spec["draft_time"]
             resp.metadata.spec_verify_time = spec["verify_time"]
+        if state.stream is not None:
+            sink = state.stream
+            # paths that never touched the incremental channel (cache hits,
+            # verification, declines) still deliver: one final full-text chunk
+            if sink.chunks_emitted == 0 and resp.text:
+                sink.emit(resp.text)
+            resp.metadata.stream = True
+            resp.metadata.stream_cancelled = sink.cancelled
+            resp.metadata.ttft = sink.ttft()
+            resp.metadata.inter_token_p50 = sink.inter_token_p50()
+            self._stats.record_stream(sink)
         self._stats.record(path, state)
         # declined responses are policy boilerplate, not conversation — they
         # must not pollute future context windows
@@ -369,7 +466,18 @@ class LLMBridge:
         and return a ``Ticket``.  The request's policy compiles now, so
         intent holds land on the ledger at enqueue time; the batched hot
         path executes it when ``drain()``/``pump()`` forms its batch."""
+        self._warn_legacy(req)
         return self.admission.submit(req)
+
+    def submit_stream(self, req: ProxyRequest):
+        """Enqueue ``req`` for fair admission with a live token channel
+        attached: the returned ``Ticket`` exposes ``chunks()`` (iterate
+        deltas as the batch decodes) alongside ``result()``.  Streaming
+        tickets do not block batch formation — their batch dispatches on a
+        background worker, so ``max_wait`` is honored against first token
+        rather than last."""
+        self._warn_legacy(req)
+        return self.admission.submit_stream(req)
 
     def drain(self) -> List[ProxyResponse]:
         """Form and dispatch batches until the admission queues are empty;
@@ -401,8 +509,11 @@ class LLMBridge:
             # per-model speculative-decode telemetry from the serving
             # substrate (acceptance rate, draft/verify wall time); empty
             # until an engine-backed model decodes a batch with a draft
+            # ... plus the streaming surface: TTFT CDF + inter-token gaps
+            # across every finished request_stream/submit_stream
             "serving": {"spec": {name: dict(s) for name, s in
-                                 self.adapter.serving_stats.items()}},
+                                 self.adapter.serving_stats.items()},
+                        **self._stats.stream_snapshot()},
             # the reliability layer: per-provider health/breaker state plus
             # fleet-wide retry/hedge accounting (wasted hedge cost included)
             "providers": self.providers.snapshot(),
@@ -464,11 +575,14 @@ class LLMBridge:
                  strategy: str, gate_usage: Usage, decision_latency: float,
                  *, verification: bool = False,
                  text_override: Optional[str] = None,
-                 resolution_override=None, reserved: float = 0.0) -> ProxyResponse:
+                 resolution_override=None, reserved: float = 0.0,
+                 stream=None) -> ProxyResponse:
         from repro.core.model_adapter import Resolution
         from repro.core.providers import ProviderError
         ctx_tokens = ContextManager.token_count(msgs)
         has_ctx = self._has_context(req, msgs)
+        out_override = req.params.get("max_tokens")
+        out_tokens = int(out_override) if out_override else None
         try:
             if resolution_override is not None:
                 res = resolution_override
@@ -483,10 +597,12 @@ class LLMBridge:
                 res = self.adapter.answer(
                     model, req.prompt, context_tokens=ctx_tokens,
                     query=req.query, has_context=has_ctx,
+                    out_tokens=out_tokens,
                     text_override=text_override,
                     hedge=self._wants_hedge(req),
                     fallback=self._fallback_candidates(
-                        req, ctx_tokens=ctx_tokens, reserved=reserved))
+                        req, ctx_tokens=ctx_tokens, reserved=reserved),
+                    stream=stream)
         except ProviderError as e:
             # the structured terminal failure: every candidate exhausted.
             # The request resolves (the batch lives on) with a disclosed

@@ -1,38 +1,161 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch gemma-2b``.
+"""Serving launcher: scheduler demo + the OpenAI-compatible HTTP front door.
 
-Runs the continuous-batching scheduler over a stream of synthetic requests
-against a (reduced, CPU) engine — the same Engine/Scheduler pair the
-LLMBridge model pool uses.
+Two entry points share this module:
+
+* ``python -m repro.launch.serve --arch gemma-2b`` — the historical demo:
+  the continuous-batching scheduler over a stream of synthetic requests
+  against a (reduced, CPU) engine, the same Engine/Scheduler pair the
+  LLMBridge model pool uses.
+
+* ``python -m repro.launch.serve --http 8000`` — a stdlib HTTP server
+  exposing LLMBridge behind the OpenAI wire surface:
+
+  - ``POST /v1/chat/completions`` — maps the JSON body through
+    ``ChatCompletionRequest.from_wire``/``to_proxy`` onto the intent API.
+    ``"stream": true`` answers Server-Sent Events: one ``data: {chunk}``
+    frame per delta (``ChatCompletionChunk`` wire shape) terminated by
+    ``data: [DONE]``; a client that disconnects mid-stream cancels decode
+    server-side (slot freed, pages released, only generated tokens billed).
+    Without ``stream`` the full ``ChatCompletionResponse`` is returned as
+    one JSON body.  LLMBridge intents ride ``x_``-prefixed extension
+    fields (``x_max_cost``, ``x_preference``, ...) and the disclosure
+    metadata comes back under ``x_llmbridge``.
+  - ``GET /v1/models`` — the model pool, OpenAI list shape.
+
+  Point any OpenAI client at it::
+
+      client = openai.OpenAI(base_url="http://localhost:8000/v1",
+                             api_key="unused")
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs
-from repro.data.tokenizer import ByteTokenizer
-from repro.models import init_model
-from repro.serving.engine import Engine
-from repro.serving.sampler import SamplerConfig
-from repro.serving.scheduler import Request, Scheduler
+from repro.core.api import (ChatCompletionChunk, ChatCompletionRequest,
+                            ChatCompletionResponse)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b", choices=configs.ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--users", type=int, default=4)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV pool + copy-on-write prefix sharing "
-                         "(attention-only archs)")
-    ap.add_argument("--page-size", type=int, default=16)
-    args = ap.parse_args()
+# -- OpenAI-compatible HTTP front door ----------------------------------------
+
+def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
+                ) -> ThreadingHTTPServer:
+    """Build (don't start) a ``ThreadingHTTPServer`` fronting ``bridge``.
+
+    Returned unstarted so tests can bind port 0 and read
+    ``server.server_address``; call ``serve_forever()`` (or spin it on a
+    thread) to serve.
+    """
+
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):   # quiet: the demo prints stats
+            pass
+
+        # -- helpers ---------------------------------------------------------
+        def _json(self, code: int, payload) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _error(self, code: int, message: str) -> None:
+            self._json(code, {"error": {"message": message,
+                                        "type": "invalid_request_error"}})
+
+        # -- routes ----------------------------------------------------------
+        def do_GET(self) -> None:
+            if self.path.rstrip("/") == "/v1/models":
+                models = [{"id": m.name, "object": "model",
+                           "owned_by": "llmbridge"}
+                          for m in bridge.pool.list()]
+                self._json(200, {"object": "list", "data": models})
+            else:
+                self._error(404, f"unknown path {self.path}")
+
+        def do_POST(self) -> None:
+            if self.path.rstrip("/") != "/v1/chat/completions":
+                self._error(404, f"unknown path {self.path}")
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                wire = json.loads(self.rfile.read(n) or b"{}")
+                creq = ChatCompletionRequest.from_wire(wire)
+                if not creq.messages:
+                    raise ValueError("messages must be non-empty")
+                preq = creq.to_proxy()
+            except (ValueError, TypeError, KeyError) as e:
+                self._error(400, f"bad request: {e}")
+                return
+            rid = f"chatcmpl-{int(time.time() * 1000):x}"
+            created = int(time.time())
+            if creq.stream:
+                self._stream(preq, rid=rid, created=created, model=creq.model)
+            else:
+                resp = bridge.request(preq)
+                out = ChatCompletionResponse.from_proxy(
+                    resp, rid=rid, created=created, model=creq.model)
+                self._json(200, out.to_wire())
+
+        def _stream(self, preq, *, rid: str, created: int, model: str) -> None:
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            gen = bridge.request_stream(preq)
+            first = True
+            try:
+                for chunk in gen:
+                    wire = ChatCompletionChunk.from_stream(
+                        chunk, rid=rid, created=created, model=model,
+                        first=first).to_wire()
+                    first = False
+                    self.wfile.write(b"data: " + json.dumps(wire).encode()
+                                     + b"\n\n")
+                    self.wfile.flush()
+                self.wfile.write(b"data: [DONE]\n\n")
+                self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                # client hung up: closing the generator cancels decode —
+                # the slot tears down and only generated tokens settle
+                gen.close()
+
+    return ThreadingHTTPServer((host, port), Handler)
+
+
+def serve_http(host: str, port: int) -> None:
+    """Build a SIM-pool bridge and serve the OpenAI surface until ^C."""
+    from repro.core import build_bridge
+    bridge = build_bridge()
+    server = make_server(bridge, host=host, port=port)
+    bound = server.server_address
+    print(f"LLMBridge OpenAI-compatible surface on http://{bound[0]}:{bound[1]}/v1")
+    print("  POST /v1/chat/completions   (stream: true -> SSE)")
+    print("  GET  /v1/models")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.shutdown()
+
+
+# -- scheduler demo -----------------------------------------------------------
+
+def demo(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.models import init_model
+    from repro.serving.engine import Engine
+    from repro.serving.sampler import SamplerConfig
+    from repro.serving.scheduler import Request, Scheduler
 
     cfg = configs.get_reduced(args.arch)
     params = init_model(cfg, jax.random.PRNGKey(0))
@@ -64,6 +187,31 @@ def main() -> None:
               f"evictions={sched.pool.n_evictions}")
     for r in done[:4]:
         print(f"  [{r.user} rid={r.rid}] -> {tok.decode(r.generated)[:48]!r}")
+
+
+def main() -> None:
+    from repro import configs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=configs.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--users", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool + copy-on-write prefix sharing "
+                         "(attention-only archs)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the OpenAI-compatible surface instead of "
+                         "the scheduler demo")
+    ap.add_argument("--host", default="127.0.0.1")
+    args = ap.parse_args()
+    if args.http is not None:
+        serve_http(args.host, args.http)
+    else:
+        demo(args)
 
 
 if __name__ == "__main__":

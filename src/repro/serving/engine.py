@@ -122,6 +122,45 @@ class Engine:
         self.n_host_syncs += 1
         return bool(done.all())
 
+    def generate_stream(self, prompt: jax.Array, max_new: int,
+                        sampler: SamplerConfig = SamplerConfig(),
+                        key: Optional[jax.Array] = None,
+                        eos_id: int = -1):
+        """Step-wise generator twin of ``generate``: yields one (B,) int32
+        host array per decode step — the streaming front door's per-token
+        path.  Stacking the yields along axis=1 reproduces ``generate``'s
+        output bit-for-bit (same prefill argmax, same per-step key splits,
+        same EOS trim: the step at which every row has emitted EOS is the
+        last one yielded).  The per-token host transfer ``generate`` batches
+        away is inherent here — the consumer needs each token on the host
+        to forward it downstream.
+        """
+        key = key if key is not None else jax.random.PRNGKey(0)
+        B, S = prompt.shape
+        extras = {}
+        n_prefix = 0
+        if self.cfg.family == "vlm":
+            extras["img_embeds"] = vlm.patch_embeddings(self.cfg, B)
+            n_prefix = vlm.n_patches(self.cfg)
+        if self.cfg.family == "audio":
+            extras["frames"] = jnp.zeros((B, self.cfg.n_frames, self.cfg.d_encoder),
+                                         self.cfg.dtype)
+        cache = self.new_cache(B, max(self.max_len, S + n_prefix + max_new + 1))
+        logits, cache = self.prefill(prompt, cache, **extras)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        pos = S + n_prefix
+        done = jnp.zeros((B,), bool)
+        for i in range(max_new):
+            yield np.asarray(tok)
+            key, sub = jax.random.split(key)
+            positions = jnp.full((B, 1), pos + i, jnp.int32)
+            logits, cache = self.decode(tok[:, None], positions, cache)
+            tok = sample(logits[:, -1], sub, sampler)
+            if eos_id >= 0:
+                done = done | (tok == eos_id)
+                if self._poll_done(done):
+                    return
+
 
 def prefill_step(params: Dict, tokens: jax.Array, cache: Dict, *,
                  cfg: ModelConfig, img_embeds=None, frames=None

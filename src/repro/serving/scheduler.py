@@ -653,6 +653,61 @@ class Scheduler:
         self.finished.extend(done_now)
         return done_now
 
+    # -- streaming ------------------------------------------------------------
+    def step_stream(self) -> List[Tuple[Request, List[int], bool]]:
+        """One ``step()`` with per-request token deltas: returns
+        ``(req, new_tokens, done)`` for every request that grew this step,
+        in slot order.  A freshly admitted request's first event carries its
+        prefill-argmax token (the TTFT token lands the step the slot is
+        admitted, not when the request finishes); a speculative round's
+        event carries the whole accepted prefix as one burst.  Concatenating
+        a request's deltas across steps reproduces ``req.generated``
+        exactly — streaming changes delivery, never tokens."""
+        before = {s.rid: len(s.generated)
+                  for s in self.slots if s is not None}
+        done_now = self.step()
+        grew = [s for s in self.slots if s is not None] + done_now
+        events = []
+        for req in sorted(grew, key=lambda r: r.slot):
+            new = req.generated[before.get(req.rid, 0):]
+            if new:
+                events.append((req, list(new), req.done))
+        return events
+
+    def run_stream(self, max_steps: int = 10_000):
+        """Generator over streaming events until every queue and slot
+        drains — the streaming twin of ``run_to_completion``."""
+        for _ in range(max_steps):
+            if self.pending() == 0:
+                return
+            for event in self.step_stream():
+                yield event
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request mid-decode (the client dropped its stream).
+
+        A live slot is torn down immediately — dense KV reset or paged
+        pages/reservation released back to the pool (and the draft cache
+        forgotten) — and the user's in-flight mark cleared so their next
+        queued request can admit.  A still-queued request is simply
+        removed.  The partial ``req.generated`` is retained on the request
+        (the proxy settles only those tokens).  Returns False for an
+        unknown/already-finished rid."""
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                req.done = True
+                self.slots[slot] = None
+                self.user_inflight[req.user] = False
+                self._teardown([slot])
+                self.finished.append(req)
+                return True
+        for user, q in self.queues.items():
+            for r in list(q):
+                if r.rid == rid:
+                    q.remove(r)
+                    return True
+        return False
+
     def spec_summary(self) -> Dict:
         """Speculation telemetry for Metadata / proxy.stats(): acceptance
         rate, draft/verify wall time, emitted-per-round."""

@@ -1,0 +1,355 @@
+"""End-to-end token streaming: the step-wise generator APIs (Engine,
+Scheduler) and the proxy's incremental token channel.
+
+The governing invariant: streamed output is BIT-EXACT with the buffered
+path — same greedy decode, same token cap, same text — across dense, paged
+and speculative decoding; a cancelled stream tears its slot down, releases
+its pages, and settles only the tokens actually generated."""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (Constraints, ModelPool, PoolModel, Preference,
+                        ProxyRequest, build_bridge, pool_model_from_config)
+from repro.core.api import TokenStream
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_model
+from repro.serving.engine import DraftEngine, Engine
+from repro.serving.scheduler import Request, Scheduler
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    return Engine(cfg, init_model(cfg, jax.random.PRNGKey(0)),
+                  max_len=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def small_engine(engine):
+    cfg = dataclasses.replace(engine.cfg, n_layers=1)
+    return Engine(cfg, init_model(cfg, jax.random.PRNGKey(7)),
+                  max_len=MAX_LEN + DraftEngine.HEADROOM)
+
+
+def _prompts(seed=0, lens=(9, 17, 33, 5)):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.integers(3, 90, n).tolist(), jnp.int32)
+            for n in lens]
+
+
+# -- TokenStream (the channel itself) -----------------------------------------
+
+class TestTokenStream:
+    def test_emit_iterate_close(self):
+        s = TokenStream()
+        assert s.emit("he", token_ids=(1,))
+        assert s.emit("llo", token_ids=(2, 3))
+        s.close()
+        chunks = list(s)
+        assert [c.text for c in chunks[:-1]] == ["he", "llo"]
+        assert chunks[-1].final
+        assert s.text == "hello"
+
+    def test_cancel_stops_producer(self):
+        s = TokenStream(maxsize=1)
+        assert s.emit("a")
+        s.cancel()
+        assert not s.emit("b")          # producer sees the drop
+        s.close()                       # terminal marker still lands
+        assert s.cancelled
+
+    def test_timing_stats(self):
+        s = TokenStream()
+        s.emit("a"), s.emit("b"), s.emit("c")
+        s.close()
+        list(s)
+        assert s.ttft() is not None and s.ttft() >= 0.0
+        assert s.inter_token_p50() is not None
+
+    def test_error_surfaces_to_consumer(self):
+        s = TokenStream()
+        s.emit("partial")
+        s.close(error=RuntimeError("boom"))
+        with pytest.raises(RuntimeError, match="boom"):
+            list(s)
+
+
+# -- Engine.generate_stream ----------------------------------------------------
+
+class TestEngineStream:
+    def test_stream_matches_generate(self, engine):
+        prompt = jnp.asarray([_prompts(seed=3, lens=(12,))[0].tolist()],
+                             jnp.int32).reshape(1, -1)
+        base = np.asarray(engine.generate(prompt, max_new=10))
+        cols = list(engine.generate_stream(prompt, max_new=10))
+        got = np.stack(cols, axis=1)
+        np.testing.assert_array_equal(got, base)
+
+    def test_stream_matches_generate_with_eos(self, engine):
+        prompt = jnp.asarray([_prompts(seed=4, lens=(8,))[0].tolist()],
+                             jnp.int32).reshape(1, -1)
+        base = np.asarray(engine.generate(prompt, max_new=12))
+        eos = int(base[0, len(base[0]) // 2])     # an emitted token as EOS
+        trimmed = np.asarray(engine.generate(prompt, max_new=12, eos_id=eos))
+        cols = list(engine.generate_stream(prompt, max_new=12, eos_id=eos))
+        got = np.stack(cols, axis=1)
+        # identical columns up to the streamed length, and the stream stops
+        # at (or before, same poll cadence) the buffered trim point
+        np.testing.assert_array_equal(got, trimmed[:, :got.shape[1]])
+        assert got.shape[1] <= 12
+
+
+# -- Scheduler.step_stream / run_stream ---------------------------------------
+
+def _stream_collect(engine, prompts, max_new=12, **sched_kw):
+    sch = Scheduler(engine, n_slots=len(prompts), **sched_kw)
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=max_new))
+    got = {}
+    for req, new_toks, done in sch.run_stream():
+        got.setdefault(req.rid, []).extend(new_toks)
+    return sch, got
+
+
+def _buffered(engine, prompts, max_new=12, **sched_kw):
+    sch = Scheduler(engine, n_slots=len(prompts), **sched_kw)
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=max_new))
+    return {r.rid: list(r.generated) for r in sch.run_to_completion()}
+
+
+class TestSchedulerStream:
+    def test_dense_stream_bit_exact(self, engine):
+        base = _buffered(engine, _prompts())
+        _, got = _stream_collect(engine, _prompts())
+        assert got == base
+
+    def test_paged_stream_bit_exact(self, engine):
+        base = _buffered(engine, _prompts(seed=1), paged=True, page_size=4)
+        sch, got = _stream_collect(engine, _prompts(seed=1), paged=True,
+                                   page_size=4)
+        assert got == base
+        sch.pool.check()
+
+    def test_spec_stream_bit_exact_bursts(self, engine, small_engine):
+        base = _buffered(engine, _prompts(seed=2), paged=True, page_size=4)
+        draft = DraftEngine(small_engine, n_slots=4, max_len=MAX_LEN)
+        sch = Scheduler(engine, n_slots=4, paged=True, page_size=4,
+                        draft=draft, spec_k=4)
+        for i, p in enumerate(_prompts(seed=2)):
+            sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=12))
+        got, burst_sizes = {}, []
+        for req, new_toks, done in sch.run_stream():
+            got.setdefault(req.rid, []).extend(new_toks)
+            burst_sizes.append(len(new_toks))
+        assert sch.spec_stats["enabled"]
+        assert got == base
+        # spec rounds emit accepted prefixes as bursts: at least one event
+        # must carry more than one token (acceptance > 0 somewhere)
+        assert max(burst_sizes) > 1
+        sch.pool.check()
+
+    def test_cancel_releases_slot_and_pages(self, engine):
+        sch = Scheduler(engine, n_slots=2, paged=True, page_size=4)
+        for i, p in enumerate(_prompts(seed=5, lens=(9, 17))):
+            sch.submit(Request(rid=i, user=f"u{i}", prompt=p, max_new=24))
+        # decode a few steps, then cancel rid 0 mid-flight
+        for _ in range(3):
+            sch.step_stream()
+        assert any(r is not None and r.rid == 0 for r in sch.slots)
+        assert sch.cancel(0)
+        assert all(r is None or r.rid != 0 for r in sch.slots)
+        assert sch.user_inflight["u0"] is False
+        # the survivor decodes to completion; refcounts stay consistent
+        # (trie-resident prefix pages remain, LRU-evictable, by design)
+        for _ in sch.run_stream():
+            pass
+        sch.pool.check()
+
+    def test_cancel_queued_request(self, engine):
+        sch = Scheduler(engine, n_slots=1)
+        for i, p in enumerate(_prompts(seed=6, lens=(9, 11))):
+            sch.submit(Request(rid=i, user="same-user", prompt=p, max_new=8))
+        # rid 1 is queued behind rid 0 (per-user FIFO)
+        assert sch.cancel(1)
+        done = sch.run_to_completion()
+        assert [r.rid for r in done] == [0]
+
+
+# -- proxy: request_stream ------------------------------------------------------
+
+def _sim_req(user, prompt="stream me a story", **cons):
+    return ProxyRequest(prompt=prompt, user=user,
+                        constraints=Constraints(allow_cache=False, **cons),
+                        preference=Preference.COST_FIRST)
+
+
+class TestProxyStream:
+    def test_sim_stream_bit_exact_with_buffered(self):
+        bridge = build_bridge()
+        buffered = bridge.request(_sim_req("u-buf"))
+        chunks = list(bridge.request_stream(_sim_req("u-str")))
+        final = chunks[-1]
+        assert final.final and final.response is not None
+        text = "".join(c.text for c in chunks)
+        assert text == final.response.text == buffered.text
+
+    def test_stream_metadata_and_stats(self):
+        bridge = build_bridge()
+        chunks = list(bridge.request_stream(_sim_req("u1")))
+        md = chunks[-1].response.metadata
+        assert md.stream is True
+        assert md.ttft is not None and md.ttft >= 0.0
+        assert md.inter_token_p50 is not None
+        serving = bridge.stats()["serving"]
+        assert serving["streams"] == 1
+        assert len(serving["ttft_cdf"]) == 1
+        assert serving["ttft_p50_s"] == serving["ttft_cdf"][0]
+
+    def test_stream_cost_matches_buffered(self):
+        a, b = build_bridge(), build_bridge()
+        buffered = a.request(_sim_req("u"))
+        chunks = list(b.request_stream(_sim_req("u")))
+        assert (chunks[-1].response.metadata.usage.cost
+                == pytest.approx(buffered.metadata.usage.cost))
+        assert a.ledger.spent("u") == pytest.approx(b.ledger.spent("u"))
+
+    def test_cache_hit_streams_one_final_chunk(self):
+        bridge = build_bridge()
+        bridge.cache.put_exact("cache warm probe", "the cached answer")
+        hit = ProxyRequest(prompt="cache warm probe", user="w",
+                           constraints=Constraints(),
+                           preference=Preference.COST_FIRST)
+        chunks = list(bridge.request_stream(hit))
+        resp = chunks[-1].response
+        assert resp.metadata.cache_hit
+        # one content chunk (the fallback full-text emit) + the final marker
+        assert len(chunks) == 2
+        assert chunks[0].text == resp.text
+
+    def test_cancellation_settles_partial_cost(self):
+        full = build_bridge()
+        complete = full.request(_sim_req("u"))
+        full_cost = complete.metadata.usage.cost
+
+        bridge = build_bridge()
+        gen = bridge.request_stream(_sim_req("u"), buffer=1)
+        next(gen), next(gen)            # take two chunks, then hang up
+        gen.close()
+        spent = bridge.ledger.spent("u")
+        assert 0.0 < spent < full_cost
+        assert bridge.stats()["serving"]["streams_cancelled"] == 1
+
+    def test_legacy_service_type_streams_with_warning(self):
+        from repro.core import ServiceType
+        bridge = build_bridge()
+        with pytest.warns(DeprecationWarning):
+            chunks = list(bridge.request_stream(ProxyRequest(
+                prompt="legacy stream", user="u",
+                service_type=ServiceType.COST)))
+        assert chunks[-1].response is not None
+
+
+# -- proxy: engine-backed (REAL) streaming -------------------------------------
+
+def _real_bridge(engine, draft_engine=None):
+    tok = ByteTokenizer()
+    base = pool_model_from_config(configs.get("qwen2-1.5b"))
+    pool = ModelPool()
+    pool.add(PoolModel(name=base.name, active_params=base.active_params,
+                       capability=base.capability, engine=engine,
+                       tokenizer=tok, draft_engine=draft_engine))
+    return build_bridge(pool=pool)
+
+
+def _real_req(user, max_tokens=12):
+    return ProxyRequest(prompt="abcd", user=user,
+                        constraints=Constraints(allow_cache=False),
+                        preference=Preference.COST_FIRST,
+                        params={"max_tokens": max_tokens})
+
+
+class TestRealEngineStream:
+    def test_real_stream_bit_exact(self, engine):
+        bridge = _real_bridge(engine)
+        buffered = bridge.request(_real_req("u-buf"))
+        chunks = list(bridge.request_stream(_real_req("u-str")))
+        text = "".join(c.text for c in chunks)
+        assert text == chunks[-1].response.text == buffered.text
+        assert buffered.metadata.usage.cost == pytest.approx(
+            chunks[-1].response.metadata.usage.cost)
+
+    def test_real_spec_stream_bit_exact(self, engine, small_engine):
+        plain = _real_bridge(engine)
+        buffered = plain.request(_real_req("u-buf"))
+        spec = _real_bridge(engine, draft_engine=small_engine)
+        chunks = list(spec.request_stream(_real_req("u-str")))
+        text = "".join(c.text for c in chunks)
+        assert text == buffered.text
+        assert chunks[-1].response.metadata.spec_acceptance is not None
+
+    def test_real_cancellation_frees_and_partially_charges(self, engine):
+        bridge = _real_bridge(engine)
+        full_cost = bridge.request(
+            _real_req("u-full")).metadata.usage.cost
+        gen = bridge.request_stream(_real_req("u", max_tokens=12), buffer=1)
+        next(gen)                       # first token only, then hang up
+        gen.close()
+        spent = bridge.ledger.spent("u")
+        assert 0.0 < spent < full_cost
+
+
+# -- admission: submit_stream --------------------------------------------------
+
+class TestAdmissionStream:
+    def test_submit_stream_chunks_match_result(self):
+        bridge = build_bridge()
+        t = bridge.submit_stream(_sim_req("u1"))
+        got = []
+        consumer = threading.Thread(
+            target=lambda: got.extend(t.chunks()))
+        consumer.start()
+        bridge.admission.drain()
+        resp = t.result(timeout=10)
+        consumer.join(timeout=10)
+        assert not consumer.is_alive()
+        assert "".join(c.text for c in got) == resp.text
+        assert resp.metadata.queue_wait is not None
+        assert resp.metadata.stream is True
+        assert bridge.admission.stats()["streamed"] == 1
+
+    def test_streaming_batch_does_not_block_formation(self):
+        """With a streaming ticket in flight, the next pump() can still
+        form and dispatch a batch — decode happens on the worker."""
+        bridge = build_bridge()
+        t1 = bridge.submit_stream(_sim_req("u1"))
+        got = []
+        consumer = threading.Thread(target=lambda: got.extend(t1.chunks()))
+        consumer.start()
+        bridge.admission.dispatch()     # returns before decode completes
+        t2 = bridge.submit(ProxyRequest(
+            prompt="buffered rider", user="u2",
+            constraints=Constraints(), preference=Preference.COST_FIRST))
+        bridge.admission.drain()
+        assert t2.result().text
+        assert t1.result(timeout=10).text
+        consumer.join(timeout=10)
+        assert "".join(c.text for c in got) == t1.result().text
+
+    def test_ticket_chunks_requires_streaming(self):
+        bridge = build_bridge()
+        t = bridge.submit(ProxyRequest(
+            prompt="plain", user="u", constraints=Constraints(),
+            preference=Preference.COST_FIRST))
+        with pytest.raises(RuntimeError, match="submit_stream"):
+            t.chunks()
+        bridge.admission.drain()
+        assert t.result().text
