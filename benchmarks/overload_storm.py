@@ -1,0 +1,276 @@
+"""Overload storm: goodput under 1x-4x offered load, with and without brownout.
+
+A seeded, virtual-clock storm generator drives the admission front-end the
+way the paper's burst deployments (WhatsApp Q&A, classroom spikes) would: a
+Poisson arrival process at a multiple of single-pod capacity, mixed latency
+deadlines, one shared SIM-mode bridge.  The serving side is modelled as a
+batch server — one formed batch occupies the (virtual) pod for ``T_BATCH``
+seconds of decode when it contains real model work, near-zero when brownout
+turned it into declines/cache-only — so every run replays exactly from its
+seed and the whole sweep takes seconds of wall time.
+
+Scenarios (all assert — the CI PR gate runs ``--smoke``):
+
+* ``storm``    — the controlled pod at 1x and 4x offered load.  Goodput
+  (deadline-met real completions/s) at 4x must hold within 10% of the 1x
+  value; accepted-request p95 end-to-end latency must stay within 2x the
+  1x p95; the brownout cycle NORMAL -> SHED -> NORMAL must be visible in
+  ``stats()["overload"]`` with a bounded transition count (hysteresis, no
+  flapping); and every ledger hold must be back to zero.
+* ``collapse`` — the SAME 4x storm with the controller disabled: unbounded
+  queueing pushes waits past every deadline and goodput collapses, which is
+  the counterfactual that proves the layer earns its keep.
+* ``shed_free``— a pod forced to SHED refuses every submit with a
+  structured ``OverloadError`` (positive ``retry_after``) and the ledger
+  shows zero spend and zero stranded holds: shed work never charges.
+
+``--smoke`` shrinks the storm duration for the PR gate (same asserts);
+``--json PATH`` writes the full result dict for the nightly artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import (AdmissionController, BrownoutController, Constraints,
+                        LoadMonitor, OverloadError, Preference, ProxyRequest,
+                        Workload, WorkloadConfig, build_bridge, jsonable)
+
+MAX_BATCH = 8
+T_FIX = 0.04           # virtual s of per-batch overhead (formation, prefill launch)
+T_REQ = 0.12           # virtual s of decode per REAL request in the batch
+#: sustainable real-request throughput at full batches: declines/cache-only
+#: tickets ride along at ~zero marginal service
+CAPACITY = MAX_BATCH / (T_FIX + T_REQ * MAX_BATCH)
+DURATION, DURATION_SMOKE = 40.0, 15.0
+COOLDOWN = 20.0        # 1x tail after the storm so de-escalation is visible
+N_USERS = 12
+#: storm-tuned monitor targets: saturation here is ~4 batches of backlog /
+#: ~4s realized wait — brownout engages before the queue can push an
+#: accepted request's wait past what its deadline can absorb, but late
+#: enough that full batches of real work keep the pod near capacity
+TARGETS = {"queue_depth": 32.0, "queue_wait": 4.0}
+#: narrowed CACHE_PREFERRED band + shorter dwell: under a sustained storm
+#: the controller duty-cycles accept<->shed, and time spent in the
+#: cache-only band turns accepted slots into declines that displace real
+#: work from batches — keep that band thin and recover fast
+ENTER, EXIT, DWELL = (0.5, 0.9, 1.0), (0.35, 0.7, 0.85), 0.5
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+
+def _workload() -> Workload:
+    return Workload(WorkloadConfig(n_conversations=8, turns_per_conversation=8,
+                                   seed=5))
+
+
+def _arrivals(rng, rate: float, t0: float, t1: float) -> list:
+    """Poisson arrival times in [t0, t1) with per-request deadline mix:
+    mostly relaxed (6s), a tight slice (3s) that exercises the
+    deadline-infeasibility shed under backlog."""
+    out, t = [], t0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= t1:
+            return out
+        out.append((t, 4.0 if rng.random() < 0.25 else 8.0))
+
+
+def _req(wl, i: int, deadline: float) -> ProxyRequest:
+    q = wl.queries[i % len(wl.queries)]
+    return ProxyRequest(
+        prompt=q.text, user=f"u{i % N_USERS}", conversation=f"u{i % N_USERS}",
+        query=q, update_context=False,
+        constraints=Constraints(max_latency=deadline, allow_cache=False,
+                                allow_prefetch=False),
+        preference=Preference.COST_FIRST)
+
+
+def _real(ticket) -> bool:
+    r = ticket.response
+    return (r is not None
+            and r.metadata.model_used not in ("none", "timeout", "error"))
+
+
+def _run_storm(mult: float, controlled: bool, duration: float,
+               seed: int = 7) -> dict:
+    """One pod under ``mult``x offered load for ``duration`` virtual
+    seconds, then a 1x cooldown tail, then drain."""
+    wl = _workload()
+    bridge = build_bridge(workload=wl, seed=0)
+    clock = VirtualClock()
+    if controlled:
+        bridge.enable_overload(
+            clock=clock.now, monitor=LoadMonitor(targets=TARGETS),
+            brownout=BrownoutController(clock=clock.now, enter=ENTER,
+                                        exit=EXIT, min_dwell=DWELL))
+    adm = AdmissionController(bridge, max_batch=MAX_BATCH, max_wait=0.05,
+                              clock=clock.now, max_queue_depth=32,
+                              max_user_depth=8)
+    bridge.attach_admission(adm)
+    rng = np.random.default_rng(seed)
+    plan = (_arrivals(rng, mult * CAPACITY, 0.0, duration)
+            + _arrivals(rng, 1.0 * CAPACITY, duration, duration + COOLDOWN))
+
+    shed = {}
+    done = []           # (ticket, deadline) of every dispatched request
+    accepted = 0
+    free_at = 0.0
+    i = 0
+    while i < len(plan) or adm.pending():
+        next_arr = plan[i][0] if i < len(plan) else float("inf")
+        if adm.pending() and free_at <= next_arr:
+            clock.advance_to(free_at)
+            batch = adm.dispatch()
+            n_real = sum(1 for t in batch if t.error is None and _real(t))
+            free_at = clock.t + T_FIX + T_REQ * n_real
+            done.extend(batch)
+        else:
+            clock.advance_to(next_arr)
+            t_arr, deadline = plan[i]
+            try:
+                ticket = adm.submit(_req(wl, i, deadline))
+                ticket.x_deadline = deadline
+                accepted += 1
+            except OverloadError as e:
+                assert e.retry_after > 0, e.retry_after
+                shed[e.reason] = shed.get(e.reason, 0) + 1
+            i += 1
+
+    lats, good = [], 0
+    for t in done:
+        if t.error is not None:
+            shed["deadline_expired_d"] = shed.get("deadline_expired_d", 0) + 1
+            continue
+        if not _real(t):
+            continue
+        total = t.queue_wait + t.response.metadata.usage.latency
+        lats.append(total)
+        if total <= getattr(t, "x_deadline", float("inf")):
+            good += 1
+    horizon = duration + COOLDOWN
+    snap = bridge.stats()["overload"]
+    held = dict(getattr(bridge.ledger, "_held", {}))
+    return {
+        "mult": mult, "controlled": controlled, "offered": len(plan),
+        "accepted": accepted, "shed": shed,
+        "real_completions": len(lats), "goodput_rps": good / horizon,
+        "served_rps": len(lats) / horizon,
+        "p95_s": float(np.percentile(lats, 95)) if lats else 0.0,
+        "p50_s": float(np.percentile(lats, 50)) if lats else 0.0,
+        "levels_seen": sorted({tr["to"] for tr in
+                               snap["brownout"]["transitions"]}),
+        "final_level": snap["level"],
+        "n_transitions": snap["brownout"]["n_transitions"],
+        "stranded_holds": {u: h for u, h in held.items() if abs(h) > 1e-9},
+        "overload": snap,
+        "admission": bridge.stats()["admission"],
+    }
+
+
+def run_storm(duration: float = DURATION) -> dict:
+    base = _run_storm(1.0, controlled=True, duration=duration)
+    peak = _run_storm(4.0, controlled=True, duration=duration)
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert peak["goodput_rps"] >= 0.9 * base["goodput_rps"], \
+        (peak["goodput_rps"], base["goodput_rps"])
+    assert peak["p95_s"] <= 2.0 * max(base["p95_s"], 1e-9), \
+        (peak["p95_s"], base["p95_s"])
+    assert "shed" in peak["levels_seen"], peak["levels_seen"]
+    assert peak["final_level"] == "normal", peak["final_level"]
+    # hysteresis: the dwell rate-limits transitions — a flapping controller
+    # would transition per observation (hundreds per virtual second)
+    assert peak["n_transitions"] <= 2 * (duration + COOLDOWN), \
+        peak["n_transitions"]
+    for row in (base, peak):
+        assert not row["stranded_holds"], row["stranded_holds"]
+    assert peak["overload"]["shed_total"] > 0, "4x storm never shed"
+    return {"capacity_rps": CAPACITY, "base": base, "peak": peak}
+
+
+def run_collapse(duration: float = DURATION, controlled_goodput: float = None
+                 ) -> dict:
+    off = _run_storm(4.0, controlled=False, duration=duration)
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert off["shed"] == {}, off["shed"]          # nothing ever refused
+    if controlled_goodput is not None:
+        assert off["goodput_rps"] <= 0.6 * controlled_goodput, \
+            (off["goodput_rps"], controlled_goodput)
+    return off
+
+
+def run_shed_free(n: int = 50) -> dict:
+    """A pod pinned at SHED refuses everything, charges nothing."""
+    wl = _workload()
+    bridge = build_bridge(workload=wl, seed=0)
+    ov = bridge.enable_overload()
+    ov.monitor.observe("queue_depth", 10_000)      # force pressure >> 1
+    raised = 0
+    for i in range(n):
+        try:
+            bridge.admission.submit(_req(wl, i, 6.0))
+        except OverloadError as e:
+            assert e.retry_after > 0 and e.reason == "load_shed", vars(e)
+            raised += 1
+    summary = bridge.ledger.summary()
+    spent = sum(u["spent"] for u in summary.values())
+    held = sum(getattr(bridge.ledger, "_held", {}).values())
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert raised == n, (raised, n)
+    assert spent == 0.0, spent
+    assert abs(held) < 1e-9, held
+    return {"n": n, "raised": raised, "ledger_spent": spent,
+            "holds_outstanding": held,
+            "shed": bridge.stats()["overload"]["shed"]}
+
+
+def run(smoke: bool = False) -> dict:
+    duration = DURATION_SMOKE if smoke else DURATION
+    storm = run_storm(duration)
+    collapse = run_collapse(duration,
+                            controlled_goodput=storm["peak"]["goodput_rps"])
+    return {"duration_s": duration, "storm": storm, "collapse": collapse,
+            "shed_free": run_shed_free()}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short storm for the CI PR gate (same asserts)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full result dict as a JSON artifact")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+
+    s = res["storm"]
+    print(f"capacity {s['capacity_rps']:.1f} req/s | goodput "
+          f"1x={s['base']['goodput_rps']:.2f} "
+          f"4x={s['peak']['goodput_rps']:.2f} req/s | p95 "
+          f"{s['base']['p95_s']:.2f}s -> {s['peak']['p95_s']:.2f}s")
+    print(f"4x brownout: levels={s['peak']['levels_seen']} "
+          f"final={s['peak']['final_level']} "
+          f"transitions={s['peak']['n_transitions']} "
+          f"shed={s['peak']['shed']}")
+    c = res["collapse"]
+    print(f"uncontrolled 4x: goodput {c['goodput_rps']:.2f} req/s "
+          f"(p95 {c['p95_s']:.1f}s) — collapse vs "
+          f"{s['peak']['goodput_rps']:.2f} controlled")
+    f = res["shed_free"]
+    print(f"forced SHED: {f['raised']}/{f['n']} refused, "
+          f"ledger spent {f['ledger_spent']:.4f}, "
+          f"holds {f['holds_outstanding']:.4f}")
+    if args.json:
+        with open(args.json, "w") as fp:
+            json.dump(jsonable(res), fp, indent=2)
+        print(f"wrote {args.json}")

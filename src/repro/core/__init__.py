@@ -20,6 +20,8 @@ from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
 from repro.core.judge import Judge
 from repro.core.model_adapter import (ModelAdapter, ModelPool, PoolModel,
                                       Resolution, pool_model_from_config)
+from repro.core.overload import (BrownoutController, LoadLevel, LoadMonitor,
+                                 OverloadController, OverloadError)
 from repro.core.pipeline import (CacheStage, ContextStage, DeclineStage,
                                  ModelStage, PrefetchStage, PromptPipeline,
                                  RequestState, RouteStage,
@@ -55,6 +57,8 @@ __all__ = [
     "ServePrefetchedStage", "Stage", "default_pipelines",
     "BreakerState", "CircuitBreaker", "FaultSpec", "HealthTracker",
     "ProviderAdapter", "ProviderError", "ProviderFleet",
+    "BrownoutController", "LoadLevel", "LoadMonitor", "OverloadController",
+    "OverloadError",
 ]
 
 

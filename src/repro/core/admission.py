@@ -44,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 import numpy as np
 
 from repro.core.api import ProxyRequest, ProxyResponse
+from repro.core.overload import LoadLevel
 from repro.core.pipeline import RequestState
 from repro.serving.discipline import select_rotating_head
 
@@ -80,6 +81,10 @@ class Ticket:
         return self.response is not None or self.error is not None
 
     def result(self, timeout: Optional[float] = None) -> ProxyResponse:
+        # a shed/declined ticket raises its structured error immediately —
+        # never hang a caller on work that will not run (core/overload.py)
+        if self.error is not None:
+            raise self.error
         if self.stream is not None:
             # streaming batches dispatch on a background worker — wait for
             # the terminal marker instead of requiring a prior drain()
@@ -92,6 +97,8 @@ class Ticket:
 
     def chunks(self):
         """Iterate live ``StreamChunk``s (``submit_stream`` tickets only)."""
+        if self.error is not None:
+            raise self.error
         if self.stream is None:
             raise RuntimeError("ticket was not submitted with submit_stream()")
         return iter(self.stream)
@@ -111,7 +118,9 @@ class AdmissionController:
 
     def __init__(self, bridge, max_batch: int = 8, max_wait: float = 0.02,
                  yield_tier: int = 2, max_yields: int = 4,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 max_queue_depth: int = 256, max_user_depth: int = 32,
+                 stream_idle_timeout: Optional[float] = 30.0):
         assert max_batch >= 1 and max_yields >= 1
         self.bridge = bridge
         self.max_batch = max_batch
@@ -119,6 +128,13 @@ class AdmissionController:
         self.yield_tier = yield_tier
         self.max_yields = max_yields
         self.clock = clock
+        # backpressure caps (enforced only while the bridge's
+        # OverloadController is enabled) + the always-on abandoned-stream
+        # reaper timeout (None disables reaping)
+        self.max_queue_depth = max_queue_depth
+        self.max_user_depth = max_user_depth
+        self.stream_idle_timeout = stream_idle_timeout
+        self._shed: Dict[str, int] = {}
         self._queues: Dict[str, collections.deque] = {}
         self._users_order: List[str] = []
         self._rr_start = 0
@@ -147,11 +163,34 @@ class AdmissionController:
             # from time.monotonic(), so a virtual controller clock must not
             # leak into it.  Formation/stats use enqueued_at (self.clock).
             req.submitted_at = time.monotonic()
-        state = RequestState(req=req, policy=self.bridge._policy_for(req))
+        state = self.bridge._state_for(req)
         deadline_at = None
         if (req.constraints is not None
                 and req.constraints.max_latency is not None):
             deadline_at = now + req.constraints.max_latency
+        ov = self.bridge.overload
+        if ov.enabled:
+            # backpressure gate: the hold is already placed, so every shed
+            # path below must release it before raising
+            ov.observe("queue_depth", self.pending() + 1)
+            reason = None
+            if ov.level >= LoadLevel.SHED:
+                reason = "load_shed"
+            elif self.pending() >= self.max_queue_depth:
+                reason = "queue_full"
+            elif len(self._queues.get(req.user, ())) >= self.max_user_depth:
+                reason = "user_queue_full"
+            elif (req.constraints is not None
+                  and req.constraints.max_latency is not None
+                  and ov.monitor.drain_estimate(self.pending())
+                  > req.constraints.max_latency):
+                # EDF wait estimate says this deadline cannot be met even if
+                # admitted now — shed early rather than burn queue slots
+                reason = "deadline_infeasible"
+            if reason is not None:
+                self.bridge._release_hold(state)
+                self._shed[reason] = self._shed.get(reason, 0) + 1
+                raise ov.shed(reason)
         ticket = Ticket(req=req, state=state, enqueued_at=now,
                         deadline_at=deadline_at, seq=self._seq)
         self._seq += 1
@@ -169,7 +208,11 @@ class AdmissionController:
         batch's formation and ``max_wait`` is honored against first token."""
         from repro.core.api import TokenStream
         ticket = self.submit(req)
-        ticket.stream = TokenStream()
+        # idle_timeout arms the abandoned-stream reaper: a ticket whose
+        # chunks() is never consumed self-cancels at the next emit, which
+        # tears down its decode slot (pages released) and settles only the
+        # tokens actually emitted
+        ticket.stream = TokenStream(idle_timeout=self.stream_idle_timeout)
         ticket.state.stream = ticket.stream
         self._streamed += 1
         return ticket
@@ -258,15 +301,41 @@ class AdmissionController:
         if not batch:
             return []
         now = self.clock()
+        ov = self.bridge.overload
+        expired: List[Ticket] = []
+        if ov.enabled:
+            # deadline-expired heads shed at formation: their wait already
+            # consumed the whole latency budget, so decoding them would be
+            # wasted capacity.  Holds release; shed work never charges.
+            live: List[Ticket] = []
+            for t in batch:
+                if t.deadline_at is not None and t.deadline_at <= now:
+                    self.bridge._release_hold(t.state)
+                    self._shed["deadline_expired"] = \
+                        self._shed.get("deadline_expired", 0) + 1
+                    t.error = ov.shed("deadline_expired")
+                    if t.stream is not None:
+                        t.stream.close(error=t.error)
+                    expired.append(t)
+                else:
+                    live.append(t)
+            batch = live
+        if not batch:
+            return expired
         for t in batch:
             t.queue_wait = max(0.0, now - t.enqueued_at)
             t.batch_size = len(batch)
+            if ov.enabled:
+                ov.observe("queue_wait", t.queue_wait)
+        if ov.enabled:
+            ov.note_dispatch(len(batch))
+            ov.observe("queue_depth", self.pending())
         self._batch_sizes[len(batch)] = self._batch_sizes.get(len(batch), 0) + 1
         if any(t.stream is not None for t in batch):
             self._dispatch_worker().submit(lambda: self._execute(batch))
-            return batch
+            return expired + batch
         self._execute(batch)
-        return batch
+        return expired + batch
 
     def _execute(self, batch: List[Ticket]) -> None:
         try:
@@ -330,4 +399,6 @@ class AdmissionController:
             "jain_index": jain_index(list(self._completed.values())),
             "budget_yields": self._yield_total,
             "streamed": self._streamed,
+            "shed": dict(sorted(self._shed.items())),
+            "shed_total": sum(self._shed.values()),
         }

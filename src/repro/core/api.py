@@ -212,6 +212,14 @@ class Metadata:
     stream_cancelled: bool = False
     ttft: Optional[float] = None
     inter_token_p50: Optional[float] = None
+    # -- overload disclosure (core/overload.py) -----------------------------
+    # brownout level at settle time ("" = controller disabled), why the
+    # request was degraded/timed out ("" = it wasn't), and the suggested
+    # client backoff when the proxy is under load (mirrors the HTTP
+    # surface's Retry-After header)
+    load_level: str = ""
+    shed_reason: str = ""
+    retry_after: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -265,16 +273,29 @@ class TokenStream:
     producer instead of buffering unboundedly (0 = unbounded).  Timing is
     recorded per successful emit, feeding ``Metadata.ttft`` /
     ``inter_token_p50`` and the proxy-wide TTFT CDF.
+
+    ``idle_timeout`` arms the abandoned-stream reaper: when no consumer
+    has taken a chunk (or blocked in :meth:`wait`) for that many seconds,
+    the next :meth:`emit` self-cancels and returns False — the producer
+    tears the decode slot down exactly as on a client disconnect, pages
+    release, and the ledger settles only the tokens actually emitted.  A
+    ``submit_stream`` ticket whose ``chunks()`` is never consumed can
+    therefore no longer pin decode slots forever (``None`` = never reap).
     """
 
     #: producer put() poll interval while checking the cancel flag
     _POLL_S = 0.05
 
-    def __init__(self, maxsize: int = 0):
+    def __init__(self, maxsize: int = 0, idle_timeout: Optional[float] = None):
         self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self._cancel = threading.Event()
         self._finished = threading.Event()
         self._t0 = time.perf_counter()
+        self.idle_timeout = idle_timeout
+        self.cancel_reason = ""
+        self._last_consumed = self._t0      # creation counts as activity
+        self._waiters = 0                   # result()-style wait() blockers
+        self._consume_lock = threading.Lock()
         self.arrivals: List[float] = []     # seconds since stream creation
         self.pieces: List[str] = []         # emitted text deltas, in order
         self.chunks_emitted = 0
@@ -287,6 +308,14 @@ class TokenStream:
         producer must stop decoding (the chunk may or may not have been
         delivered; it is not counted as emitted after a cancel)."""
         if self._cancel.is_set():
+            return False
+        if (self.idle_timeout is not None and self._waiters == 0
+                and time.perf_counter() - self._last_consumed
+                > self.idle_timeout):
+            # abandoned-stream reaper: nobody is iterating or waiting —
+            # self-cancel so the producer releases its decode slot/pages
+            self.cancel_reason = "idle"
+            self._cancel.set()
             return False
         chunk = StreamChunk(text=text, token_ids=list(token_ids))
         while True:
@@ -327,21 +356,33 @@ class TokenStream:
     def __iter__(self) -> Iterator[StreamChunk]:
         while True:
             item = self._q.get()
+            self._last_consumed = time.perf_counter()
             if isinstance(item, _StreamError):
                 raise item.error
             yield item
             if item.final:
                 return
 
-    def cancel(self) -> None:
+    def cancel(self, reason: str = "consumer") -> None:
         """Consumer dropped: unblock the producer and make further emits
         return False."""
+        if not self._cancel.is_set():
+            self.cancel_reason = reason
         self._cancel.set()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         """Block until the producer closed the stream (submit_stream
-        tickets use this for ``result()``)."""
-        return self._finished.wait(timeout)
+        tickets use this for ``result()``).  A blocked waiter counts as a
+        live consumer: the idle reaper must not cancel decode out from
+        under a caller that wants the final response."""
+        with self._consume_lock:
+            self._waiters += 1
+        try:
+            return self._finished.wait(timeout)
+        finally:
+            with self._consume_lock:
+                self._waiters -= 1
+            self._last_consumed = time.perf_counter()
 
     # -- telemetry -----------------------------------------------------------
     @property
@@ -486,6 +527,12 @@ def _x_llmbridge(md: Metadata) -> Dict[str, Any]:
         out["ttft"] = md.ttft
     if md.inter_token_p50 is not None:
         out["inter_token_p50"] = md.inter_token_p50
+    if md.load_level:
+        out["load_level"] = md.load_level
+    if md.shed_reason:
+        out["shed_reason"] = md.shed_reason
+    if md.retry_after is not None:
+        out["retry_after"] = md.retry_after
     return out
 
 

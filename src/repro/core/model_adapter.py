@@ -41,6 +41,7 @@ the answering provider and retries/hedges can never double-charge.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -205,6 +206,10 @@ class ModelAdapter:
         for m in pool.list():
             if m.name not in self.fleet.adapters:
                 self.fleet.register(m)
+        # overload controller (core/overload.py), attached by the owning
+        # LLMBridge: engine-batch decodes feed it PagePool occupancy, and a
+        # request's wall deadline cancels its decode mid-batch
+        self.overload = None
 
     # -- answering ------------------------------------------------------------
     def answer(self, model: PoolModel, prompt: str, *,
@@ -239,7 +244,10 @@ class ModelAdapter:
         rng = rng if rng is not None else self.rng
         prompt_tokens = query.input_tokens if query is not None else _count_tokens(prompt)
         in_tokens = prompt_tokens + context_tokens
-        out_tokens = out_tokens or _default_out_tokens(prompt_tokens, query)
+        # explicit 0 is a valid charge (a wall-deadline cancel before the
+        # first decode step) — only None falls back to the planted default
+        if out_tokens is None:
+            out_tokens = _default_out_tokens(prompt_tokens, query)
 
         def run(m: PoolModel) -> Resolution:
             charged_out = out_tokens
@@ -413,15 +421,23 @@ class ModelAdapter:
                                 cause=e) from e
 
     # -- batched decode (the serving substrate) --------------------------------
-    def generate_batch(self, items) -> List[Optional[str]]:
+    def generate_batch(self, items,
+                       realized: Optional[List[Optional[int]]] = None
+                       ) -> List[Optional[str]]:
         """items: ``[(model, prompt, query)]`` with optional trailing
-        ``deadline`` and ``tier`` elements.  Engine-backed models decode ALL
-        their prompts in one continuous batch on the serving Scheduler;
-        SIM-mode entries return None (their text is templated in ``answer``).
-        A non-None deadline (seconds of latency budget) is handed to the
-        Scheduler, whose admission serves tight-budget requests first; a
-        non-zero ``tier`` (BudgetLedger depletion level) makes the request
-        yield decode slots to funded traffic under contention.
+        ``deadline``, ``tier`` and ``wall`` elements.  Engine-backed models
+        decode ALL their prompts in one continuous batch on the serving
+        Scheduler; SIM-mode entries return None (their text is templated in
+        ``answer``).  A non-None deadline (seconds of latency budget) is
+        handed to the Scheduler, whose admission serves tight-budget
+        requests first; a non-zero ``tier`` (BudgetLedger depletion level)
+        makes the request yield decode slots to funded traffic under
+        contention.  A non-None ``wall`` (absolute ``time.monotonic``
+        deadline, from the overload layer's stage budgeting) cancels the
+        row's decode mid-batch via ``Scheduler.cancel`` when blown — pages
+        release, the partial text is returned, and ``realized`` (a caller
+        list the same length as ``items``) records the engine tokens
+        actually decoded so settlement charges only those.
         """
         out: List[Optional[str]] = [None] * len(items)
         groups: Dict[str, Tuple[PoolModel, List[tuple]]] = {}
@@ -429,18 +445,20 @@ class ModelAdapter:
             model, prompt, query = item[0], item[1], item[2]
             deadline = item[3] if len(item) > 3 else None
             tier = item[4] if len(item) > 4 else 0
+            wall = item[5] if len(item) > 5 else None
             if model is None or model.engine is None or model.tokenizer is None:
                 continue
             prompt_tokens = (query.input_tokens if query is not None
                              else _count_tokens(prompt))
             out_tokens = _default_out_tokens(prompt_tokens, query)
             groups.setdefault(model.name, (model, []))[1].append(
-                (i, prompt, out_tokens, deadline, tier))
+                (i, prompt, out_tokens, deadline, tier, wall))
         for model, rows in groups.values():
             try:
-                texts = self._real_generate_batch(
+                texts, cut = self._real_generate_batch(
                     model, [r[1] for r in rows], [r[2] for r in rows],
-                    deadlines=[r[3] for r in rows], tiers=[r[4] for r in rows])
+                    deadlines=[r[3] for r in rows], tiers=[r[4] for r in rows],
+                    walls=[r[5] for r in rows])
             except Exception:
                 # one model's raising backend must not kill the whole batch:
                 # record the provider failure (feeds health + breaker) and
@@ -448,25 +466,31 @@ class ModelAdapter:
                 # per-request through the fleet's exception boundary
                 self.fleet.observe(model.name, False, 0.0, kind="exception")
                 continue
-            for row, text in zip(rows, texts):
+            for row, text, n in zip(rows, texts, cut):
                 out[row[0]] = text
+                if realized is not None and n is not None:
+                    realized[row[0]] = n
         return out
 
     def _real_generate_batch(self, model: PoolModel, prompts: List[str],
                              out_tokens: List[int],
                              deadlines: Optional[List[Optional[float]]] = None,
-                             tiers: Optional[List[int]] = None
-                             ) -> List[str]:
+                             tiers: Optional[List[int]] = None,
+                             walls: Optional[List[Optional[float]]] = None
+                             ) -> Tuple[List[str], List[Optional[int]]]:
         """Continuous-batch decode: every prompt gets a Scheduler slot (one
         synthetic user per request so admission is concurrent, not per-user
         FIFO-serialized) and the whole batch shares the decode steps.  A
         request with a latency budget is admitted earliest-deadline-first and
         has its decode length trimmed to what the budget affords; a depleted
-        budget tier weighs against the request in the slot-refill order."""
+        budget tier weighs against the request in the slot-refill order.
+        Returns ``(texts, realized)``: realized[i] is the decoded token
+        count when row i's wall deadline truncated it, else None."""
         import jax.numpy as jnp
         from repro.serving.scheduler import Request, Scheduler
         deadlines = deadlines or [None] * len(prompts)
         tiers = tiers or [0] * len(prompts)
+        walls = walls or [None] * len(prompts)
         n_slots = min(len(prompts), 8)
         if model.draft_engine is not None:
             from repro.serving.engine import DraftEngine
@@ -487,11 +511,50 @@ class ModelAdapter:
                                  prompt=jnp.asarray(ids, jnp.int32),
                                  max_new=min(ot, self.max_engine_tokens),
                                  deadline=dl, tier=tier))
-        done = sched.run_to_completion()
+        cancelled: set = set()
+        if any(w is not None for w in walls):
+            # wall-deadline watchdog loop: blown rows cancel mid-batch
+            # (slot torn down, pages released, partial generated retained)
+            # instead of decoding tokens their caller can no longer use
+            for _ in range(10_000):
+                if sched.pending() == 0:
+                    break
+                now = time.monotonic()
+                for i, w in enumerate(walls):
+                    if w is not None and i not in cancelled and now >= w:
+                        sched.cancel(i)
+                        cancelled.add(i)
+                if sched.pending() == 0:
+                    break
+                sched.step()
+                self._observe_occupancy(sched)
+            done = sched.finished
+        else:
+            done = sched.run_to_completion()
+            self._observe_occupancy(sched)
         if model.draft_engine is not None:
             self._note_spec(model.name, sched.spec_summary())
         texts = {r.rid: model.tokenizer.decode(r.generated) for r in done}
-        return [texts[i] for i in range(len(prompts))]
+        # a rid missing from finished was cancelled while still queued:
+        # nothing decoded, nothing to charge
+        out_texts = [texts.get(i, "") for i in range(len(prompts))]
+        lens = {r.rid: len(r.generated) for r in done}
+        realized = [lens.get(i, 0) if i in cancelled else None
+                    for i in range(len(prompts))]
+        return out_texts, realized
+
+    def _observe_occupancy(self, sched) -> None:
+        """Feed the overload monitor the engine's memory/slot pressure:
+        PagePool occupancy when paged, live-slot fraction otherwise."""
+        ov = self.overload
+        if ov is None or not ov.enabled:
+            return
+        pool = getattr(sched, "pool", None)
+        if pool is not None:
+            ov.observe("pages", pool.used() / max(1, pool.n_pages))
+        else:
+            live = sum(1 for s in sched.slots if s is not None)
+            ov.observe("pages", live / max(1, len(sched.slots)))
 
     def _note_spec(self, name: str, summary: Dict[str, Any]) -> None:
         """Fold one batch's spec_summary into the per-model running totals."""

@@ -1,0 +1,373 @@
+"""Overload control: load monitoring, brownout levels, admission shedding.
+
+The proxy's deployments (paper §4: WhatsApp Q&A, classroom bursts) are
+skewed, spiky workloads — exactly where a cost-conscious middlebox must
+*degrade gracefully* rather than collapse.  PR 7 made the provider side
+chaos-resilient (breakers, retries, hedging); this module protects the
+proxy itself:
+
+* :class:`LoadMonitor` — EWMA-smoothed load signals, each normalized
+  against a capacity target so ``1.0`` means "at capacity" on that axis:
+  admission queue depth, realized queue waits, decode-slot / ``PagePool``
+  occupancy, streaming TTFT, and the open-breaker fraction of the provider
+  fleet.  The combined *pressure* is the max over smoothed signals (one
+  saturated axis is enough to be overloaded).  The monitor also tracks the
+  dispatch throughput, which prices ``retry_after`` and the
+  deadline-infeasibility estimate used by admission shedding.
+* :class:`BrownoutController` — maps pressure to a :class:`LoadLevel`
+  (NORMAL → DEGRADE → CACHE_PREFERRED → SHED) through hysteresis bands:
+  each level has a higher *enter* threshold than its *exit* threshold, and
+  downward transitions additionally wait out ``min_dwell`` seconds — so a
+  noisy pressure signal cannot flap the level.  Upward transitions are
+  immediate (protection must not dwell).  Every transition is recorded for
+  ``stats()["overload"]``.
+* :class:`OverloadController` — the facade the proxy owns.  ``enabled``
+  defaults to ``False`` so programmatic embedders keep the historical
+  accept-everything behaviour bit-for-bit; the HTTP front door, the storm
+  benchmark and the overload tests switch it on (``LLMBridge.
+  enable_overload``).  The load level drives plan degradation through the
+  *same* monotone ladder the ``BudgetLedger`` uses (``PolicyCompiler.
+  compile_intent``): DEGRADE bumps the candidate ladder one rung (cheaper
+  route / tighter context), CACHE_PREFERRED compiles cache-only plans,
+  SHED declines — and admission refuses new work outright with a
+  structured :class:`OverloadError` carrying a computed ``retry_after``.
+"""
+from __future__ import annotations
+
+import collections
+import enum
+import math
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+
+class LoadLevel(enum.IntEnum):
+    """Ordered brownout level.  Comparable as plain ints; each level maps
+    onto one rung of the ``PolicyCompiler``'s monotone degradation ladder
+    (DEGRADE = bump the candidate list, CACHE_PREFERRED = cache-only
+    plans, SHED = decline / refuse admission)."""
+    NORMAL = 0
+    DEGRADE = 1
+    CACHE_PREFERRED = 2
+    SHED = 3
+
+    @property
+    def label(self) -> str:
+        return self.name.lower()
+
+
+class OverloadError(RuntimeError):
+    """Structured admission refusal: the proxy is shedding this request.
+
+    ``reason`` is a stable machine-readable tag (``load_shed``,
+    ``queue_full``, ``user_queue_full``, ``deadline_infeasible``,
+    ``deadline_expired``, ``stage_deadline:<stage>``); ``retry_after`` is
+    the controller's drain estimate in seconds (the HTTP surface maps it
+    onto a ``Retry-After`` header); ``level`` is the load level at shed
+    time.  A shed request's ledger hold is released before this raises —
+    shed work never charges."""
+
+    def __init__(self, reason: str, retry_after: float = 1.0,
+                 level: LoadLevel = LoadLevel.SHED):
+        super().__init__(
+            f"overloaded ({reason}): retry after {retry_after:.1f}s")
+        self.reason = reason
+        self.retry_after = retry_after
+        self.level = level
+
+
+class LoadMonitor:
+    """EWMA-smoothed, capacity-normalized load signals (module docstring)."""
+
+    #: per-signal capacity targets: raw value at which the signal alone
+    #: means "at capacity" (pressure contribution 1.0)
+    DEFAULT_TARGETS = {
+        "queue_depth": 64.0,     # admission backlog (requests)
+        "queue_wait": 2.0,       # realized queue wait (seconds)
+        "pages": 0.90,           # PagePool / decode-slot peak occupancy
+        "ttft": 2.0,             # streaming time-to-first-token (seconds)
+        "breakers": 0.5,         # open-circuit fraction of the fleet
+    }
+
+    def __init__(self, alpha: float = 0.3,
+                 targets: Optional[Dict[str, float]] = None,
+                 stale_tau: float = 10.0):
+        assert 0.0 < alpha <= 1.0
+        self.alpha = alpha
+        self.targets = dict(self.DEFAULT_TARGETS)
+        if targets:
+            self.targets.update(targets)
+        #: e-folding time (s) for signals that STOP arriving.  Load signals
+        #: here are event-driven (waits observed at dispatch, TTFT at
+        #: stream settle): once the controller sheds everything, the very
+        #: events that would report recovery no longer happen.  Without
+        #: decay the last high EWMA freezes above the exit threshold and
+        #: SHED becomes absorbing.  A signal unobserved for ``stale_tau``
+        #: seconds has decayed to ~37% of its last smoothed value.
+        self.stale_tau = stale_tau
+        self._ewma: Dict[str, float] = {}
+        self._raw: Dict[str, float] = {}
+        self._t: Dict[str, float] = {}    # last observe() time per signal
+        self._lock = threading.Lock()
+        # dispatch-throughput tracking (requests/second): prices the
+        # retry_after + deadline-infeasibility drain estimates
+        self._last_dispatch_t: Optional[float] = None
+        self._rate: Optional[float] = None
+
+    def set_target(self, signal: str, target: float) -> None:
+        self.targets[signal] = float(target)
+
+    def _decayed(self, signal: str, now: Optional[float]) -> Optional[float]:
+        """Stored EWMA decayed for the time since its last sample (lock
+        must be held).  Timestamp-less samples never decay."""
+        v = self._ewma.get(signal)
+        if v is None:
+            return None
+        t = self._t.get(signal)
+        if now is None or t is None or now <= t or self.stale_tau <= 0:
+            return v
+        return v * math.exp(-(now - t) / self.stale_tau)
+
+    def observe(self, signal: str, value: float,
+                now: Optional[float] = None) -> None:
+        """Fold one raw sample into the signal's EWMA.  With ``now`` (the
+        controller clock), the previous smoothed value first decays for
+        the silent gap since its last sample, so one fresh quiet reading
+        after a long shed window does not resurrect stale pressure."""
+        v = float(value)
+        with self._lock:
+            self._raw[signal] = v
+            prev = self._decayed(signal, now)
+            self._ewma[signal] = (v if prev is None
+                                  else prev + self.alpha * (v - prev))
+            if now is not None:
+                self._t[signal] = now
+
+    def note_dispatch(self, n: int, now: float) -> None:
+        """One formed batch of ``n`` requests dispatched at ``now`` (the
+        controller clock).  Successive calls estimate service throughput;
+        under backlog the inter-dispatch gap is pure service time, so the
+        EWMA converges on the pod's capacity."""
+        with self._lock:
+            if self._last_dispatch_t is not None:
+                dt = now - self._last_dispatch_t
+                if dt > 0:
+                    rate = n / dt
+                    self._rate = (rate if self._rate is None
+                                  else self._rate
+                                  + self.alpha * (rate - self._rate))
+            self._last_dispatch_t = now
+
+    def service_rate(self) -> Optional[float]:
+        return self._rate
+
+    def drain_estimate(self, depth: int) -> float:
+        """Seconds to drain ``depth`` queued requests at the observed
+        service rate (0 when no rate has been observed yet — admission
+        must not shed on a cold estimator)."""
+        if not self._rate or self._rate <= 0 or depth <= 0:
+            return 0.0
+        return depth / self._rate
+
+    def level_of(self, signal: str, now: Optional[float] = None) -> float:
+        """Smoothed value of ``signal`` normalized by its target (decayed
+        for staleness when ``now`` is given)."""
+        with self._lock:
+            v = self._decayed(signal, now)
+        t = self.targets.get(signal, 1.0)
+        if v is None or t <= 0:
+            return 0.0
+        return v / t
+
+    def pressure(self, now: Optional[float] = None) -> float:
+        """Combined load pressure: max over normalized signals — one
+        saturated axis is enough to be overloaded."""
+        with self._lock:
+            signals = list(self._ewma)
+        return max((self.level_of(s, now) for s in signals), default=0.0)
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            ewma = dict(self._ewma)
+            raw = dict(self._raw)
+        return {
+            "pressure": self.pressure(),
+            "signals": {s: {"ewma": ewma[s], "last": raw.get(s, ewma[s]),
+                            "target": self.targets.get(s, 1.0),
+                            "normalized": (ewma[s] / self.targets[s]
+                                           if self.targets.get(s) else 0.0)}
+                        for s in sorted(ewma)},
+            "service_rate": self._rate,
+        }
+
+
+class BrownoutController:
+    """Hysteresis-banded pressure → :class:`LoadLevel` mapping.
+
+    ``enter[i]`` is the pressure at which level ``i+1`` engages;
+    ``exit[i]`` (strictly below ``enter[i]``) is where it disengages.
+    Escalation is immediate and may jump multiple levels (protection);
+    de-escalation steps down one level at a time and only after
+    ``min_dwell`` seconds at the current level, so noise around a
+    threshold cannot flap the level."""
+
+    #: bounded transition history for stats()["overload"]
+    HISTORY = 256
+
+    def __init__(self, enter=(0.5, 0.8, 1.0), exit=(0.35, 0.6, 0.8),
+                 min_dwell: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        assert len(enter) == 3 and len(exit) == 3
+        assert all(x < e for x, e in zip(exit, enter)), \
+            "exit thresholds must sit below enter thresholds (hysteresis)"
+        self.enter = tuple(enter)
+        self.exit = tuple(exit)
+        self.min_dwell = min_dwell
+        self.clock = clock
+        self.level = LoadLevel.NORMAL
+        self._since = clock()
+        self.transitions: collections.deque = collections.deque(
+            maxlen=self.HISTORY)
+        self._n_transitions = 0
+
+    def update(self, pressure: float) -> LoadLevel:
+        now = self.clock()
+        # escalate: highest level whose enter threshold the pressure meets
+        target = LoadLevel.NORMAL
+        for i, thresh in enumerate(self.enter):
+            if pressure >= thresh:
+                target = LoadLevel(i + 1)
+        if target > self.level:
+            self._transition(target, pressure, now)
+        elif (self.level > LoadLevel.NORMAL
+              and pressure < self.exit[int(self.level) - 1]
+              and now - self._since >= self.min_dwell):
+            self._transition(LoadLevel(int(self.level) - 1), pressure, now)
+        return self.level
+
+    def _transition(self, to: LoadLevel, pressure: float, now: float) -> None:
+        self.transitions.append({
+            "t": now, "from": self.level.label, "to": to.label,
+            "pressure": pressure})
+        self._n_transitions += 1
+        self.level = to
+        self._since = now
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "level": self.level.label,
+            "since": self._since,
+            "transitions": list(self.transitions),
+            "n_transitions": self._n_transitions,
+            "enter": list(self.enter),
+            "exit": list(self.exit),
+            "min_dwell": self.min_dwell,
+        }
+
+
+class OverloadController:
+    """The proxy-owned overload facade: monitor + brownout + shed pricing.
+
+    ``enabled=False`` (the default attached to every ``LLMBridge``) makes
+    every method a cheap no-op — the historical accept-everything
+    behaviour is preserved bit-for-bit.  ``LLMBridge.enable_overload``
+    installs an enabled controller wired with fleet/serving taps."""
+
+    def __init__(self, enabled: bool = False,
+                 monitor: Optional[LoadMonitor] = None,
+                 brownout: Optional[BrownoutController] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 retry_floor: float = 0.5, retry_cap: float = 30.0):
+        self.enabled = enabled
+        self.clock = clock
+        self.monitor = monitor if monitor is not None else LoadMonitor()
+        self.brownout = (brownout if brownout is not None
+                         else BrownoutController(clock=clock))
+        self.retry_floor = retry_floor
+        self.retry_cap = retry_cap
+        self._taps: Dict[str, Callable[[], Optional[float]]] = {}
+        self._shed_counts: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._last_depth = 0
+
+    # -- signal ingestion ----------------------------------------------------
+    def add_tap(self, signal: str, fn: Callable[[], Optional[float]]) -> None:
+        """Register a pollable signal source, sampled on every ``tick``."""
+        self._taps[signal] = fn
+
+    def observe(self, signal: str, value: float) -> LoadLevel:
+        """Push one sample and re-evaluate the level (push-style signals:
+        queue depth at enqueue, realized waits at dispatch, TTFT at stream
+        settle, occupancy after an engine batch)."""
+        if not self.enabled:
+            return self.brownout.level
+        if signal == "queue_depth":
+            self._last_depth = int(value)
+        self.monitor.observe(signal, value, now=self.clock())
+        return self.tick()
+
+    def note_dispatch(self, n: int) -> None:
+        if self.enabled:
+            self.monitor.note_dispatch(n, self.clock())
+
+    def tick(self) -> LoadLevel:
+        """Poll taps and update the brownout level from current pressure."""
+        if not self.enabled:
+            return self.brownout.level
+        now = self.clock()
+        for signal, fn in self._taps.items():
+            try:
+                v = fn()
+            except Exception:       # a broken tap must not take down admission
+                continue
+            if v is not None:
+                self.monitor.observe(signal, float(v), now=now)
+        return self.brownout.update(self.monitor.pressure(now))
+
+    # -- level / shedding ----------------------------------------------------
+    @property
+    def level(self) -> LoadLevel:
+        return self.brownout.level if self.enabled else LoadLevel.NORMAL
+
+    def retry_after(self) -> float:
+        """Suggested client backoff: the drain estimate of the current
+        backlog at the observed service rate, clipped to
+        ``[retry_floor, retry_cap]``."""
+        est = self.monitor.drain_estimate(self._last_depth)
+        return float(min(self.retry_cap, max(self.retry_floor, est)))
+
+    def shed(self, reason: str) -> OverloadError:
+        """Build (and count) a structured shed error.  The caller raises
+        it — after releasing any ledger hold the request placed."""
+        with self._lock:
+            self._shed_counts[reason] = self._shed_counts.get(reason, 0) + 1
+        return OverloadError(reason, retry_after=self.retry_after(),
+                             level=self.level)
+
+    def admit(self, user: Optional[str] = None) -> None:
+        """Front-door gate: raise when the proxy is at SHED.  Queue-depth
+        caps and deadline-infeasibility live in ``AdmissionController``
+        (they need the queues); this is the level-only check the HTTP
+        surface applies before any work — including before SSE headers,
+        so streaming requests shed before first token."""
+        if self.enabled and self.tick() >= LoadLevel.SHED:
+            raise self.shed("load_shed")
+
+    # -- telemetry -----------------------------------------------------------
+    @property
+    def shed_counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._shed_counts)
+
+    def snapshot(self) -> Dict[str, Any]:
+        out = {
+            "enabled": self.enabled,
+            "level": self.level.label,
+            "retry_after": self.retry_after(),
+            "shed": self.shed_counts,
+            "shed_total": sum(self.shed_counts.values()),
+        }
+        out.update(self.monitor.snapshot())
+        out["brownout"] = self.brownout.snapshot()
+        return out

@@ -67,6 +67,14 @@ class RequestState:
     # request_stream/submit_stream: ModelStage threads it to the adapter so
     # deltas are emitted as they decode; None = buffered delivery
     stream: Optional[Any] = None
+    # overload layer (core/overload.py): absolute wall deadline in the
+    # time.monotonic domain, stamped by LLMBridge._state_for when the
+    # controller is enabled and Constraints.max_latency is stated.  The
+    # pipeline's stage watchdogs and the engine decode loop enforce it.
+    deadline_at: Optional[float] = None
+    # engine tokens actually decoded when a wall deadline truncated the
+    # batch decode: settlement charges these, not the planted count
+    realized_out: Optional[int] = None
 
     @property
     def resolved(self) -> bool:
@@ -285,7 +293,11 @@ class ModelStage(Stage):
             resolution_override=state.resolution_override,
             reserved=(state.policy.reserved if state.policy is not None
                       else 0.0),
-            stream=stream)
+            stream=stream, out_tokens_override=state.realized_out)
+        if state.realized_out is not None:
+            # wall deadline truncated the engine decode: partial text was
+            # served and only the decoded tokens were charged — disclose it
+            state.response.metadata.shed_reason = "decode_deadline"
 
     def run_batch(self, proxy, states: Sequence[RequestState]) -> None:
         todo = [s for s in states if not s.resolved]
@@ -297,12 +309,16 @@ class ModelStage(Stage):
         # live stream never blocks the batch's buffered members (and vice
         # versa: the buffered decode completes in one scheduler run)
         buffered = [s for s in todo if s.stream is None]
+        realized: List[Optional[int]] = [None] * len(buffered)
         texts = proxy.adapter.generate_batch(
             [(s.model, s.req.prompt, s.req.query, _latency_budget(s.req),
-              _ledger_tier(proxy, s.req)) for s in buffered])
-        for s, t in zip(buffered, texts):
+              _ledger_tier(proxy, s.req), _wall_deadline(proxy, s))
+             for s in buffered], realized=realized)
+        for s, t, r in zip(buffered, texts, realized):
             if t is not None:
                 s.text_override = t
+            if r is not None:
+                s.realized_out = r
         for s in todo:
             self.run(proxy, s)
 
@@ -506,6 +522,41 @@ def _ledger_tier(proxy, req: ProxyRequest) -> int:
     return proxy.ledger.tier(req.user)
 
 
+def _wall_deadline(proxy, state: RequestState) -> Optional[float]:
+    """The absolute decode wall deadline the engine step loop enforces —
+    only meaningful while the overload controller is enabled."""
+    ov = getattr(proxy, "overload", None)
+    if ov is None or not ov.enabled:
+        return None
+    return state.deadline_at
+
+
+def _deadline_blown(proxy, state: RequestState) -> bool:
+    ov = getattr(proxy, "overload", None)
+    if (ov is None or not ov.enabled or state.deadline_at is None
+            or state.resolved):
+        return False
+    return time.monotonic() >= state.deadline_at
+
+
+def _resolve_timeout(proxy, state: RequestState, stage_name: str) -> None:
+    """Stage-deadline watchdog fired: resolve ``state`` with a disclosed
+    timeout response.  Realized spend so far (context gates, cache-miss
+    consults) still settles through the normal epilogue; the compile-time
+    hold releases there too — a timed-out request never charges for work
+    that did not run."""
+    ov = proxy.overload
+    err = ov.shed(f"stage_deadline:{stage_name}")
+    md = Metadata(model_used="timeout", context_strategy="timeout",
+                  usage=state.gate_usage, load_level=ov.level.label,
+                  shed_reason=err.reason, retry_after=err.retry_after)
+    state.notes["timeout"] = stage_name
+    state.response = ProxyResponse(
+        text=f"[deadline-exceeded] latency budget spent before stage "
+             f"'{stage_name}'; retry after {err.retry_after:.1f}s.",
+        metadata=md, request=state.req)
+
+
 class PromptPipeline:
     """An ordered stage composition with sequential and batch execution.
 
@@ -524,6 +575,12 @@ class PromptPipeline:
         for stage in self.stages:
             if state.resolved and stage.skip_if_resolved:
                 continue
+            # stage-deadline watchdog (core/overload.py): a blown wall
+            # deadline resolves the request as a timeout instead of
+            # starting more work it can no longer use
+            if _deadline_blown(proxy, state):
+                _resolve_timeout(proxy, state, stage.name)
+                break
             cost_before = state.cost()
             t0 = time.perf_counter()
             stage.run(proxy, state)
@@ -541,8 +598,15 @@ class PromptPipeline:
         paths.  The stage's batch wall-time is attributed evenly across its
         live requests in their ``StageRecord``s."""
         for stage in self.stages:
+            for s in states:
+                if _deadline_blown(proxy, s):
+                    _resolve_timeout(proxy, s, stage.name)
+            # timed-out states are out of the batch for good — even for
+            # post-resolve stages like PrefetchStage (skip_if_resolved
+            # False), which must not spend on a request that timed out
             live = [s for s in states
-                    if not (s.resolved and stage.skip_if_resolved)]
+                    if "timeout" not in s.notes
+                    and not (s.resolved and stage.skip_if_resolved)]
             if not live:
                 continue
             costs_before = [s.cost() for s in live]

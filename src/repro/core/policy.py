@@ -283,6 +283,19 @@ class PolicyCompiler:
                               pipeline=self.compile_spec(spec),
                               ladder=[self.compile_spec(esc)])
 
+    def compile_brownout(self, req: ProxyRequest, proxy) -> CompiledPolicy:
+        """Preset requests under a CACHE_PREFERRED/SHED brownout: presets
+        have no candidate ladder to tighten, so the floor applies directly —
+        answer from cache if the hit is free-tier, decline otherwise.  No
+        ledger hold is placed (cache-only consults charge at settle)."""
+        from repro.core.overload import LoadLevel
+        if proxy.overload.level >= LoadLevel.SHED:
+            spec = PlanSpec("brownout:declined", decline=True)
+        else:
+            spec = PlanSpec("brownout:cache_only", cache="on", decline=True)
+        return CompiledPolicy(name=f"brownout:{spec.label}",
+                              pipeline=self.compile_spec(spec))
+
     # -- intents ---------------------------------------------------------------
     def compile_intent(self, req: ProxyRequest, proxy,
                        escalate: bool = False) -> CompiledPolicy:
@@ -295,20 +308,31 @@ class PolicyCompiler:
         under the SAME budget fit, so iteration can never breach
         ``max_cost`` or overdraw the ledger either.
         """
+        from repro.core.overload import LoadLevel
         cons = req.constraints if req.constraints is not None else Constraints()
         pref = req.preference if req.preference is not None else Preference.BALANCED
         ledger: BudgetLedger = proxy.ledger
         user = req.user
+        ov = getattr(proxy, "overload", None)
+        brown = (ov.level if ov is not None and ov.enabled
+                 else LoadLevel.NORMAL)
 
         if escalate:
             candidates = self._escalation_plans(pref, cons, req, proxy)
-            start = 0      # an explicit pay-more request skips the ratchet
+            base_start = 0  # an explicit pay-more request skips the ratchet
         else:
             candidates = self._candidate_plans(pref, cons, req, proxy)
             # degradation saturates at the list's cheapest plan: a short
             # list (COST_FIRST has one candidate) is already maximally
             # degraded, and decline is reserved for true unaffordability
-            start = min(ledger.tier(user), len(candidates) - 1)
+            base_start = min(ledger.tier(user), len(candidates) - 1)
+        # brownout rides the SAME monotone ladder budget depletion walks:
+        # DEGRADE advances the start one rung (cheaper route / tighter
+        # context); CACHE_PREFERRED/SHED floor to cache-only/decline below.
+        # base_start stays ledger-only — transient load must not feed the
+        # sticky per-user degradation ratchet.
+        bump = 1 if brown == LoadLevel.DEGRADE else 0
+        start = min(base_start + bump, len(candidates) - 1)
         ledger_budget = ledger.remaining(user)
         budget = min(ledger_budget,
                      cons.max_cost if cons.max_cost is not None else math.inf)
@@ -323,27 +347,41 @@ class PolicyCompiler:
             if cache_bound > budget:
                 use_cache, cache_bound = False, 0.0
 
-        def first_affordable(limit: float) -> Tuple[Optional[Tuple], int]:
-            for j, (spec, est_cost, est_lat) in enumerate(candidates[start:]):
+        def first_affordable(limit: float,
+                             s: int = start) -> Tuple[Optional[Tuple], int]:
+            for j, (spec, est_cost, est_lat) in enumerate(candidates[s:]):
                 if est_cost > limit - cache_bound:
                     continue
                 if cons.max_latency is not None and est_lat > cons.max_latency:
                     continue
-                return (spec, est_cost), start + j
+                return (spec, est_cost), s + j
             return None, len(candidates)
 
-        chosen, level = first_affordable(budget)
-        if chosen is None:
-            if use_cache:
-                chosen = (PlanSpec("cache_only", cache="on", decline=True), 0.0)
-            elif (escalate and pref == Preference.LATENCY_FIRST
-                  and cons.allow_prefetch):
-                # a prefetched answer is already paid for — serve it free
-                # before declining
-                chosen = (PlanSpec("regen:prefetched_only",
-                                   serve_prefetched=True, decline=True), 0.0)
-            else:
-                chosen = (PlanSpec("declined", decline=True), 0.0)
+        if brown >= LoadLevel.SHED:
+            # brownout floor: no model spend, no cache consult spend
+            use_cache, cache_bound = False, 0.0
+            chosen, level = ((PlanSpec("brownout:declined", decline=True),
+                              0.0), len(candidates))
+        elif brown >= LoadLevel.CACHE_PREFERRED:
+            spec = (PlanSpec("brownout:cache_only", cache="on", decline=True)
+                    if use_cache
+                    else PlanSpec("brownout:declined", decline=True))
+            chosen, level = (spec, 0.0), len(candidates)
+        else:
+            chosen, level = first_affordable(budget)
+            if chosen is None:
+                if use_cache:
+                    chosen = (PlanSpec("cache_only", cache="on",
+                                       decline=True), 0.0)
+                elif (escalate and pref == Preference.LATENCY_FIRST
+                      and cons.allow_prefetch):
+                    # a prefetched answer is already paid for — serve it
+                    # free before declining
+                    chosen = (PlanSpec("regen:prefetched_only",
+                                       serve_prefetched=True,
+                                       decline=True), 0.0)
+                else:
+                    chosen = (PlanSpec("declined", decline=True), 0.0)
         spec, est_cost = chosen
         if use_cache and spec.cache == "off":
             spec = dataclasses.replace(spec, cache="on",
@@ -354,8 +392,9 @@ class PolicyCompiler:
         if not escalate:
             # the ratchet tracks what the *budget* can afford — a request
             # whose own max_cost/max_latency was the binding constraint must
-            # not degrade the user's future unconstrained requests
-            _, ledger_level = first_affordable(ledger_budget)
+            # not degrade the user's future unconstrained requests (and the
+            # brownout bump, being transient, is excluded via base_start)
+            _, ledger_level = first_affordable(ledger_budget, base_start)
             ledger.note_degradation(user, ledger_level)
 
         return CompiledPolicy(

@@ -44,6 +44,7 @@ import dataclasses
 import math
 import queue
 import threading
+import time
 import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -56,6 +57,7 @@ from repro.core.context_manager import (ContextManager, LastK, SmartContext,
                                         apply_filters)
 from repro.core.model_adapter import ModelAdapter, ModelPool, PoolModel
 from repro.core.judge import Judge
+from repro.core.overload import LoadLevel, OverloadController
 from repro.core.pipeline import PromptPipeline, RequestState
 from repro.core.policy import BudgetLedger, CompiledPolicy, PolicyCompiler
 from repro.core.workload import Workload
@@ -246,6 +248,11 @@ class LLMBridge:
         self._ledger_lock = threading.Lock()
         self._stats = ProxyStats()
         self._admission = None          # lazy AdmissionController (submit())
+        # overload control ships disabled: library callers keep unbounded
+        # acceptance unless they (or the HTTP front door) opt in via
+        # enable_overload() — see core/overload.py
+        self.overload = OverloadController(enabled=False)
+        self.adapter.overload = self.overload
 
     # -- the SmartContext decider (planted channel or real small model) -------
     def _context_decider(self):
@@ -264,11 +271,29 @@ class LLMBridge:
     def _policy_for(self, req: ProxyRequest) -> CompiledPolicy:
         if req.is_intent:
             return self.compiler.compile_intent(req, self)
+        # presets have no candidate ladder to degrade along, so brownout
+        # applies its floor directly: cache-only, then decline
+        if (self.overload.enabled
+                and self.overload.level >= LoadLevel.CACHE_PREFERRED):
+            return self.compiler.compile_brownout(req, self)
         pol = self._preset_policies[req.service_type]
         pipe = self.pipelines.get(req.service_type, pol.pipeline)
         if pipe is not pol.pipeline:      # user override via the dict view
             pol = dataclasses.replace(pol, pipeline=pipe)
         return pol
+
+    def _state_for(self, req: ProxyRequest) -> RequestState:
+        """Compile ``req`` and stamp the overload-layer wall deadline: with
+        the controller enabled and ``max_latency`` stated, the pipeline's
+        stage watchdogs (and the decode step loop) enforce it absolutely
+        from arrival, not per-stage."""
+        state = RequestState(req=req, policy=self._policy_for(req))
+        if (self.overload.enabled and req.constraints is not None
+                and req.constraints.max_latency is not None):
+            base = (req.submitted_at if req.submitted_at is not None
+                    else time.monotonic())
+            state.deadline_at = base + req.constraints.max_latency
+        return state
 
     def _warn_legacy(self, req: ProxyRequest) -> None:
         """v1 deprecation: a non-intent request through a public entry point
@@ -286,10 +311,9 @@ class LLMBridge:
     # -- main entry ------------------------------------------------------------
     def request(self, req: ProxyRequest) -> ProxyResponse:
         self._warn_legacy(req)
-        policy = self._policy_for(req)
-        state = RequestState(req=req, policy=policy)
+        state = self._state_for(req)
         try:
-            policy.pipeline.run(self, state)
+            state.policy.pipeline.run(self, state)
         except BaseException:
             self._release_hold(state)   # a failed request must not leak it
             raise
@@ -312,14 +336,13 @@ class LLMBridge:
         backpressures the decode loop against a slow consumer.
         """
         self._warn_legacy(req)
-        policy = self._policy_for(req)
-        state = RequestState(req=req, policy=policy)
+        state = self._state_for(req)
         sink = TokenStream(maxsize=buffer)
         state.stream = sink
 
         def work() -> None:
             try:
-                policy.pipeline.run(self, state)
+                state.policy.pipeline.run(self, state)
                 resp = self._finalize(state, path="request_stream")
                 sink.close(response=resp)
             except BaseException as e:   # surface to the consumer, don't leak
@@ -350,7 +373,7 @@ class LLMBridge:
         states: List[RequestState] = []
         try:
             for r in reqs:
-                states.append(RequestState(req=r, policy=self._policy_for(r)))
+                states.append(self._state_for(r))
         except BaseException:
             # a failed compile must not leak earlier requests' holds
             for s in states:
@@ -399,6 +422,8 @@ class LLMBridge:
             resp.metadata.spec_acceptance = spec["acceptance_rate"]
             resp.metadata.spec_draft_time = spec["draft_time"]
             resp.metadata.spec_verify_time = spec["verify_time"]
+        if self.overload.enabled and not resp.metadata.load_level:
+            resp.metadata.load_level = self.overload.level.label
         if state.stream is not None:
             sink = state.stream
             # paths that never touched the incremental channel (cache hits,
@@ -410,10 +435,13 @@ class LLMBridge:
             resp.metadata.ttft = sink.ttft()
             resp.metadata.inter_token_p50 = sink.inter_token_p50()
             self._stats.record_stream(sink)
+            if self.overload.enabled and resp.metadata.ttft is not None:
+                self.overload.observe("ttft", resp.metadata.ttft)
         self._stats.record(path, state)
-        # declined responses are policy boilerplate, not conversation — they
-        # must not pollute future context windows
-        if req.update_context and resp.metadata.context_strategy != "declined":
+        # declined/timed-out responses are policy boilerplate, not
+        # conversation — they must not pollute future context windows
+        if req.update_context and resp.metadata.context_strategy not in (
+                "declined", "timeout"):
             toks = None
             if query_tokens and req.query is not None:
                 toks = req.query.input_tokens + req.query.output_tokens
@@ -460,6 +488,31 @@ class LLMBridge:
         if self._admission is not None and self._admission.pending():
             raise RuntimeError("admission controller has queued requests")
         self._admission = controller
+
+    # -- overload control (core/overload.py) -----------------------------------
+    def enable_overload(self, **kwargs) -> OverloadController:
+        """Switch on load-adaptive brownout + backpressure for this bridge.
+
+        Replaces the default disabled controller with an enabled one
+        (kwargs forward to ``OverloadController``) and registers the
+        open-breaker tap.  Admission queue depth/wait and streaming TTFT are
+        pushed by their owners; decode-engine occupancy is pushed by the
+        adapter.  Returns the controller for tuning/inspection."""
+        kwargs.setdefault("enabled", True)
+        ov = OverloadController(**kwargs)
+
+        def _breaker_fraction() -> float:
+            per = self.providers.snapshot().get("providers", {}) or {}
+            states = [p.get("state", "closed")
+                      for p in per.values() if isinstance(p, dict)]
+            if not states:
+                return 0.0
+            return sum(1 for s in states if s == "open") / len(states)
+
+        ov.add_tap("breakers", _breaker_fraction)
+        self.overload = ov
+        self.adapter.overload = ov
+        return ov
 
     def submit(self, req: ProxyRequest):
         """Enqueue ``req`` into its user's FIFO on the admission front-end
@@ -517,6 +570,9 @@ class LLMBridge:
             # the reliability layer: per-provider health/breaker state plus
             # fleet-wide retry/hedge accounting (wasted hedge cost included)
             "providers": self.providers.snapshot(),
+            # brownout/backpressure disclosure: current level, per-signal
+            # pressure, shed counts, recent level transitions
+            "overload": self.overload.snapshot(),
         }
         if self._admission is not None:
             out["admission"] = self._admission.stats()
@@ -576,13 +632,17 @@ class LLMBridge:
                  *, verification: bool = False,
                  text_override: Optional[str] = None,
                  resolution_override=None, reserved: float = 0.0,
-                 stream=None) -> ProxyResponse:
+                 stream=None,
+                 out_tokens_override: Optional[int] = None) -> ProxyResponse:
         from repro.core.model_adapter import Resolution
         from repro.core.providers import ProviderError
         ctx_tokens = ContextManager.token_count(msgs)
         has_ctx = self._has_context(req, msgs)
         out_override = req.params.get("max_tokens")
         out_tokens = int(out_override) if out_override else None
+        if out_tokens_override is not None:
+            # a wall-deadline-truncated decode charges what it generated
+            out_tokens = out_tokens_override
         try:
             if resolution_override is not None:
                 res = resolution_override

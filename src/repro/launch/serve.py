@@ -31,11 +31,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
+import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.core.api import (ChatCompletionChunk, ChatCompletionRequest,
                             ChatCompletionResponse)
+from repro.core.overload import OverloadError
 
 
 # -- OpenAI-compatible HTTP front door ----------------------------------------
@@ -56,17 +59,43 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
             pass
 
         # -- helpers ---------------------------------------------------------
-        def _json(self, code: int, payload) -> None:
+        def _request_id(self) -> str:
+            if getattr(self, "_rid_hdr", None) is None:
+                self._rid_hdr = f"req_{uuid.uuid4().hex[:16]}"
+            return self._rid_hdr
+
+        def _json(self, code: int, payload, headers=None) -> None:
             body = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            self.send_header("x-request-id", self._request_id())
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
 
-        def _error(self, code: int, message: str) -> None:
-            self._json(code, {"error": {"message": message,
-                                        "type": "invalid_request_error"}})
+        def _error(self, code: int, message: str,
+                   etype: str = "invalid_request_error",
+                   ecode: str = "bad_request",
+                   retry_after: float = None) -> None:
+            """OpenAI-style error envelope on every non-2xx path: the
+            ``error.code`` is a stable machine tag and the per-request id
+            header rides every response (2xx included via ``_json``)."""
+            headers = {}
+            if retry_after is not None:
+                headers["Retry-After"] = str(max(1, math.ceil(retry_after)))
+            self._json(code, {"error": {"message": message, "type": etype,
+                                        "code": ecode}}, headers=headers)
+
+        def _overloaded(self, e: OverloadError) -> None:
+            """429/503 + Retry-After from a structured shed: 503 when the
+            whole proxy is browning out (load_shed), 429 when this request
+            specifically was refused (queue caps, infeasible deadline)."""
+            code = 503 if e.reason == "load_shed" else 429
+            self._error(code, str(e),
+                        etype="overloaded_error",
+                        ecode=e.reason, retry_after=e.retry_after)
 
         # -- routes ----------------------------------------------------------
         def do_GET(self) -> None:
@@ -76,15 +105,23 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
                           for m in bridge.pool.list()]
                 self._json(200, {"object": "list", "data": models})
             else:
-                self._error(404, f"unknown path {self.path}")
+                self._error(404, f"unknown path {self.path}",
+                            ecode="not_found")
 
         def do_POST(self) -> None:
             if self.path.rstrip("/") != "/v1/chat/completions":
-                self._error(404, f"unknown path {self.path}")
+                self._error(404, f"unknown path {self.path}",
+                            ecode="not_found")
                 return
             try:
                 n = int(self.headers.get("Content-Length", 0))
-                wire = json.loads(self.rfile.read(n) or b"{}")
+                raw = self.rfile.read(n) or b"{}"
+                try:
+                    wire = json.loads(raw)
+                except json.JSONDecodeError as e:
+                    self._error(400, f"malformed JSON body: {e}",
+                                ecode="invalid_json")
+                    return
                 creq = ChatCompletionRequest.from_wire(wire)
                 if not creq.messages:
                     raise ValueError("messages must be non-empty")
@@ -94,19 +131,33 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
                 return
             rid = f"chatcmpl-{int(time.time() * 1000):x}"
             created = int(time.time())
-            if creq.stream:
-                self._stream(preq, rid=rid, created=created, model=creq.model)
-            else:
-                resp = bridge.request(preq)
-                out = ChatCompletionResponse.from_proxy(
-                    resp, rid=rid, created=created, model=creq.model)
-                self._json(200, out.to_wire())
+            try:
+                # the overload gate runs before ANY work — and before the
+                # SSE preamble, so a streaming request sheds with a clean
+                # 429/503 instead of a broken event stream
+                bridge.overload.admit(preq.user)
+                if creq.stream:
+                    self._stream(preq, rid=rid, created=created,
+                                 model=creq.model)
+                else:
+                    resp = bridge.request(preq)
+                    out = ChatCompletionResponse.from_proxy(
+                        resp, rid=rid, created=created, model=creq.model)
+                    self._json(200, out.to_wire())
+            except OverloadError as e:
+                self._overloaded(e)
+            except (BrokenPipeError, ConnectionResetError):
+                raise                      # client gone: nothing to answer
+            except Exception as e:
+                self._error(500, f"internal error: {type(e).__name__}: {e}",
+                            etype="server_error", ecode="internal_error")
 
         def _stream(self, preq, *, rid: str, created: int, model: str) -> None:
             self.send_response(200)
             self.send_header("Content-Type", "text/event-stream")
             self.send_header("Cache-Control", "no-cache")
             self.send_header("Connection", "close")
+            self.send_header("x-request-id", self._request_id())
             self.end_headers()
             gen = bridge.request_stream(preq)
             first = True
@@ -130,9 +181,14 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
 
 
 def serve_http(host: str, port: int) -> None:
-    """Build a SIM-pool bridge and serve the OpenAI surface until ^C."""
+    """Build a SIM-pool bridge and serve the OpenAI surface until ^C.
+
+    The front door runs with overload control ON: under sustained load the
+    bridge browns out (degrade -> cache-only -> shed) and this surface
+    answers 429/503 + ``Retry-After`` instead of queueing unboundedly."""
     from repro.core import build_bridge
     bridge = build_bridge()
+    bridge.enable_overload()
     server = make_server(bridge, host=host, port=port)
     bound = server.server_address
     print(f"LLMBridge OpenAI-compatible surface on http://{bound[0]}:{bound[1]}/v1")

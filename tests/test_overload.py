@@ -1,0 +1,486 @@
+"""Overload control: monitor/brownout units, admission backpressure, stage
+deadlines, brownout plan degradation, the abandoned-stream reaper, and the
+HTTP surface's 429/503 + Retry-After error envelope."""
+import http.client
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import (AdmissionController, BrownoutController, Constraints,
+                        LoadLevel, LoadMonitor, OverloadController,
+                        OverloadError, Preference, ProxyRequest, TokenStream,
+                        Workload, WorkloadConfig, build_bridge)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture()
+def workload():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=6,
+                                   seed=11))
+
+
+@pytest.fixture()
+def bridge(workload):
+    return build_bridge(workload=workload, seed=0)
+
+
+def _intent(workload, i=0, user="ov-u", max_latency=None, max_cost=None):
+    q = workload.queries[i % len(workload.queries)]
+    return ProxyRequest(prompt=q.text, user=user, conversation=user, query=q,
+                        update_context=False,
+                        constraints=Constraints(max_latency=max_latency,
+                                                max_cost=max_cost,
+                                                allow_cache=False,
+                                                allow_prefetch=False),
+                        preference=Preference.COST_FIRST)
+
+
+# -- LoadMonitor ---------------------------------------------------------------
+
+class TestLoadMonitor:
+    def test_ewma_and_pressure_normalization(self):
+        m = LoadMonitor(alpha=0.5, targets={"queue_depth": 10.0})
+        m.observe("queue_depth", 10.0)
+        assert m.level_of("queue_depth") == pytest.approx(1.0)
+        m.observe("queue_depth", 0.0)
+        assert m.level_of("queue_depth") == pytest.approx(0.5)
+        assert m.pressure() == pytest.approx(0.5)
+
+    def test_pressure_is_max_over_signals(self):
+        m = LoadMonitor(targets={"a": 1.0, "b": 1.0})
+        m.observe("a", 0.2)
+        m.observe("b", 0.9)
+        assert m.pressure() == pytest.approx(0.9)
+
+    def test_drain_estimate_cold_is_zero(self):
+        m = LoadMonitor()
+        assert m.drain_estimate(1000) == 0.0
+
+    def test_drain_estimate_tracks_dispatch_rate(self):
+        m = LoadMonitor()
+        m.note_dispatch(8, now=0.0)
+        m.note_dispatch(8, now=1.0)        # 8 req/s
+        assert m.service_rate() == pytest.approx(8.0)
+        assert m.drain_estimate(16) == pytest.approx(2.0)
+
+    def test_stale_signal_decays(self):
+        # the recovery-deadlock guard: queue_wait is observed at dispatch,
+        # so once everything is shed the last high EWMA would freeze above
+        # the exit threshold forever without staleness decay
+        m = LoadMonitor(targets={"queue_wait": 1.0}, stale_tau=10.0)
+        m.observe("queue_wait", 5.0, now=0.0)
+        assert m.pressure(now=0.0) == pytest.approx(5.0)
+        assert m.pressure(now=10.0) == pytest.approx(5.0 * 2.718281828 ** -1,
+                                                     rel=1e-6)
+        assert m.pressure(now=60.0) < 0.05
+        # a fresh sample resumes from the decayed value, not the stale one
+        m.observe("queue_wait", 0.0, now=60.0)
+        assert m.pressure(now=60.0) < 0.05
+
+    def test_untimestamped_observe_never_decays(self):
+        m = LoadMonitor(targets={"queue_depth": 1.0})
+        m.observe("queue_depth", 4.0)
+        assert m.pressure(now=1e9) == pytest.approx(4.0)
+
+
+# -- BrownoutController --------------------------------------------------------
+
+class TestBrownout:
+    def test_escalation_is_immediate_and_multilevel(self):
+        clk = FakeClock()
+        b = BrownoutController(clock=clk)
+        assert b.update(1.5) == LoadLevel.SHED          # 0 -> 3 in one step
+        assert b._n_transitions == 1
+
+    def test_deescalation_steps_down_after_dwell(self):
+        clk = FakeClock()
+        b = BrownoutController(clock=clk, min_dwell=1.0)
+        b.update(1.5)
+        assert b.update(0.0) == LoadLevel.SHED          # dwell not served
+        clk.t = 1.0
+        assert b.update(0.0) == LoadLevel.CACHE_PREFERRED   # one step only
+        clk.t = 2.0
+        assert b.update(0.0) == LoadLevel.DEGRADE
+        clk.t = 3.0
+        assert b.update(0.0) == LoadLevel.NORMAL
+        assert b._n_transitions == 4
+
+    def test_hysteresis_band_holds_level(self):
+        clk = FakeClock()
+        b = BrownoutController(clock=clk, enter=(0.5, 0.8, 1.0),
+                               exit=(0.35, 0.6, 0.8), min_dwell=0.0)
+        b.update(0.6)
+        assert b.level == LoadLevel.DEGRADE
+        # between exit (0.35) and enter (0.5): no flapping either way
+        clk.t = 10.0
+        assert b.update(0.4) == LoadLevel.DEGRADE
+        assert b._n_transitions == 1
+
+    def test_exit_must_sit_below_enter(self):
+        with pytest.raises(AssertionError):
+            BrownoutController(enter=(0.5, 0.8, 1.0), exit=(0.5, 0.6, 0.8))
+
+    def test_transitions_recorded(self):
+        clk = FakeClock()
+        b = BrownoutController(clock=clk)
+        b.update(0.6)
+        b.update(1.2)
+        labels = [(t["from"], t["to"]) for t in b.transitions]
+        assert labels == [("normal", "degrade"), ("degrade", "shed")]
+
+
+# -- OverloadController --------------------------------------------------------
+
+class TestController:
+    def test_disabled_is_inert(self):
+        ov = OverloadController(enabled=False)
+        ov.observe("queue_depth", 1e9)
+        assert ov.tick() == LoadLevel.NORMAL
+        assert ov.level == LoadLevel.NORMAL
+        ov.admit("anyone")                              # never raises
+
+    def test_enabled_sheds_at_pressure(self):
+        ov = OverloadController(enabled=True, clock=FakeClock())
+        ov.observe("queue_depth", 1000.0)
+        assert ov.level == LoadLevel.SHED
+        with pytest.raises(OverloadError) as ei:
+            ov.admit("u")
+        assert ei.value.reason == "load_shed"
+        assert ei.value.retry_after > 0
+        assert ov.shed_counts["load_shed"] == 1
+
+    def test_retry_after_floor_and_cap(self):
+        ov = OverloadController(enabled=True, clock=FakeClock())
+        assert ov.retry_after() == pytest.approx(0.5)   # cold estimator
+        ov.monitor.note_dispatch(1, now=0.0)
+        ov.monitor.note_dispatch(1, now=1.0)            # 1 req/s
+        ov.observe("queue_depth", 500.0)
+        assert ov.retry_after() == pytest.approx(30.0)  # clipped at cap
+
+    def test_broken_tap_does_not_break_tick(self):
+        ov = OverloadController(enabled=True, clock=FakeClock())
+        ov.add_tap("boom", lambda: 1 / 0)
+        assert ov.tick() == LoadLevel.NORMAL
+
+
+# -- brownout plan degradation -------------------------------------------------
+
+class TestBrownoutPlans:
+    def _level(self, bridge, raw):
+        """Pin the enabled controller's level by feeding queue depth."""
+        ov = bridge.overload
+        ov.monitor._ewma.clear()
+        ov.monitor._raw.clear()
+        ov.observe("queue_depth", raw)
+        return ov.level
+
+    def test_default_off_is_seed_behaviour(self, bridge, workload):
+        assert not bridge.overload.enabled
+        r = bridge.request(_intent(workload))
+        assert r.metadata.model_used not in ("none", "timeout")
+        assert r.metadata.load_level == ""
+
+    def test_degrade_bumps_the_ladder(self, bridge, workload):
+        baseline = bridge.request(_intent(workload, user="deg-a")).metadata
+        bridge.enable_overload(clock=FakeClock())
+        # DEGRADE band: 0.5 <= pressure < 0.8 of the default 64 target
+        assert self._level(bridge, 40.0) == LoadLevel.DEGRADE
+        degraded = bridge.request(_intent(workload, user="deg-b")).metadata
+        assert degraded.load_level == "degrade"
+        assert degraded.model_used not in ("none", "timeout")
+        pool = {m.name: m for m in bridge.pool.list()}
+        assert (pool[degraded.model_used].price_in
+                <= pool[baseline.model_used].price_in)
+
+    def test_cache_preferred_compiles_cache_only(self, bridge, workload):
+        bridge.enable_overload(clock=FakeClock())
+        assert self._level(bridge, 55.0) == LoadLevel.CACHE_PREFERRED
+        r = bridge.request(_intent(workload, user="cp-u"))
+        assert "brownout" in r.metadata.policy
+        assert r.metadata.model_used in ("none", "cache")
+        assert r.metadata.load_level == "cache_preferred"
+
+    def test_shed_declines(self, bridge, workload):
+        bridge.enable_overload(clock=FakeClock())
+        assert self._level(bridge, 1000.0) == LoadLevel.SHED
+        r = bridge.request(_intent(workload, user="sh-u"))
+        assert r.metadata.model_used == "none"
+        assert r.metadata.load_level == "shed"
+
+    def test_transient_load_does_not_ratchet(self, bridge, workload):
+        clk = FakeClock()
+        bridge.enable_overload(clock=clk)
+        self._level(bridge, 40.0)                       # DEGRADE
+        bridge.request(_intent(workload, user="rat-u"))
+        assert bridge.ledger.tier("rat-u") == 0         # no sticky downgrade
+        clk.t = 5.0                                     # serve the dwell
+        self._level(bridge, 0.0)
+        back = bridge.request(_intent(workload, user="rat-u")).metadata
+        assert back.load_level == "normal"
+        assert back.model_used not in ("none", "timeout")
+
+    def test_stats_surface(self, bridge):
+        bridge.enable_overload(clock=FakeClock())
+        snap = bridge.stats()["overload"]
+        for key in ("enabled", "level", "retry_after", "shed", "shed_total",
+                    "signals", "brownout"):
+            assert key in snap, key
+        assert snap["enabled"] is True
+
+
+# -- admission backpressure ----------------------------------------------------
+
+class TestBackpressure:
+    def _adm(self, bridge, clock, **kw):
+        adm = AdmissionController(bridge, max_batch=4, max_wait=0.0,
+                                  clock=clock, **kw)
+        bridge.attach_admission(adm)
+        return adm
+
+    def test_queue_caps_ignored_while_disabled(self, bridge, workload):
+        adm = self._adm(bridge, FakeClock(), max_queue_depth=1)
+        for i in range(5):
+            adm.submit(_intent(workload, i, user=f"cap-u{i}"))
+        assert adm.pending() == 5
+
+    def test_global_queue_cap_sheds(self, bridge, workload):
+        clk = FakeClock()
+        bridge.enable_overload(clock=clk)
+        adm = self._adm(bridge, clk, max_queue_depth=3)
+        for i in range(3):
+            adm.submit(_intent(workload, i, user=f"gq-u{i}"))
+        with pytest.raises(OverloadError) as ei:
+            adm.submit(_intent(workload, 3, user="gq-u3"))
+        assert ei.value.reason == "queue_full"
+        assert adm.stats()["shed"]["queue_full"] == 1
+        assert abs(bridge.ledger._held.get("gq-u3", 0.0)) < 1e-12
+
+    def test_per_user_cap_sheds(self, bridge, workload):
+        clk = FakeClock()
+        bridge.enable_overload(clock=clk)
+        adm = self._adm(bridge, clk, max_user_depth=2, max_queue_depth=100)
+        adm.submit(_intent(workload, 0, user="pu"))
+        adm.submit(_intent(workload, 1, user="pu"))
+        held_before = bridge.ledger._held.get("pu", 0.0)  # the queued pair's
+        with pytest.raises(OverloadError) as ei:
+            adm.submit(_intent(workload, 2, user="pu"))
+        assert ei.value.reason == "user_queue_full"
+        assert bridge.ledger._held.get("pu", 0.0) == pytest.approx(held_before)
+
+    def test_deadline_infeasible_sheds(self, bridge, workload):
+        clk = FakeClock()
+        ov = bridge.enable_overload(clock=clk)
+        adm = self._adm(bridge, clk, max_queue_depth=100)
+        ov.monitor.note_dispatch(4, now=0.0)
+        ov.monitor.note_dispatch(4, now=1.0)            # 4 req/s
+        for i in range(8):                              # drain estimate: 2s
+            adm.submit(_intent(workload, i, user=f"df-u{i}", max_latency=60.0))
+        with pytest.raises(OverloadError) as ei:
+            adm.submit(_intent(workload, 9, user="df-tight", max_latency=0.5))
+        assert ei.value.reason == "deadline_infeasible"
+        assert ei.value.retry_after > 0
+        # a relaxed deadline still gets in
+        adm.submit(_intent(workload, 10, user="df-loose", max_latency=60.0))
+
+    def test_dispatch_expires_dead_tickets(self, bridge, workload):
+        clk = FakeClock()
+        bridge.enable_overload(clock=clk)
+        adm = self._adm(bridge, clk)
+        t_dead = adm.submit(_intent(workload, 0, user="ex-a", max_latency=1.0))
+        t_live = adm.submit(_intent(workload, 1, user="ex-b", max_latency=60.0))
+        clk.t = 5.0                                     # past ex-a's deadline
+        tickets = adm.dispatch()
+        assert t_dead in tickets and t_live in tickets
+        assert t_dead.error is not None
+        assert t_dead.error.reason == "deadline_expired"
+        with pytest.raises(OverloadError):
+            t_dead.result(timeout=1.0)                  # raises, never hangs
+        assert t_live.error is None
+        assert t_live.response is not None
+        assert abs(bridge.ledger._held.get("ex-a", 0.0)) < 1e-12
+
+    def test_expired_stream_ticket_raises_from_chunks(self, bridge, workload):
+        clk = FakeClock()
+        bridge.enable_overload(clock=clk)
+        adm = self._adm(bridge, clk)
+        t = adm.submit_stream(_intent(workload, 0, user="exs",
+                                      max_latency=1.0))
+        clk.t = 5.0
+        adm.dispatch()
+        assert t.error is not None
+        with pytest.raises(OverloadError):
+            list(t.chunks())
+        with pytest.raises(OverloadError):
+            t.result(timeout=1.0)
+
+
+# -- stage deadlines -----------------------------------------------------------
+
+class TestStageDeadlines:
+    def test_blown_wall_deadline_resolves_timeout(self, bridge, workload):
+        bridge.enable_overload()
+        req = _intent(workload, user="dl-u", max_latency=2.0)
+        req.submitted_at = time.monotonic() - 10.0      # arrived long ago
+        r = bridge.request(req)
+        assert r.metadata.model_used == "timeout"
+        assert r.metadata.shed_reason.startswith("stage_deadline:")
+        assert r.metadata.retry_after is not None
+        assert r.metadata.load_level != ""
+        assert "[deadline-exceeded]" in r.text
+        assert abs(bridge.ledger._held.get("dl-u", 0.0)) < 1e-12
+
+    def test_timeout_charges_only_realized_cost(self, bridge, workload):
+        bridge.enable_overload()
+        req = _intent(workload, user="dl-c", max_latency=2.0)
+        req.submitted_at = time.monotonic() - 10.0
+        r = bridge.request(req)
+        # no model ran: nothing but (zero-cost) gate work may settle
+        assert r.metadata.usage.cost == pytest.approx(0.0, abs=1e-9)
+        assert bridge.ledger.spent("dl-c") == pytest.approx(0.0, abs=1e-9)
+
+    def test_disabled_controller_ignores_stale_arrival(self, bridge, workload):
+        req = _intent(workload, user="dl-off", max_latency=2.0)
+        req.submitted_at = time.monotonic() - 10.0
+        r = bridge.request(req)
+        assert r.metadata.model_used != "timeout"
+
+    def test_realized_zero_out_tokens_charges_zero(self, bridge):
+        # a wall-cancelled decode that never produced a token must charge 0
+        model = bridge.pool.cheapest()
+        res = bridge.adapter.answer(model, "cancelled before first step",
+                                    out_tokens=0)
+        assert res.usage.output_tokens == 0
+
+
+# -- abandoned-stream reaper ---------------------------------------------------
+
+class TestStreamReaper:
+    def test_idle_stream_self_cancels_on_emit(self):
+        ts = TokenStream(idle_timeout=0.0)
+        time.sleep(0.01)
+        assert ts.emit("tok") is False
+        assert ts.cancelled
+        assert ts.cancel_reason == "idle"
+
+    def test_no_timeout_never_reaps(self):
+        ts = TokenStream()
+        assert ts.emit("tok") is True
+        assert not ts.cancelled
+
+    def test_admission_threads_idle_timeout(self, bridge, workload):
+        adm = AdmissionController(bridge, max_batch=2, max_wait=0.0,
+                                  stream_idle_timeout=0.125)
+        bridge.attach_admission(adm)
+        t = adm.submit_stream(_intent(workload, 0, user="rp-u"))
+        assert t.stream.idle_timeout == 0.125
+
+    def test_abandoned_stream_settles_partial(self, bridge, workload):
+        # nobody ever consumes the stream: the reaper cancels decode and the
+        # settled charge covers only what was emitted before the cutoff
+        adm = AdmissionController(bridge, max_batch=1, max_wait=0.0,
+                                  stream_idle_timeout=0.0)
+        bridge.attach_admission(adm)
+        t = adm.submit_stream(_intent(workload, 0, user="ab-u"))
+        time.sleep(0.01)
+        adm.dispatch()
+        assert t.result(timeout=30.0) is not None
+        assert t.stream.cancel_reason == "idle"
+
+
+# -- HTTP surface --------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def http_bridge():
+    b = build_bridge(workload=Workload(WorkloadConfig(
+        n_conversations=4, turns_per_conversation=6, seed=11)), seed=0)
+    b.enable_overload()
+    return b
+
+
+@pytest.fixture(scope="module")
+def server(http_bridge):
+    from repro.launch.serve import make_server
+    srv = make_server(http_bridge, port=0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    yield srv.server_address
+    srv.shutdown()
+
+
+def _post(addr, payload, path="/v1/chat/completions"):
+    conn = http.client.HTTPConnection(*addr, timeout=30)
+    body = payload if isinstance(payload, (bytes, str)) else json.dumps(payload)
+    conn.request("POST", path, body=body,
+                 headers={"Content-Type": "application/json"})
+    return conn.getresponse()
+
+
+def _chat(user, stream=False):
+    return {"model": "auto", "user": user, "stream": stream,
+            "x_preference": "cost_first", "x_allow_cache": False,
+            "messages": [{"role": "user", "content": "overload http probe"}]}
+
+
+class TestHTTPSurface:
+    def test_error_envelope_and_request_id_on_404(self, server):
+        conn = http.client.HTTPConnection(*server, timeout=30)
+        conn.request("GET", "/v1/nope")
+        r = conn.getresponse()
+        body = json.loads(r.read())
+        assert r.status == 404
+        assert body["error"]["code"] == "not_found"
+        assert body["error"]["type"] == "invalid_request_error"
+        assert r.getheader("x-request-id", "").startswith("req_")
+
+    def test_malformed_json_is_400_invalid_json(self, server):
+        r = _post(server, b"{not json")
+        body = json.loads(r.read())
+        assert r.status == 400
+        assert body["error"]["code"] == "invalid_json"
+
+    def test_empty_messages_is_400(self, server):
+        r = _post(server, {"model": "auto", "messages": []})
+        body = json.loads(r.read())
+        assert r.status == 400
+        assert body["error"]["type"] == "invalid_request_error"
+
+    def test_request_id_on_success(self, server):
+        r = _post(server, _chat("h-ok"))
+        assert r.status == 200
+        assert r.getheader("x-request-id", "").startswith("req_")
+        r.read()
+
+    def test_shed_is_503_with_retry_after(self, server, http_bridge):
+        http_bridge.overload.monitor.observe("queue_depth", 1e6)
+        try:
+            r = _post(server, _chat("h-shed"))
+            body = json.loads(r.read())
+            assert r.status == 503
+            assert body["error"]["type"] == "overloaded_error"
+            assert body["error"]["code"] == "load_shed"
+            assert int(r.getheader("Retry-After")) >= 1
+        finally:
+            http_bridge.overload.monitor._ewma.clear()
+            http_bridge.overload.monitor._raw.clear()
+
+    def test_streaming_sheds_before_first_token(self, server, http_bridge):
+        http_bridge.overload.monitor.observe("queue_depth", 1e6)
+        try:
+            r = _post(server, _chat("h-sse", stream=True))
+            # a clean JSON 503, not a broken SSE stream
+            assert r.status == 503
+            assert r.getheader("Content-Type").startswith("application/json")
+            body = json.loads(r.read())
+            assert body["error"]["code"] == "load_shed"
+        finally:
+            http_bridge.overload.monitor._ewma.clear()
+            http_bridge.overload.monitor._raw.clear()

@@ -1,0 +1,104 @@
+"""Property test for the overload layer's ledger-hold invariant.
+
+Hypothesis-based (skipped at collection by the conftest guard when
+hypothesis is absent):
+
+Every request that the overload layer refuses or truncates — shed at
+submit (load_shed / queue_full / user_queue_full / deadline_infeasible),
+expired at dispatch, brownout-declined, or timed out mid-pipeline by a
+stage-deadline watchdog — releases its compile-time ledger hold exactly
+once: after the queues drain, no user has a stranded positive hold and no
+user has gone negative (a double release), across arbitrary interleavings
+of buffered submits, streaming submits, stale arrivals, load bursts and
+virtual-clock jumps.
+"""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdmissionController, Constraints, OverloadError,
+                        Preference, ProxyRequest, Workload, WorkloadConfig,
+                        build_bridge)
+
+N_USERS = 4
+DEADLINES = (None, 0.5, 60.0)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=6,
+                                   seed=17))
+
+
+# one op per submitted request: (user, kind, deadline index, clock jump)
+#   kind 0 = buffered, 1 = streaming, 2 = stale arrival (mid-pipeline
+#   timeout: submitted long before "now" with a short deadline)
+OPS = st.tuples(st.integers(0, N_USERS - 1), st.integers(0, 2),
+                st.integers(0, len(DEADLINES) - 1),
+                st.sampled_from((0.0, 0.0, 0.3, 2.0)))
+
+
+def _req(workload, i, user, deadline, stale):
+    q = workload.queries[i % len(workload.queries)]
+    if stale and deadline is None:
+        deadline = 5.0          # a stale arrival needs a deadline to blow
+    r = ProxyRequest(prompt=q.text, user=f"prop-u{user}",
+                     conversation=f"prop-u{user}", query=q,
+                     update_context=False,
+                     constraints=Constraints(max_latency=deadline,
+                                             allow_cache=False,
+                                             allow_prefetch=False),
+                     preference=Preference.COST_FIRST)
+    if stale:
+        # arrived long ago in the wall-clock domain: the pipeline's stage
+        # watchdog resolves it as a timeout the moment it dispatches
+        r.submitted_at = time.monotonic() - 30.0
+    return r
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(OPS, min_size=1, max_size=30),
+       burst_at=st.integers(0, 29), burst=st.booleans())
+def test_every_refused_request_releases_its_hold_once(workload, ops,
+                                                      burst_at, burst):
+    bridge = build_bridge(workload=workload, seed=0)
+    clk = [0.0]
+    bridge.enable_overload(clock=lambda: clk[0])
+    adm = AdmissionController(bridge, max_batch=3, max_wait=0.0,
+                              clock=lambda: clk[0], max_queue_depth=6,
+                              max_user_depth=2, stream_idle_timeout=None)
+    bridge.attach_admission(adm)
+
+    tickets = []
+    for i, (user, kind, dl_ix, jump) in enumerate(ops):
+        clk[0] += jump          # may expire queued deadlines before dispatch
+        if burst and i == burst_at:
+            bridge.overload.observe("queue_depth", 1e6)   # force SHED
+        deadline = DEADLINES[dl_ix]
+        req = _req(workload, i, user, deadline, stale=(kind == 2))
+        try:
+            if kind == 1:
+                tickets.append(adm.submit_stream(req))
+            else:
+                tickets.append(adm.submit(req))
+        except OverloadError as e:
+            assert e.retry_after > 0
+        if i % 4 == 3 and adm.pending():
+            adm.dispatch()
+        if burst and i == burst_at:
+            # let the pressure bleed off so later submits can be admitted
+            bridge.overload.monitor._ewma.clear()
+            bridge.overload.monitor._raw.clear()
+            clk[0] += 10.0
+
+    adm.drain()
+    for t in tickets:
+        if t.stream is not None and t.error is None:
+            t.result(timeout=30.0)        # join streaming settlements
+
+    held = getattr(bridge.ledger, "_held", {})
+    for user, amount in held.items():
+        assert abs(amount) < 1e-9, (
+            f"{user}: stranded hold {amount}" if amount > 0
+            else f"{user}: negative hold {amount} (double release)")
