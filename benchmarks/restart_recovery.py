@@ -1,0 +1,204 @@
+"""Restart recovery: journal replay cost, compaction bound, and warm-start.
+
+Two scenarios (all assert — the CI PR gate runs ``--smoke``):
+
+* ``scaling`` — grow the ledger WAL to N records with compaction disabled
+  and with it enabled.  Uncompacted recovery replays all N records;
+  compacted recovery loads the snapshot plus a tail bounded by
+  ``ledger_snapshot_every`` — the replayed-record count is asserted against
+  that bound, recovered balances must equal the live ledger's exactly, and
+  at the largest N the compacted recovery must be faster than replaying
+  full history (recovery cost scales with snapshot + tail, not lifetime).
+
+* ``kill_restart`` — a bridge with a seeded persistent cache is killed
+  mid-workload at a named crash point (``proxy.finalize.pre``).  A restarted
+  bridge over the same directory retries every request with the same
+  idempotency keys: total spend must equal the continuous (never-crashed)
+  run to the cent, the cache hit count must match it (warm start), no holds
+  may be stranded — and a cold pod (no durable state) must demonstrably hit
+  less than the warm one.
+
+``--smoke`` shrinks the journal sizes and workload for the PR gate (same
+asserts); ``--json PATH`` writes the full result dict for the nightly
+artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+from repro.core import (CachedType, Constraints, Durability, Preference,
+                        ProxyRequest, SimulatedCrash, Workload,
+                        WorkloadConfig, build_bridge, jsonable)
+
+NS, NS_SMOKE = (1000, 4000, 16000), (1000, 4000)
+N_REQ, N_REQ_SMOKE = 24, 12
+COMPACT_EVERY = 512
+N_USERS = 4
+
+
+# -- scenario 1: recovery time vs journal length -------------------------------
+
+def _grow_and_recover(n: int, snapshot_every: int) -> dict:
+    """Append ``n`` journaled charges, kill (no final snapshot), recover."""
+    with tempfile.TemporaryDirectory() as tmp:
+        d = Durability(tmp, ledger_snapshot_every=snapshot_every)
+        led = d.open_ledger()
+        for i in range(n):
+            led.charge(f"u{i % N_USERS}", 0.001, key=f"k{i}")
+        live = {u: led.spent(u) for u in
+                (f"u{j}" for j in range(N_USERS))}
+        d.close(final_snapshot=False)
+
+        d2 = Durability(tmp, ledger_snapshot_every=snapshot_every)
+        led2 = d2.open_ledger()
+        rec = dict(led2.recovery)
+        for u, s in live.items():
+            assert abs(led2.spent(u) - s) < 1e-9, (u, led2.spent(u), s)
+        d2.close(final_snapshot=False)
+    return rec
+
+
+def run_scaling(ns=NS) -> dict:
+    rows = []
+    for n in ns:
+        full = _grow_and_recover(n, snapshot_every=10**9)   # never compacts
+        comp = _grow_and_recover(n, snapshot_every=COMPACT_EVERY)
+        # -- acceptance invariants (PR gate) --------------------------------
+        assert full["replayed_records"] == n + 0, full     # whole history
+        assert comp["replayed_records"] <= COMPACT_EVERY, comp
+        assert comp["snapshot_seq"] > 0, comp
+        rows.append({"n": n,
+                     "uncompacted_s": full["recovery_time_s"],
+                     "uncompacted_replayed": full["replayed_records"],
+                     "compacted_s": comp["recovery_time_s"],
+                     "compacted_replayed": comp["replayed_records"],
+                     "compacted_snapshot_seq": comp["snapshot_seq"]})
+    big = rows[-1]
+    # recovery cost is snapshot + tail, not total history: at the largest
+    # journal the compacted restart must beat full replay outright
+    assert big["compacted_s"] < big["uncompacted_s"], big
+    return {"compact_every": COMPACT_EVERY, "rows": rows}
+
+
+# -- scenario 2: kill mid-workload, restart, retry -----------------------------
+
+def _workload() -> Workload:
+    return Workload(WorkloadConfig(n_conversations=6, turns_per_conversation=8,
+                                   seed=23))
+
+
+def _req(wl, i: int) -> ProxyRequest:
+    q = wl.queries[i % len(wl.queries)]
+    return ProxyRequest(prompt=q.text, user=f"u{i % N_USERS}", query=q,
+                        request_id=f"rr-{i}", update_context=False,
+                        preference=Preference.COST_FIRST,
+                        constraints=Constraints(allow_cache=True,
+                                                allow_prefetch=False))
+
+
+def _seed_cache(bridge, wl) -> None:
+    for q in wl.queries[::2]:
+        bridge.cache.put(q.text + " grounding facts. " * 4,
+                         [(CachedType.CHUNK, q.text)],
+                         meta={"topic": q.topic}, rid=f"seed-{q.qid}")
+
+
+def _drive(bridge, wl, n_req: int) -> dict:
+    spent, hits = 0.0, 0
+    for i in range(n_req):
+        r = bridge.request(_req(wl, i))
+        hits += bool(r.metadata.cache_hit)
+    for j in range(N_USERS):
+        spent += bridge.ledger.spent(f"u{j}")
+    return {"spent": spent, "hits": hits}
+
+
+def run_kill_restart(n_req: int = N_REQ) -> dict:
+    wl = _workload()
+
+    # the continuous run the kill/restart/retry must reproduce
+    with tempfile.TemporaryDirectory() as tmp:
+        b = build_bridge(workload=wl, data_dir=tmp)
+        _seed_cache(b, wl)
+        base = _drive(b, wl, n_req)
+        b.close()
+    assert base["spent"] > 0 and base["hits"] > 0, base
+
+    with tempfile.TemporaryDirectory() as tmp:
+        d = Durability(tmp)
+        d.crash.arm("proxy.finalize.pre", at=n_req // 2)
+        b = build_bridge(workload=wl, durability=d)
+        killed = False
+        try:
+            _seed_cache(b, wl)
+            _drive(b, wl, n_req)
+        except SimulatedCrash:
+            killed = True
+        assert killed, "crash point never fired"
+
+        # restart over the surviving files; client retries everything
+        d2 = Durability(tmp)
+        b2 = build_bridge(workload=wl, durability=d2)
+        recovery = {"ledger": dict(b2.ledger.recovery),
+                    "cache": dict(b2.cache.persist.recovery)}
+        _seed_cache(b2, wl)                      # rid-keyed: no duplicates
+        warm = _drive(b2, wl, n_req)
+        stranded = {u: h for u, h in b2.ledger._held.items()
+                    if abs(h) > 1e-9}
+        b2.close()
+
+    # a pod with no durable state starts cold: the seeds died with it
+    cold_bridge = build_bridge(workload=wl)
+    cold = _drive(cold_bridge, wl, n_req)
+    cold_bridge.close()
+
+    # -- acceptance invariants (PR gate) ------------------------------------
+    assert abs(warm["spent"] - base["spent"]) < 1e-9, (warm, base)
+    assert warm["hits"] == base["hits"], (warm, base)     # same hit-rate
+    assert not stranded, stranded
+    assert cold["hits"] < warm["hits"], (cold, warm)
+    assert recovery["cache"]["rows"] > 0, recovery
+    return {"n_req": n_req, "baseline": base, "warm": warm, "cold": cold,
+            "recovery": recovery,
+            "warm_hit_rate": warm["hits"] / n_req,
+            "cold_hit_rate": cold["hits"] / n_req}
+
+
+def run(smoke: bool = False) -> dict:
+    ns = NS_SMOKE if smoke else NS
+    n_req = N_REQ_SMOKE if smoke else N_REQ
+    return {"scaling": run_scaling(ns),
+            "kill_restart": run_kill_restart(n_req)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small journals/workload for the CI PR gate "
+                         "(same asserts)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full result dict as a JSON artifact")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+
+    print(f"recovery scaling (compact every "
+          f"{res['scaling']['compact_every']} records):")
+    for row in res["scaling"]["rows"]:
+        print(f"  n={row['n']:>6}: full replay {row['uncompacted_s']*1e3:7.1f}ms"
+              f" ({row['uncompacted_replayed']} records) | snapshot+tail "
+              f"{row['compacted_s']*1e3:6.1f}ms "
+              f"({row['compacted_replayed']} records)")
+    k = res["kill_restart"]
+    print(f"kill@mid-workload: spend {k['warm']['spent']:.6f} == baseline "
+          f"{k['baseline']['spent']:.6f} | hit-rate warm "
+          f"{k['warm_hit_rate']:.2f} == baseline "
+          f"{k['baseline']['hits'] / k['n_req']:.2f} > cold "
+          f"{k['cold_hit_rate']:.2f}")
+    print(f"  ledger recovery: {k['recovery']['ledger']}")
+    print(f"  cache recovery:  {k['recovery']['cache']}")
+    if args.json:
+        with open(args.json, "w") as fp:
+            json.dump(jsonable(res), fp, indent=2)
+        print(f"wrote {args.json}")

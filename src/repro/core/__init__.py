@@ -15,6 +15,11 @@ from repro.core.api import (ChatCompletionChunk, ChatCompletionRequest,
                             ServiceType, StageRecord, StreamChunk, TokenStream,
                             Usage)
 from repro.core.cache import CachedType, SemanticCache
+from repro.core.durability import (CACHE_CRASH_POINTS, CRASH_POINTS,
+                                   LEDGER_CRASH_POINTS, PROXY_CRASH_POINTS,
+                                   CachePersistence, CrashPoints,
+                                   Durability, DurableBudgetLedger, Journal,
+                                   SimulatedCrash)
 from repro.core.context_manager import (ContextManager, LastK, Message, Similar,
                                         SmartContext, Summarize, apply_filters)
 from repro.core.judge import Judge
@@ -59,6 +64,9 @@ __all__ = [
     "ProviderAdapter", "ProviderError", "ProviderFleet",
     "BrownoutController", "LoadLevel", "LoadMonitor", "OverloadController",
     "OverloadError",
+    "CACHE_CRASH_POINTS", "CRASH_POINTS", "LEDGER_CRASH_POINTS",
+    "PROXY_CRASH_POINTS", "CachePersistence", "CrashPoints", "Durability",
+    "DurableBudgetLedger", "Journal", "SimulatedCrash",
 ]
 
 
@@ -90,7 +98,13 @@ def default_pool(generation: str = "new") -> ModelPool:
 
 def build_bridge(workload: Optional[Workload] = None, seed: int = 0,
                  generation: str = "new", use_pallas_cache: bool = False,
-                 pool: Optional[ModelPool] = None) -> LLMBridge:
+                 pool: Optional[ModelPool] = None,
+                 data_dir: Optional[str] = None,
+                 durability: Optional[Durability] = None) -> LLMBridge:
+    """``data_dir`` (or an explicit ``Durability``) makes the bridge
+    crash-safe: the ledger journals to a WAL, the semantic cache persists,
+    and a bridge re-built over the same directory recovers the state the
+    previous one settled (see ``core/durability.py``)."""
     workload = workload or Workload()
     pool = pool or default_pool(generation)
     embedder = WorkloadEmbedder(dim=workload.wc.embed_dim)
@@ -101,4 +115,7 @@ def build_bridge(workload: Optional[Workload] = None, seed: int = 0,
                           use_pallas=use_pallas_cache, seed=seed)
     judge = Judge(mode="planted", seed=seed)
     ctx = ContextManager()
-    return LLMBridge(pool, ctx, cache, judge, workload=workload, seed=seed)
+    if durability is None and data_dir is not None:
+        durability = Durability(data_dir)
+    return LLMBridge(pool, ctx, cache, judge, workload=workload, seed=seed,
+                     durability=durability)

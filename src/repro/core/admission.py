@@ -157,6 +157,17 @@ class AdmissionController:
         arrival (``req.submitted_at`` feeds the arrival-adjusted decode
         budget downstream)."""
         now = self.clock()
+        # idempotent retries short-circuit before any hold or shed gate: the
+        # recorded outcome already settled, so a replay costs nothing and is
+        # served even mid-drain (a pre-resolved ticket, no queue slot)
+        replay = self.bridge._prepare(req)
+        if replay is not None:
+            ticket = Ticket(req=req, state=RequestState(req=req, policy=None),
+                            enqueued_at=now, deadline_at=None, seq=self._seq,
+                            response=replay)
+            self._seq += 1
+            self._submitted += 1
+            return ticket
         if req.submitted_at is None:
             # always the time.monotonic domain, NOT self.clock: downstream
             # decode-budget math (pipeline._latency_budget) subtracts it
@@ -208,6 +219,17 @@ class AdmissionController:
         batch's formation and ``max_wait`` is honored against first token."""
         from repro.core.api import TokenStream
         ticket = self.submit(req)
+        if ticket.response is not None:
+            # idempotent replay: hand back a closed stream carrying the
+            # recorded outcome as one chunk
+            stream = TokenStream()
+            if ticket.response.text:
+                stream.emit(ticket.response.text)
+            ticket.response.metadata.stream = True
+            stream.close(response=ticket.response)
+            ticket.stream = stream
+            self._streamed += 1
+            return ticket
         # idle_timeout arms the abandoned-stream reaper: a ticket whose
         # chunks() is never consumed self-cancels at the next emit, which
         # tears down its decode slot (pages released) and settles only the
@@ -368,6 +390,13 @@ class AdmissionController:
         them — rather than re-raising here."""
         if self._worker is not None:
             self._worker.flush(raise_errors=False)
+
+    def close(self) -> None:
+        """Join and stop the streaming-dispatch worker thread (part of
+        ``LLMBridge.close``'s daemon-thread-leak fix)."""
+        if self._worker is not None:
+            self._worker.flush(raise_errors=False)
+            self._worker.close()
 
     def pump(self) -> List[Ticket]:
         """Dispatch one batch iff one is due (``ready()``) — the poll-driven

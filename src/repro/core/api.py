@@ -118,6 +118,11 @@ class ProxyRequest:
     # downstream is arrival-adjusted (a request that waited gets a tighter
     # decode budget).
     submitted_at: Optional[float] = None
+    # durable identity: client-suppliable (HTTP `Idempotency-Key` /
+    # `x-request-id`) or proxy-generated.  Keys the ledger WAL's holds and
+    # settles and the idempotent-retry dedup window — re-sending a settled
+    # id returns the recorded outcome instead of re-executing.
+    request_id: Optional[str] = None
 
     @property
     def is_intent(self) -> bool:
@@ -220,6 +225,12 @@ class Metadata:
     load_level: str = ""
     shed_reason: str = ""
     retry_after: Optional[float] = None
+    # -- durability disclosure (core/durability.py) -------------------------
+    # the request id the outcome is journaled under, and whether this
+    # response was served from the idempotent-retry dedup window (a replay
+    # costs nothing: the original settle already posted)
+    request_id: str = ""
+    idempotent_replay: bool = False
 
 
 @dataclasses.dataclass
@@ -232,6 +243,10 @@ class ProxyResponse:
     # internal: cost units already posted to the BudgetLedger for this
     # response (async prefetch tops usage up after the response returns)
     _ledger_charged: float = dataclasses.field(default=0.0, repr=False)
+    # internal: counter for the idempotence keys of incremental charges
+    # (prefetch top-ups) posted against this response — key = rid, then
+    # rid#x1, rid#x2, ... so WAL replay applies each top-up exactly once
+    _charge_seq: int = dataclasses.field(default=0, repr=False)
 
 
 # ---------------------------------------------------------------------------
@@ -533,6 +548,10 @@ def _x_llmbridge(md: Metadata) -> Dict[str, Any]:
         out["shed_reason"] = md.shed_reason
     if md.retry_after is not None:
         out["retry_after"] = md.retry_after
+    if md.request_id:
+        out["request_id"] = md.request_id
+    if md.idempotent_replay:
+        out["idempotent_replay"] = True
     return out
 
 

@@ -110,29 +110,59 @@ class SemanticCache:
         self.n_misses = 0
         self.n_exact_hits = 0
         self._max_obj_tokens = 0
+        # -- durability (core/durability.py): when attached, every PUT is
+        # journaled before it applies; ``_put_rids`` makes rid-keyed PUTs
+        # idempotent so a retried request cannot double-insert
+        self.persist = None
+        self._put_rids: set = set()
 
     # -- PUT -------------------------------------------------------------------
     def put(self, obj: str, keys: Optional[Sequence[Tuple[CachedType, str]]] = None,
-            meta: Optional[Dict[str, Any]] = None) -> List[int]:
-        """Explicit-key PUT; with keys=None runs the delegated PUT."""
-        if keys is None:
-            return self.delegated_put(obj, meta)
-        keys = [(CachedType(kt), kx) for kt, kx in keys]
-        return self._insert(obj, keys, meta or {})
+            meta: Optional[Dict[str, Any]] = None, *,
+            rid: Optional[str] = None) -> List[int]:
+        """Explicit-key PUT; with keys=None runs the delegated PUT.
 
-    def delegated_put(self, obj: str, meta: Optional[Dict[str, Any]] = None
-                      ) -> List[int]:
-        meta = meta or {}
+        One ``put`` call is the journal's atomic unit: with durability
+        attached the whole insertion (all chunks of a delegated PUT) is
+        journaled as ONE record before any row lands, so replay after a
+        crash can never apply half of it.  ``rid`` makes the PUT idempotent
+        (a retried request's re-insert is a no-op)."""
+        if rid is not None and rid in self._put_rids:
+            return []
+        if keys is not None:
+            keys = [(CachedType(kt), kx) for kt, kx in keys]
+        if self.persist is not None:
+            self.persist.record_put(obj, keys, meta or {}, rid)
+        if rid is not None:
+            self._put_rids.add(rid)
+        ids = self._apply_put(obj, keys, meta or {})
+        if self.persist is not None:
+            # snapshot AFTER the rows land: a snapshot taken mid-put would
+            # cover this record's seq while missing its rows
+            self.persist.maybe_snapshot()
+        return ids
+
+    def delegated_put(self, obj: str, meta: Optional[Dict[str, Any]] = None,
+                      *, rid: Optional[str] = None) -> List[int]:
+        return self.put(obj, None, meta, rid=rid)
+
+    def _apply_put(self, obj: str,
+                   keys: Optional[List[Tuple[CachedType, str]]],
+                   meta: Dict[str, Any]) -> List[int]:
+        """Apply one PUT to the in-memory index — shared by the live path
+        and WAL replay (both must produce identical rows)."""
+        if keys is not None:
+            return self._insert(obj, keys, meta)
         ids: List[int] = []
         kg = self.keygen
         for chunk in kg.chunk(obj):
-            keys: List[Tuple[CachedType, str]] = [(CachedType.CHUNK, chunk)]
-            keys += [(CachedType.QUESTION, q) for q in kg.hypothetical_questions(chunk)]
-            keys.append((CachedType.KEYWORDS, kg.keywords(chunk)))
-            keys.append((CachedType.SUMMARY, kg.summary(chunk)))
+            ck: List[Tuple[CachedType, str]] = [(CachedType.CHUNK, chunk)]
+            ck += [(CachedType.QUESTION, q) for q in kg.hypothetical_questions(chunk)]
+            ck.append((CachedType.KEYWORDS, kg.keywords(chunk)))
+            ck.append((CachedType.SUMMARY, kg.summary(chunk)))
             for fact in kg.facts(chunk):
-                keys.append((CachedType.FACTS, fact))
-            ids += self._insert(chunk, keys, meta)
+                ck.append((CachedType.FACTS, fact))
+            ids += self._insert(chunk, ck, meta)
         return ids
 
     def _insert(self, obj: str, keys: List[Tuple[CachedType, str]],
@@ -150,9 +180,18 @@ class SemanticCache:
                        codes=[TYPE_CODE[e.key_type] for e in entries])
         return [e.eid for e in entries]
 
-    def put_exact(self, prompt: str, response: str) -> None:
+    def put_exact(self, prompt: str, response: str, *,
+                  rid: Optional[str] = None) -> None:
         """Prefetch-button path: exact-match retrieval (paper §5.1)."""
+        if rid is not None and rid in self._put_rids:
+            return
+        if self.persist is not None:
+            self.persist.record_exact(prompt, response, rid)
+        if rid is not None:
+            self._put_rids.add(rid)
         self._exact[prompt] = response
+        if self.persist is not None:
+            self.persist.maybe_snapshot()
 
     def get_exact(self, prompt: str) -> Optional[str]:
         return self._exact.get(prompt)

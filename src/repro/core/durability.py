@@ -1,0 +1,700 @@
+"""Crash-safe durability: WAL journals, snapshots, and kill-anywhere recovery.
+
+The paper's headline deployment (WhatsApp Q&A, §5.1) ran 12+ months on
+metered budgets — state that long-lived cannot live only in process memory.
+This module makes the two pieces of ground truth survive any kill point:
+
+* **Ledger WAL** — every ``BudgetLedger`` mutation (hold / release / charge /
+  outcome / budget edits) appends one CRC-framed record keyed by request id
+  before it lands in memory.  Restart replays snapshot + tail and reconstructs
+  exact balances with *exactly-once settlement*: a charge carries an
+  idempotence key (the request id, plus ``#consult`` / ``#prefetch`` /
+  ``#x<n>`` suffixes for its side legs), so a settle whose record hit disk
+  never posts twice, and a hold whose settle never landed is released on
+  recovery (it belonged to a request the crash killed mid-flight).
+
+* **Cache persistence** — ``VectorStore`` rows + ``CacheEntry`` metadata
+  snapshot to an ``.npz`` + JSON pair, with an insert journal for the tail,
+  so a restarted pod warm-starts at the same hit-rate.  The IVF index is
+  rebuilt once over the restored rows (one build, not n incremental passes);
+  ``stats()`` discloses ``restored_rows`` / ``recovery_time_s``.
+
+* **Dedup window** — recorded outcomes double as the idempotent-retry store:
+  a client re-sending a settled request id (HTTP ``Idempotency-Key``) gets
+  the recorded outcome back instead of a second execution and a second bill.
+
+Crash simulation: every journal/snapshot boundary is a *named crash point*
+(``CRASH_POINTS``).  Arming one makes the next hit freeze the simulated disk
+and raise :class:`SimulatedCrash` — from that instant no journal byte is
+written (exactly what ``kill -9`` leaves behind, including the in-process
+exception handlers that would otherwise journal post-mortem releases), so a
+test can restart from the surviving files and assert the invariants.
+
+Journal frame format: ``<u32 length><u32 crc32>`` + JSON payload carrying a
+monotone ``seq``.  ``scan()`` truncates the torn tail (first short or
+CRC-failing frame) — a crash mid-append never poisons recovery.  Snapshots
+write tmp-then-rename (the JSON is the commit point); compaction resets the
+WAL after a snapshot, so recovery cost is bounded by snapshot size + tail
+length, not total history.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import math
+import os
+import struct
+import threading
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import BudgetLedger
+
+_HDR = struct.Struct("<II")      # (payload length, crc32(payload))
+
+
+class SimulatedCrash(BaseException):
+    """An armed crash point fired: the simulated process is dead.
+
+    Derives from ``BaseException`` so ordinary ``except Exception`` recovery
+    code cannot swallow it — only the crash harness catches it."""
+
+
+class CrashPoints:
+    """Registry of named kill points for the deterministic crash harness.
+
+    ``arm(name, at=k)`` makes the k-th ``hit(name)`` trip: the registry
+    freezes (every subsequent journal append is refused by raising again,
+    from any thread — the process is "dead") and :class:`SimulatedCrash`
+    propagates.  Un-armed points are near-free counters."""
+
+    def __init__(self):
+        self._armed: Dict[str, int] = {}
+        self.counts: Dict[str, int] = {}
+        self.tripped: Optional[str] = None
+
+    def arm(self, name: str, at: int = 1) -> None:
+        assert at >= 1
+        self._armed[name] = at
+
+    def hit(self, name: str) -> None:
+        if self.tripped is not None:
+            raise SimulatedCrash(self.tripped)
+        self.counts[name] = self.counts.get(name, 0) + 1
+        at = self._armed.get(name)
+        if at is not None and self.counts[name] >= at:
+            self.tripped = name
+            raise SimulatedCrash(name)
+
+
+#: every named kill point the harness iterates (tests/benchmark parametrize
+#: over these; journal points derive from ``<tag>.<op>.{pre,post}``)
+LEDGER_CRASH_POINTS: Tuple[str, ...] = (
+    "ledger.hold.pre", "ledger.hold.post",
+    "ledger.release.pre", "ledger.release.post",
+    "ledger.charge.pre", "ledger.charge.post",
+    "ledger.outcome.pre", "ledger.outcome.post",
+    "ledger.snapshot.pre", "ledger.snapshot.tmp", "ledger.snapshot.post",
+)
+CACHE_CRASH_POINTS: Tuple[str, ...] = (
+    "cache.put.pre", "cache.put.post",
+    "cache.exact.pre", "cache.exact.post",
+    "cache.snapshot.pre", "cache.snapshot.tmp", "cache.snapshot.post",
+)
+PROXY_CRASH_POINTS: Tuple[str, ...] = (
+    "proxy.resolve.pre", "proxy.finalize.pre",
+)
+CRASH_POINTS: Tuple[str, ...] = (
+    LEDGER_CRASH_POINTS + CACHE_CRASH_POINTS + PROXY_CRASH_POINTS)
+
+
+class Journal:
+    """Append-only CRC-framed record log with torn-tail truncation.
+
+    Records are JSON dicts carrying a monotone ``seq`` (assigned here).
+    ``scan()`` reads every intact frame, truncates the file at the first
+    torn/corrupt one, and leaves the journal open for append.  ``reset()``
+    truncates after a snapshot (compaction) — ``seq`` keeps counting, and
+    the owner persists the snapshot's ``seq`` so tail replay stays
+    idempotent across compactions and restarts."""
+
+    def __init__(self, path, tag: str, crash: Optional[CrashPoints] = None,
+                 fsync: bool = False):
+        self.path = Path(path)
+        self.tag = tag
+        self.crash = crash
+        self.fsync = fsync
+        self.seq = 0
+        self.truncated_bytes = 0
+        self.records_since_reset = 0
+        self._io = threading.Lock()
+        self._f = None
+
+    def scan(self) -> List[dict]:
+        """Read all intact records, truncate the torn tail, open for append."""
+        records: List[dict] = []
+        good = 0
+        if self.path.exists():
+            buf = self.path.read_bytes()
+            off = 0
+            while off + _HDR.size <= len(buf):
+                length, crc = _HDR.unpack_from(buf, off)
+                end = off + _HDR.size + length
+                if end > len(buf):
+                    break                               # torn mid-payload
+                payload = buf[off + _HDR.size:end]
+                if zlib.crc32(payload) != crc:
+                    break                               # corrupt frame
+                try:
+                    rec = json.loads(payload)
+                except ValueError:
+                    break
+                records.append(rec)
+                off = end
+            good = off
+            self.truncated_bytes = len(buf) - good
+            if self.truncated_bytes:
+                with open(self.path, "r+b") as f:
+                    f.truncate(good)
+        if records:
+            self.seq = int(records[-1]["seq"])
+        self._f = open(self.path, "ab")
+        self.records_since_reset = len(records)
+        return records
+
+    def _hit(self, name: str) -> None:
+        if self.crash is not None:
+            self.crash.hit(name)
+
+    def append(self, rec: dict) -> int:
+        """Frame + write + flush one record; returns its ``seq``.  The
+        ``.pre`` crash point fires before any byte lands, ``.post`` after
+        the flush — the two sides of every torn-write scenario."""
+        with self._io:
+            self.seq += 1
+            rec = dict(rec, seq=self.seq)
+            payload = json.dumps(rec, separators=(",", ":")).encode()
+            self._hit(f"{self.tag}.{rec['op']}.pre")
+            self._f.write(_HDR.pack(len(payload), zlib.crc32(payload)))
+            self._f.write(payload)
+            self._f.flush()
+            if self.fsync:
+                os.fsync(self._f.fileno())
+            self.records_since_reset += 1
+            self._hit(f"{self.tag}.{rec['op']}.post")
+            return rec["seq"]
+
+    def reset(self) -> None:
+        """Compaction: truncate the log (the owner just snapshotted at
+        ``seq``); the sequence counter keeps running."""
+        with self._io:
+            self._f.close()
+            self._f = open(self.path, "wb")
+            self.records_since_reset = 0
+
+    def flush(self) -> None:
+        with self._io:
+            if self._f is not None and not self._f.closed:
+                self._f.flush()
+                os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        with self._io:
+            if self._f is not None and not self._f.closed:
+                self._f.flush()
+                self._f.close()
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_text(text)
+    os.replace(tmp, path)
+
+
+class DurableBudgetLedger(BudgetLedger):
+    """``BudgetLedger`` whose every mutation is journaled before it applies.
+
+    Charges carry idempotence keys and outcomes feed the dedup window;
+    snapshot + compaction bound replay to the journal tail.  Construction
+    does NOT recover — ``Durability.open_ledger`` scans/replays and calls
+    :meth:`recover_open_holds` once no pre-crash request can be in flight."""
+
+    #: bounded windows: applied charge keys (exactly-once guard) and recorded
+    #: outcomes (idempotent-retry dedup).  Both persist in the snapshot.
+    APPLIED_WINDOW = 65536
+
+    def __init__(self, default_budget: float = math.inf, *,
+                 journal: Journal, snapshot_path,
+                 snapshot_every: int = 1024, dedup_window: int = 4096,
+                 crash: Optional[CrashPoints] = None):
+        super().__init__(default_budget)
+        self._journal = journal
+        self._snapshot_path = Path(snapshot_path)
+        self.snapshot_every = snapshot_every
+        self.dedup_window = dedup_window
+        self.crash = crash
+        self._applied: "collections.OrderedDict[str, None]" = \
+            collections.OrderedDict()
+        self._outcomes: "collections.OrderedDict[str, dict]" = \
+            collections.OrderedDict()
+        self._open_holds: Dict[str, List] = {}   # rid -> [user, net amount]
+        self.n_snapshots = 0
+        self.recovery: Dict[str, Any] = {}
+
+    # -- journaled mutators (all append-then-apply under the ledger lock) ----
+    def set_budget(self, user: str, amount: float) -> None:
+        with self._lock:
+            self._append_apply({"op": "budget", "user": user,
+                                "amount": float(amount)})
+
+    def top_up(self, user: str, amount: float) -> None:
+        with self._lock:
+            self._append_apply({"op": "topup", "user": user,
+                                "amount": float(amount)})
+
+    def hold(self, user: str, amount: float, rid: Optional[str] = None) -> None:
+        with self._lock:
+            self._append_apply({"op": "hold", "user": user,
+                                "amount": float(amount), "rid": rid})
+
+    def try_hold(self, user: str, amount: float, slack: float = 0.0,
+                 rid: Optional[str] = None) -> bool:
+        with self._lock:
+            remaining = (self._budgets.get(user, self.default_budget)
+                         - self._spent.get(user, 0.0)
+                         - self._held.get(user, 0.0))
+            if remaining + slack < amount - 1e-9:
+                return False
+            self._append_apply({"op": "hold", "user": user,
+                                "amount": float(amount), "rid": rid})
+            return True
+
+    def release(self, user: str, amount: float,
+                rid: Optional[str] = None) -> None:
+        with self._lock:
+            self._append_apply({"op": "release", "user": user,
+                                "amount": float(amount), "rid": rid})
+
+    def charge(self, user: str, cost: float,
+               key: Optional[str] = None) -> bool:
+        """Post realized cost.  A ``key`` already applied (this run or a
+        replayed one) is skipped — the exactly-once settlement guarantee —
+        and returns False; a posted charge returns True."""
+        with self._lock:
+            if key is not None and key in self._applied:
+                return False
+            self._append_apply({"op": "charge", "user": user,
+                                "cost": float(cost), "key": key})
+            return True
+
+    def note_degradation(self, user: str, level: int) -> None:
+        with self._lock:
+            if not math.isfinite(self._budgets.get(user, self.default_budget)):
+                return
+            if int(level) > self._degradation.get(user, 0):
+                # journal only ratchet *advances* — note_degradation fires on
+                # every compile and would otherwise flood the WAL
+                self._append_apply({"op": "degrade", "user": user,
+                                    "level": int(level)})
+
+    def record_outcome(self, rid: str, outcome: dict) -> None:
+        """Admit ``rid`` to the dedup window with its served outcome."""
+        with self._lock:
+            self._append_apply({"op": "outcome", "rid": rid,
+                                "outcome": outcome})
+
+    def outcome(self, rid: str) -> Optional[dict]:
+        with self._lock:
+            return self._outcomes.get(rid)
+
+    def settled(self, rid: str) -> bool:
+        with self._lock:
+            return rid in self._outcomes
+
+    # -- record application (shared by the live path and replay) -------------
+    def _append_apply(self, rec: dict) -> None:
+        self._journal.append(rec)      # crash points fire in here
+        self._apply(rec)
+        if self._journal.records_since_reset >= self.snapshot_every:
+            self._snapshot_locked()
+
+    def _apply(self, rec: dict) -> None:
+        op = rec["op"]
+        if op == "hold":
+            u, a, rid = rec["user"], rec["amount"], rec.get("rid")
+            self._held[u] = self._held.get(u, 0.0) + a
+            if rid:
+                oh = self._open_holds.setdefault(rid, [u, 0.0])
+                oh[1] += a
+        elif op == "release":
+            u, a, rid = rec["user"], rec["amount"], rec.get("rid")
+            self._held[u] = self._held.get(u, 0.0) - a
+            if rid and rid in self._open_holds:
+                self._open_holds[rid][1] -= a
+                if abs(self._open_holds[rid][1]) < 1e-12:
+                    del self._open_holds[rid]
+        elif op == "charge":
+            key = rec.get("key")
+            if key is not None:
+                if key in self._applied:
+                    return                       # replay/retry: exactly once
+                self._applied[key] = None
+                while len(self._applied) > self.APPLIED_WINDOW:
+                    self._applied.popitem(last=False)
+            u = rec["user"]
+            self._spent[u] = self._spent.get(u, 0.0) + rec["cost"]
+        elif op == "outcome":
+            self._outcomes[rec["rid"]] = rec["outcome"]
+            self._outcomes.move_to_end(rec["rid"])
+            while len(self._outcomes) > self.dedup_window:
+                self._outcomes.popitem(last=False)
+        elif op == "budget":
+            self._budgets[rec["user"]] = rec["amount"]
+            self._degradation.pop(rec["user"], None)
+        elif op == "topup":
+            u = rec["user"]
+            self._budgets[u] = (self._budgets.get(u, self.default_budget)
+                                + rec["amount"])
+            self._degradation.pop(u, None)
+        elif op == "degrade":
+            u = rec["user"]
+            self._degradation[u] = max(self._degradation.get(u, 0),
+                                       rec["level"])
+
+    # -- snapshot / compaction ----------------------------------------------
+    def snapshot(self) -> None:
+        with self._lock:
+            self._snapshot_locked()
+
+    def _snapshot_locked(self) -> None:
+        if self.crash is not None and self.crash.tripped is not None:
+            return                    # the simulated disk is dead
+        state = {
+            "seq": self._journal.seq,
+            "budgets": self._budgets,
+            "spent": self._spent,
+            "held": self._held,
+            "degradation": self._degradation,
+            "open_holds": self._open_holds,
+            "applied": list(self._applied),
+            "outcomes": list(self._outcomes.items()),
+        }
+        if self.crash is not None:
+            self.crash.hit("ledger.snapshot.pre")
+        tmp = self._snapshot_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(state))
+        if self.crash is not None:
+            self.crash.hit("ledger.snapshot.tmp")
+        os.replace(tmp, self._snapshot_path)
+        if self.crash is not None:
+            self.crash.hit("ledger.snapshot.post")
+        self._journal.reset()
+        self.n_snapshots += 1
+
+    def load_snapshot(self, state: dict) -> None:
+        self._budgets = {u: float(a) for u, a in state["budgets"].items()}
+        self._spent = {u: float(a) for u, a in state["spent"].items()}
+        self._held = {u: float(a) for u, a in state["held"].items()}
+        self._degradation = {u: int(v)
+                             for u, v in state["degradation"].items()}
+        self._open_holds = {rid: [u, float(a)]
+                            for rid, (u, a) in state["open_holds"].items()}
+        self._applied = collections.OrderedDict(
+            (k, None) for k in state["applied"])
+        self._outcomes = collections.OrderedDict(
+            (rid, out) for rid, out in state["outcomes"])
+
+    def recover_open_holds(self) -> Dict[str, Any]:
+        """Release every open hold: at open time no pre-crash request can
+        still be in flight, so net-nonzero holds are stranded reservations
+        whose settle never happened.  Pure state repair — not journaled, so
+        re-opening the same files yields the same result (idempotent)."""
+        with self._lock:
+            stranded = {rid: (u, a) for rid, (u, a) in self._open_holds.items()
+                        if abs(a) > 1e-12}
+            amount = sum(self._held.values())
+            self._held = {}
+            self._open_holds = {}
+            return {"count": len(stranded), "amount": amount,
+                    "rids": sorted(stranded)[:32]}
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "journal_seq": self._journal.seq,
+                "journal_records_since_snapshot":
+                    self._journal.records_since_reset,
+                "n_snapshots": self.n_snapshots,
+                "applied_keys": len(self._applied),
+                "dedup_window_entries": len(self._outcomes),
+                "open_holds": len(self._open_holds),
+                "recovery": dict(self.recovery),
+            }
+
+
+class CachePersistence:
+    """Snapshot + insert journal for one ``SemanticCache``.
+
+    ``attach`` restores the snapshot (bulk row load + one IVF rebuild),
+    replays the journal tail through the cache's own insert path (the
+    embedder is deterministic, so tail rows re-embed to the same vectors),
+    then hooks ``record_put``/``record_exact`` so every future insert is
+    journaled before it applies.  Snapshots are a versioned ``.npz`` (rows +
+    type codes) committed by an atomically-renamed JSON (entries, exact
+    matches, PUT rids, counters) — a crash between the two leaves the old
+    pair intact."""
+
+    SNAP = "cache.snap.json"
+
+    def __init__(self, root, crash: Optional[CrashPoints] = None,
+                 fsync: bool = False, snapshot_every: int = 512):
+        self.root = Path(root)
+        self.journal = Journal(self.root / "cache.wal", tag="cache",
+                               crash=crash, fsync=fsync)
+        self.crash = crash
+        self.snapshot_every = snapshot_every
+        self.cache = None
+        self.n_snapshots = 0
+        self.recovery: Dict[str, Any] = {}
+
+    def attach(self, cache) -> Dict[str, Any]:
+        from repro.core.cache import CacheEntry, CachedType
+        t0 = time.perf_counter()
+        records = self.journal.scan()
+        snap_seq, restored = 0, 0
+        sp = self.root / self.SNAP
+        if sp.exists():
+            meta = json.loads(sp.read_text())
+            snap_seq = int(meta["seq"])
+            entries = [CacheEntry(eid=e["eid"], obj=e["obj"], meta=e["meta"],
+                                  key_type=CachedType(e["key_type"]),
+                                  key_text=e["key_text"])
+                       for e in meta["entries"]]
+            if entries:
+                arrs = np.load(self.root / meta["npz"])
+                cache.store.restore_rows(arrs["vecs"], arrs["codes"], entries)
+            cache._entries = list(entries)
+            cache._exact = dict(meta["exact"])
+            cache._put_rids = set(meta["put_rids"])
+            cache._max_obj_tokens = int(meta["max_obj_tokens"])
+            restored = len(entries)
+        self.journal.seq = max(self.journal.seq, snap_seq)
+        replayed = 0
+        for rec in records:
+            if int(rec["seq"]) <= snap_seq:
+                continue
+            self._replay(cache, rec)
+            replayed += 1
+        cache.persist = self
+        self.cache = cache
+        self.recovery = {
+            "restored_rows": restored,
+            "replayed_records": replayed,
+            "rows": len(cache.store),
+            "truncated_bytes": self.journal.truncated_bytes,
+            "recovery_time_s": time.perf_counter() - t0,
+        }
+        return self.recovery
+
+    def _replay(self, cache, rec: dict) -> None:
+        from repro.core.cache import CachedType
+        rid = rec.get("rid")
+        if rec["op"] == "put":
+            keys = rec["keys"]
+            if keys is not None:
+                keys = [(CachedType(kt), kx) for kt, kx in keys]
+            cache._apply_put(rec["obj"], keys, rec["meta"])
+        elif rec["op"] == "exact":
+            cache._exact[rec["prompt"]] = rec["response"]
+        if rid:
+            cache._put_rids.add(rid)
+
+    # -- live-path hooks (called by SemanticCache before applying) -----------
+    def record_put(self, obj: str, keys, meta: dict,
+                   rid: Optional[str]) -> None:
+        self.journal.append({
+            "op": "put", "obj": obj,
+            "keys": ([[kt.value, kx] for kt, kx in keys]
+                     if keys is not None else None),
+            "meta": meta, "rid": rid})
+
+    def record_exact(self, prompt: str, response: str,
+                     rid: Optional[str]) -> None:
+        self.journal.append({"op": "exact", "prompt": prompt,
+                             "response": response, "rid": rid})
+
+    def maybe_snapshot(self) -> None:
+        """Compaction check — the cache calls this AFTER a journaled insert
+        has applied, so a snapshot never covers a seq whose rows it lacks."""
+        if self.journal.records_since_reset >= self.snapshot_every:
+            self.snapshot()
+
+    def snapshot(self) -> None:
+        if self.cache is None or (self.crash is not None
+                                  and self.crash.tripped is not None):
+            return
+        cache, store = self.cache, self.cache.store
+        n = len(store)
+        seq = self.journal.seq
+        npz_name = f"cache.snap.{seq}.npz"
+        if self.crash is not None:
+            self.crash.hit("cache.snapshot.pre")
+        tmp_npz = self.root / (npz_name + ".tmp")
+        with open(tmp_npz, "wb") as f:
+            np.savez(f, vecs=store._vecs[:n], codes=store._codes[:n])
+        os.replace(tmp_npz, self.root / npz_name)
+        meta = {
+            "seq": seq, "npz": npz_name, "rows": n,
+            "entries": [{"eid": e.eid, "obj": e.obj, "meta": e.meta,
+                         "key_type": e.key_type.value, "key_text": e.key_text}
+                        for e in cache._entries],
+            "exact": cache._exact,
+            "put_rids": sorted(cache._put_rids),
+            "max_obj_tokens": cache._max_obj_tokens,
+        }
+        if self.crash is not None:
+            self.crash.hit("cache.snapshot.tmp")
+        _atomic_write_text(self.root / self.SNAP, json.dumps(meta))
+        if self.crash is not None:
+            self.crash.hit("cache.snapshot.post")
+        self.journal.reset()
+        # the committed JSON now points at npz_name: older versions are junk
+        for stale in self.root.glob("cache.snap.*.npz"):
+            if stale.name != npz_name:
+                stale.unlink(missing_ok=True)
+        self.n_snapshots += 1
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "rows": len(self.cache.store) if self.cache is not None else 0,
+            "journal_seq": self.journal.seq,
+            "journal_records_since_snapshot": self.journal.records_since_reset,
+            "n_snapshots": self.n_snapshots,
+            "recovery": dict(self.recovery),
+        }
+
+    def flush(self) -> None:
+        self.journal.flush()
+
+    def close(self) -> None:
+        self.journal.close()
+
+
+class Durability:
+    """One directory of durable state for one bridge: the facade the proxy
+    threads through.  Layout::
+
+        <root>/ledger.wal          ledger write-ahead journal
+        <root>/ledger.snap.json    ledger snapshot (atomic rename)
+        <root>/cache.wal           cache insert journal
+        <root>/cache.snap.json     cache snapshot commit point
+        <root>/cache.snap.<seq>.npz  row matrix + type codes it references
+
+    ``open_ledger`` and ``attach_cache`` perform recovery (scan, torn-tail
+    truncation, snapshot load, tail replay, stranded-hold release);
+    ``close`` writes a final snapshot and closes the journals — unless a
+    simulated crash tripped, in which case the disk stays exactly as the
+    "kill" left it."""
+
+    def __init__(self, root, *, fsync: bool = False,
+                 ledger_snapshot_every: int = 1024,
+                 cache_snapshot_every: int = 512,
+                 dedup_window: int = 4096):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.crash = CrashPoints()
+        self.fsync = fsync
+        self.ledger_snapshot_every = ledger_snapshot_every
+        self.cache_snapshot_every = cache_snapshot_every
+        self.dedup_window = dedup_window
+        self.ledger: Optional[DurableBudgetLedger] = None
+        self.cache_persist: Optional[CachePersistence] = None
+        self._closed = False
+
+    # -- recovery-at-open -----------------------------------------------------
+    def open_ledger(self, default_budget: float = math.inf
+                    ) -> DurableBudgetLedger:
+        t0 = time.perf_counter()
+        journal = Journal(self.root / "ledger.wal", tag="ledger",
+                          crash=self.crash, fsync=self.fsync)
+        records = journal.scan()
+        led = DurableBudgetLedger(
+            default_budget, journal=journal,
+            snapshot_path=self.root / "ledger.snap.json",
+            snapshot_every=self.ledger_snapshot_every,
+            dedup_window=self.dedup_window, crash=self.crash)
+        snap_seq = 0
+        sp = self.root / "ledger.snap.json"
+        if sp.exists():
+            state = json.loads(sp.read_text())
+            led.load_snapshot(state)
+            snap_seq = int(state["seq"])
+            journal.seq = max(journal.seq, snap_seq)
+        replayed = 0
+        for rec in records:
+            if int(rec["seq"]) <= snap_seq:
+                continue
+            led._apply(rec)
+            replayed += 1
+        recovered = led.recover_open_holds()
+        led.recovery = {
+            "snapshot_seq": snap_seq,
+            "replayed_records": replayed,
+            "truncated_bytes": journal.truncated_bytes,
+            "recovered_holds": recovered,
+            "recovery_time_s": time.perf_counter() - t0,
+        }
+        self.ledger = led
+        return led
+
+    def attach_cache(self, cache) -> Dict[str, Any]:
+        self.cache_persist = CachePersistence(
+            self.root, crash=self.crash, fsync=self.fsync,
+            snapshot_every=self.cache_snapshot_every)
+        return self.cache_persist.attach(cache)
+
+    # -- idempotent-retry window ----------------------------------------------
+    def lookup(self, rid: str) -> Optional[dict]:
+        return self.ledger.outcome(rid) if self.ledger is not None else None
+
+    def record_outcome(self, rid: str, resp) -> None:
+        if self.ledger is None:
+            return
+        md = resp.metadata
+        self.ledger.record_outcome(rid, {
+            "text": resp.text, "model": md.model_used, "policy": md.policy,
+            "cache_hit": md.cache_hit, "cost": md.usage.cost})
+
+    # -- lifecycle -------------------------------------------------------------
+    def flush(self) -> None:
+        if self.ledger is not None:
+            self.ledger._journal.flush()
+        if self.cache_persist is not None:
+            self.cache_persist.flush()
+
+    def close(self, final_snapshot: bool = True) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if final_snapshot and self.crash.tripped is None:
+            if self.ledger is not None:
+                self.ledger.snapshot()
+            if self.cache_persist is not None:
+                self.cache_persist.snapshot()
+        if self.ledger is not None:
+            self.ledger._journal.close()
+        if self.cache_persist is not None:
+            self.cache_persist.close()
+
+    def stats(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"dir": str(self.root),
+                               "crash_tripped": self.crash.tripped}
+        if self.ledger is not None:
+            out["ledger"] = self.ledger.stats()
+        if self.cache_persist is not None:
+            out["cache"] = self.cache_persist.stats()
+        return out

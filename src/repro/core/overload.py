@@ -290,6 +290,9 @@ class OverloadController:
         self._shed_counts: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._last_depth = 0
+        # graceful drain (SIGTERM): a forced level pins the controller —
+        # admission sheds everything while in-flight work settles
+        self._forced: Optional[LoadLevel] = None
 
     # -- signal ingestion ----------------------------------------------------
     def add_tap(self, signal: str, fn: Callable[[], Optional[float]]) -> None:
@@ -311,8 +314,17 @@ class OverloadController:
         if self.enabled:
             self.monitor.note_dispatch(n, self.clock())
 
+    def force_level(self, level: LoadLevel) -> None:
+        """Pin the controller at ``level`` (graceful drain: SIGTERM forces
+        SHED so the front door answers 503 + Retry-After while in-flight
+        requests finish and settle).  Implies ``enabled``."""
+        self._forced = level
+        self.enabled = True
+
     def tick(self) -> LoadLevel:
         """Poll taps and update the brownout level from current pressure."""
+        if self._forced is not None:
+            return self._forced
         if not self.enabled:
             return self.brownout.level
         now = self.clock()
@@ -328,6 +340,8 @@ class OverloadController:
     # -- level / shedding ----------------------------------------------------
     @property
     def level(self) -> LoadLevel:
+        if self._forced is not None:
+            return self._forced
         return self.brownout.level if self.enabled else LoadLevel.NORMAL
 
     def retry_after(self) -> float:
@@ -363,6 +377,7 @@ class OverloadController:
     def snapshot(self) -> Dict[str, Any]:
         out = {
             "enabled": self.enabled,
+            "forced": self._forced.label if self._forced is not None else None,
             "level": self.level.label,
             "retry_after": self.retry_after(),
             "shed": self.shed_counts,

@@ -415,7 +415,10 @@ class PrefetchStage(Stage):
             context_tokens=ContextManager.token_count(msgs),
             query=req.query).cost
         slack = state.policy.reserved if state.policy is not None else 0.0
-        if not proxy.ledger.try_hold(req.user, hold, slack=slack):
+        # the prefetch leg keys its own hold: on crash recovery a stranded
+        # `rid#prefetch` hold is released independently of the foreground's
+        prid = f"{req.request_id}#prefetch" if req.request_id else None
+        if not proxy.ledger.try_hold(req.user, hold, slack=slack, rid=prid):
             state.notes["prefetch"] = "skip(budget)"
             return
         state.notes["prefetch"] = "queued" if self.background else "inline"
@@ -433,7 +436,9 @@ class PrefetchStage(Stage):
             better = proxy.adapter.answer(
                 best, req.prompt, context_tokens=ctx_tokens, query=req.query,
                 rng=proxy.adapter.background_rng if self.background else None)
-            proxy.cache.put_exact(proxy._better_key(req), better.text)
+            prid = f"{req.request_id}#prefetch" if req.request_id else None
+            proxy.cache.put_exact(proxy._better_key(req), better.text,
+                                  rid=prid)
             proxy._better_quality[proxy._better_key(req)] = better.true_quality
             # cost is accounted; latency is off the critical path
             with proxy._ledger_lock:
@@ -448,7 +453,10 @@ class PrefetchStage(Stage):
             # the realised charge replaces the hold (charge first, then
             # release: remaining dips pessimistically, never optimistically)
             if hold:
-                proxy.ledger.release(req.user, hold)
+                proxy.ledger.release(
+                    req.user, hold,
+                    rid=f"{req.request_id}#prefetch" if req.request_id
+                    else None)
 
     def decision(self, state: RequestState) -> str:
         return state.notes.get("prefetch",

@@ -150,11 +150,15 @@ class BudgetLedger:
     def remaining(self, user: str) -> float:
         return self.budget(user) - self.spent(user) - self._held.get(user, 0.0)
 
-    def hold(self, user: str, amount: float) -> None:
+    def hold(self, user: str, amount: float,
+             rid: Optional[str] = None) -> None:
+        """``rid`` keys the hold for durable ledgers (ignored here): a hold
+        whose settle never lands is released by name on crash recovery."""
         with self._lock:
             self._held[user] = self._held.get(user, 0.0) + amount
 
-    def try_hold(self, user: str, amount: float, slack: float = 0.0) -> bool:
+    def try_hold(self, user: str, amount: float, slack: float = 0.0,
+                 rid: Optional[str] = None) -> bool:
         """Place a hold only if the remaining budget covers it; atomic with
         the remaining-balance check, so concurrent holders cannot jointly
         overdraw.  ``slack`` credits budget already held for this same work
@@ -169,13 +173,19 @@ class BudgetLedger:
             self._held[user] = self._held.get(user, 0.0) + amount
             return True
 
-    def release(self, user: str, amount: float) -> None:
+    def release(self, user: str, amount: float,
+                rid: Optional[str] = None) -> None:
         with self._lock:
             self._held[user] = self._held.get(user, 0.0) - amount
 
-    def charge(self, user: str, cost: float) -> None:
+    def charge(self, user: str, cost: float,
+               key: Optional[str] = None) -> bool:
+        """Post realized cost.  ``key`` is an idempotence key honored by
+        durable ledgers (exactly-once settlement across crash/replay);
+        the in-memory ledger always posts and returns True."""
         with self._lock:
             self._spent[user] = self._spent.get(user, 0.0) + cost
+            return True
 
     def fraction_remaining(self, user: str) -> float:
         b = self.budget(user)
@@ -388,7 +398,7 @@ class PolicyCompiler:
                                        label=spec.label + "+cache")
 
         hold = est_cost + cache_bound
-        ledger.hold(user, hold)
+        ledger.hold(user, hold, rid=req.request_id)
         if not escalate:
             # the ratchet tracks what the *budget* can afford — a request
             # whose own max_cost/max_latency was the binding constraint must

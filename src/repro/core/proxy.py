@@ -45,6 +45,7 @@ import math
 import queue
 import threading
 import time
+import uuid
 import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -72,6 +73,12 @@ class ProxyConfig:
     smart_context_accuracy: float = 0.90  # planted decider channel accuracy
 
 
+def _new_request_id() -> str:
+    """A fresh durable request identity (the WAL/dedup key for requests
+    whose client supplied none)."""
+    return f"req_{uuid.uuid4().hex[:16]}"
+
+
 class _PrefetchWorker:
     """Single background worker draining prefetch jobs in submission order.
 
@@ -82,6 +89,7 @@ class _PrefetchWorker:
     the deterministic-test hook the async-prefetch satellite calls for."""
 
     IDLE_TIMEOUT = 1.0
+    _STOP = object()
 
     def __init__(self):
         self._q: "queue.Queue" = queue.Queue()
@@ -108,6 +116,11 @@ class _PrefetchWorker:
                         self._thread = None
                         return
                 continue
+            if job is self._STOP:
+                with self._lock:
+                    self._thread = None
+                self._q.task_done()
+                return
             try:
                 job()
             except BaseException as e:       # surfaced on flush()
@@ -119,6 +132,18 @@ class _PrefetchWorker:
         self._q.join()
         if raise_errors and self._errors:
             raise self._errors.pop(0)
+
+    def close(self) -> None:
+        """Drain the queue, then stop and join the worker thread promptly
+        (no idle-timeout wait) via a stop sentinel.  A later ``submit``
+        restarts the worker, so close is safe to call between uses."""
+        self._q.join()
+        with self._lock:
+            t = self._thread
+            if t is None:
+                return
+            self._q.put(self._STOP)
+        t.join()
 
 
 def jsonable(obj):
@@ -225,7 +250,8 @@ class LLMBridge:
                  cache: SemanticCache, judge: Judge,
                  workload: Optional[Workload] = None,
                  config: ProxyConfig = ProxyConfig(), seed: int = 0,
-                 ledger: Optional[BudgetLedger] = None):
+                 ledger: Optional[BudgetLedger] = None,
+                 durability=None):
         self.pool = pool
         self.adapter = ModelAdapter(pool, workload=workload, seed=seed)
         self.context = context
@@ -234,6 +260,16 @@ class LLMBridge:
         self.workload = workload
         self.config = config
         self.rng = np.random.default_rng(seed + 1)
+        # crash-safe durability (core/durability.py): a Durability facade
+        # supplies the WAL-backed ledger, persists the semantic cache, and
+        # backs the idempotent-retry dedup window
+        self.durability = durability
+        if durability is not None:
+            if ledger is None:
+                ledger = (durability.ledger if durability.ledger is not None
+                          else durability.open_ledger())
+            if cache.persist is None:
+                durability.attach_cache(cache)
         self.ledger = ledger if ledger is not None else BudgetLedger()
         # the compiler: presets AND intents lower through the same path
         self.compiler = PolicyCompiler(config)
@@ -308,9 +344,45 @@ class LLMBridge:
                 "routing through their compiled PlanSpecs for now.",
                 DeprecationWarning, stacklevel=3)
 
+    # -- durable identity + idempotent retries ---------------------------------
+    def _crash_hit(self, name: str) -> None:
+        if self.durability is not None:
+            self.durability.crash.hit(name)
+
+    def _prepare(self, req: ProxyRequest) -> Optional[ProxyResponse]:
+        """Stamp the request's durable identity and consult the
+        idempotent-retry window.  A client-supplied id that already settled
+        returns the recorded outcome (the replay response — zero cost, no
+        re-execution); a fresh id returns None and the request executes."""
+        if req.request_id is None:
+            req.request_id = _new_request_id()
+            return None
+        if self.durability is not None:
+            outcome = self.durability.lookup(req.request_id)
+            if outcome is not None:
+                return self._dedup_response(req, outcome)
+        return None
+
+    def _dedup_response(self, req: ProxyRequest,
+                        outcome: Dict[str, Any]) -> ProxyResponse:
+        md = Metadata(
+            model_used=outcome.get("model", ""),
+            policy=outcome.get("policy", ""),
+            cache_hit=bool(outcome.get("cache_hit", False)),
+            context_strategy="idempotent_replay",
+            request_id=req.request_id or "",
+            idempotent_replay=True)
+        md.budget_remaining = self.ledger.remaining(req.user)
+        md.ledger_tier = self.ledger.tier(req.user)
+        return ProxyResponse(text=outcome.get("text", ""), metadata=md,
+                             request=req)
+
     # -- main entry ------------------------------------------------------------
     def request(self, req: ProxyRequest) -> ProxyResponse:
         self._warn_legacy(req)
+        replay = self._prepare(req)
+        if replay is not None:
+            return replay
         state = self._state_for(req)
         try:
             state.policy.pipeline.run(self, state)
@@ -336,6 +408,16 @@ class LLMBridge:
         backpressures the decode loop against a slow consumer.
         """
         self._warn_legacy(req)
+        replay = self._prepare(req)
+        if replay is not None:
+            # dropped-SSE retry: replay the recorded outcome as one chunk
+            sink = TokenStream(maxsize=buffer)
+            if replay.text:
+                sink.emit(replay.text)
+            replay.metadata.stream = True
+            sink.close(response=replay)
+            yield from sink
+            return
         state = self._state_for(req)
         sink = TokenStream(maxsize=buffer)
         state.stream = sink
@@ -370,16 +452,24 @@ class LLMBridge:
         concurrently in-flight requests, so members do not observe each
         other's context writes.
         """
-        states: List[RequestState] = []
+        out: List[Optional[ProxyResponse]] = [None] * len(reqs)
+        live: List[Tuple[int, RequestState]] = []
         try:
-            for r in reqs:
-                states.append(self._state_for(r))
+            for i, r in enumerate(reqs):
+                replay = self._prepare(r)
+                if replay is not None:
+                    out[i] = replay
+                    continue
+                live.append((i, self._state_for(r)))
         except BaseException:
             # a failed compile must not leak earlier requests' holds
-            for s in states:
+            for _, s in live:
                 self._release_hold(s)
             raise
-        return self._run_states(states)
+        resps = self._run_states([s for _, s in live])
+        for (i, _), resp in zip(live, resps):
+            out[i] = resp
+        return out
 
     def _run_states(self, states: Sequence[RequestState],
                     path: str = "request_batch") -> List[ProxyResponse]:
@@ -406,7 +496,9 @@ class LLMBridge:
         fields, ledger settle, stats, context append.  ``query_tokens=False``
         preserves the historical regenerate behaviour of appending context
         without the planted token count."""
+        self._crash_hit("proxy.finalize.pre")
         req, resp, policy = state.req, state.response, state.policy
+        resp.metadata.request_id = req.request_id or ""
         resp.metadata.service_type = ("intent" if req.is_intent
                                       else req.service_type.value)
         resp.metadata.pipeline_stages = list(state.stages_run)
@@ -415,6 +507,13 @@ class LLMBridge:
             resp.metadata.policy = policy.name
             resp.metadata.budget_tier = policy.tier
         self._settle(state, resp)
+        if (self.durability is not None and req.request_id
+                and resp.metadata.model_used not in ("none", "timeout",
+                                                     "error")
+                and not resp.metadata.shed_reason):
+            # only real answers enter the dedup window — a client retrying
+            # a timeout/decline/provider error must re-execute, not replay
+            self.durability.record_outcome(req.request_id, resp)
         resp.metadata.budget_remaining = self.ledger.remaining(req.user)
         resp.metadata.ledger_tier = self.ledger.tier(req.user)
         spec = self.adapter.serving_stats.get(resp.metadata.model_used)
@@ -454,22 +553,34 @@ class LLMBridge:
         response usage for v1 compatibility, but real money to the ledger;
         the compile-time cache reserve covers it)."""
         self._release_hold(state)
+        rid = state.req.request_id
         if state.miss_usage.cost:
-            self.ledger.charge(state.req.user, state.miss_usage.cost)
+            self.ledger.charge(state.req.user, state.miss_usage.cost,
+                               key=f"{rid}#consult" if rid else None)
         self._charge_response(resp)
 
     def _release_hold(self, state: RequestState) -> None:
         if state.policy is not None and state.policy.reserved:
-            self.ledger.release(state.req.user, state.policy.reserved)
+            self.ledger.release(state.req.user, state.policy.reserved,
+                                rid=state.req.request_id)
             state.policy.reserved = 0.0
 
     def _charge_response(self, resp: ProxyResponse) -> None:
         """Post ``resp``'s usage cost to the ledger exactly once, even when
-        async prefetch tops the usage up after the response returned."""
+        async prefetch tops the usage up after the response returned.  Each
+        incremental charge carries its own idempotence key (rid, rid#x1,
+        rid#x2, ...) so WAL replay after a crash also posts each exactly
+        once."""
         with self._ledger_lock:
             delta = resp.metadata.usage.cost - resp._ledger_charged
             if delta:
-                self.ledger.charge(resp.request.user, delta)
+                rid = resp.request.request_id
+                key = None
+                if rid:
+                    key = (rid if resp._charge_seq == 0
+                           else f"{rid}#x{resp._charge_seq}")
+                self.ledger.charge(resp.request.user, delta, key=key)
+                resp._charge_seq += 1
                 resp._ledger_charged += delta
 
     # -- fair admission (batch-forming front-end) ------------------------------
@@ -537,6 +648,35 @@ class LLMBridge:
         responses in dispatch order."""
         return [t.result() for t in self.admission.drain()]
 
+    # -- lifecycle -------------------------------------------------------------
+    def begin_drain(self) -> None:
+        """Graceful-drain entry (SIGTERM): pin the overload controller at
+        SHED so the front door answers 503 + Retry-After while in-flight
+        requests finish and settle their realized tokens."""
+        self.overload.force_level(LoadLevel.SHED)
+
+    def close(self) -> None:
+        """Shut the bridge down cleanly: join the background prefetch
+        worker and the admission dispatch worker (fixing the daemon-thread
+        leak when one process builds many bridges), then flush the WAL
+        journals and write final snapshots.  Idempotent."""
+        try:
+            self._prefetch.flush(raise_errors=False)
+        finally:
+            self._prefetch.close()
+            if self._admission is not None:
+                self._admission.close()
+            if self.durability is not None:
+                self.durability.flush()
+                self.durability.close()
+
+    def __enter__(self) -> "LLMBridge":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # -- telemetry -------------------------------------------------------------
     def flush_prefetch(self) -> None:
         """Join the background prefetch queue (deterministic-test hook)."""
@@ -576,6 +716,9 @@ class LLMBridge:
         }
         if self._admission is not None:
             out["admission"] = self._admission.stats()
+        if self.durability is not None:
+            # journal/snapshot/recovery disclosure (core/durability.py)
+            out["durability"] = self.durability.stats()
         return out
 
     def stage_cdf(self, path: str, stage: str
@@ -643,6 +786,7 @@ class LLMBridge:
         if out_tokens_override is not None:
             # a wall-deadline-truncated decode charges what it generated
             out_tokens = out_tokens_override
+        self._crash_hit("proxy.resolve.pre")
         try:
             if resolution_override is not None:
                 res = resolution_override
@@ -781,6 +925,9 @@ class LLMBridge:
         compiler-produced pipeline composition, so escalation composes with
         caching and batching instead of living in a per-type if/else."""
         req = resp.request
+        # a regenerate is a new billable run: fresh durable identity, so its
+        # WAL charges/holds never collide with the original's keys
+        req.request_id = _new_request_id()
         if resp.metadata.context_strategy != "declined":
             # initial answer leaves context (§5.1); declines never entered it
             self.context.pop_last(req.conversation)

@@ -32,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import signal
 import time
 import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -58,10 +59,25 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
         def log_message(self, fmt, *args):   # quiet: the demo prints stats
             pass
 
+        def handle_one_request(self):
+            self._rid_hdr = None       # fresh identity per keep-alive request
+            super().handle_one_request()
+
         # -- helpers ---------------------------------------------------------
         def _request_id(self) -> str:
+            """Durable per-request identity: honor a client-supplied
+            ``Idempotency-Key`` / ``x-request-id`` header (the idempotent-
+            retry key — re-sending it replays the recorded outcome instead
+            of double-charging), else generate one.  Echoed on EVERY
+            response: 2xx, error envelopes, and the SSE preamble.  Cached
+            per request — ``handle_one_request`` resets it, because one
+            handler instance serves every request on a keep-alive
+            connection."""
             if getattr(self, "_rid_hdr", None) is None:
-                self._rid_hdr = f"req_{uuid.uuid4().hex[:16]}"
+                supplied = (self.headers.get("Idempotency-Key")
+                            or self.headers.get("x-request-id") or "").strip()
+                self._rid_hdr = (supplied[:128] if supplied
+                                 else f"req_{uuid.uuid4().hex[:16]}")
             return self._rid_hdr
 
         def _json(self, code: int, payload, headers=None) -> None:
@@ -129,6 +145,8 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
             except (ValueError, TypeError, KeyError) as e:
                 self._error(400, f"bad request: {e}")
                 return
+            # the durable identity feeds the proxy's WAL + dedup window
+            preq.request_id = self._request_id()
             rid = f"chatcmpl-{int(time.time() * 1000):x}"
             created = int(time.time())
             try:
@@ -180,24 +198,62 @@ def make_server(bridge, host: str = "127.0.0.1", port: int = 8000
     return ThreadingHTTPServer((host, port), Handler)
 
 
-def serve_http(host: str, port: int) -> None:
-    """Build a SIM-pool bridge and serve the OpenAI surface until ^C.
+def install_drain_handler(bridge, server, grace: float = 2.0) -> bool:
+    """SIGTERM → graceful drain: the overload controller pins to SHED (the
+    front door answers 503 + ``Retry-After``), in-flight requests finish and
+    settle their realized tokens, then the serve loop exits and ``close``
+    writes the final snapshots.  ``grace`` keeps the accept loop alive for a
+    window after the signal so late arrivals (a load balancer that has not
+    yet deregistered the pod) get the structured 503 instead of a hung
+    connection.  Returns False when not on the main thread (tests run the
+    server on a worker thread; they drain explicitly)."""
+    def _drain(signum, frame):
+        bridge.begin_drain()
+        # shutdown() off-thread after the grace window: serve_forever keeps
+        # answering (503 for new work) until it returns — close() then
+        # flushes + snapshots
+        import threading
+
+        def _stop():
+            time.sleep(grace)
+            server.shutdown()
+
+        threading.Thread(target=_stop, daemon=True).start()
+    try:
+        signal.signal(signal.SIGTERM, _drain)
+        return True
+    except ValueError:          # not on the main thread
+        return False
+
+
+def serve_http(host: str, port: int, data_dir=None) -> None:
+    """Build a SIM-pool bridge and serve the OpenAI surface until ^C/SIGTERM.
 
     The front door runs with overload control ON: under sustained load the
     bridge browns out (degrade -> cache-only -> shed) and this surface
-    answers 429/503 + ``Retry-After`` instead of queueing unboundedly."""
+    answers 429/503 + ``Retry-After`` instead of queueing unboundedly.
+    With ``data_dir`` the bridge is crash-safe (WAL ledger + persistent
+    cache) and SIGTERM drains gracefully: shed new work, settle in-flight,
+    fsync journals, final snapshot."""
     from repro.core import build_bridge
-    bridge = build_bridge()
+    bridge = build_bridge(data_dir=data_dir)
     bridge.enable_overload()
     server = make_server(bridge, host=host, port=port)
+    install_drain_handler(bridge, server)
     bound = server.server_address
     print(f"LLMBridge OpenAI-compatible surface on http://{bound[0]}:{bound[1]}/v1")
     print("  POST /v1/chat/completions   (stream: true -> SSE)")
     print("  GET  /v1/models")
+    if data_dir is not None:
+        print(f"  durable state in {data_dir} (SIGTERM drains gracefully)")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
+        bridge.begin_drain()
         server.shutdown()
+    finally:
+        server.server_close()
+        bridge.close()
 
 
 # -- scheduler demo -----------------------------------------------------------
@@ -263,9 +319,12 @@ def main() -> None:
                     help="serve the OpenAI-compatible surface instead of "
                          "the scheduler demo")
     ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--data-dir", default=None, metavar="DIR",
+                    help="durable state directory (WAL ledger + persistent "
+                         "semantic cache + graceful SIGTERM drain)")
     args = ap.parse_args()
     if args.http is not None:
-        serve_http(args.host, args.http)
+        serve_http(args.host, args.http, data_dir=args.data_dir)
     else:
         demo(args)
 

@@ -1,0 +1,458 @@
+"""Crash-safe durability: WAL framing, ledger recovery, exactly-once
+settlement, persistent semantic cache, idempotent retries, graceful
+close/drain, and the HTTP ``Idempotency-Key`` surface."""
+import http.client
+import json
+import threading
+
+import pytest
+
+from repro.core import (CachedType, Constraints, Durability, Journal,
+                        Preference, ProxyRequest, Workload, WorkloadConfig,
+                        build_bridge)
+from repro.core.durability import _HDR
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=4, turns_per_conversation=8,
+                                   seed=13))
+
+
+def _req(q, user="du", rid=None, **cons):
+    return ProxyRequest(prompt=q.text, user=user, query=q, request_id=rid,
+                        update_context=False, preference=Preference.COST_FIRST,
+                        constraints=Constraints(allow_cache=False,
+                                                allow_prefetch=False, **cons))
+
+
+# -- journal framing -----------------------------------------------------------
+
+class TestJournal:
+    def test_append_scan_roundtrip(self, tmp_path):
+        j = Journal(tmp_path / "t.wal", tag="t")
+        j.scan()                               # scan opens for append
+        for i in range(5):
+            j.append({"op": "x", "i": i})
+        j.close()
+        j2 = Journal(tmp_path / "t.wal", tag="t")
+        recs = j2.scan()
+        assert [r["i"] for r in recs] == list(range(5))
+        assert [r["seq"] for r in recs] == [1, 2, 3, 4, 5]
+        assert j2.seq == 5                     # appends continue the sequence
+        assert j2.append({"op": "x", "i": 5}) == 6
+        j2.close()
+
+    def test_torn_tail_is_truncated(self, tmp_path):
+        j = Journal(tmp_path / "t.wal", tag="t")
+        j.scan()
+        for i in range(3):
+            j.append({"op": "x", "i": i})
+        j.close()
+        with open(tmp_path / "t.wal", "ab") as f:
+            f.write(_HDR.pack(999, 0) + b'{"half')    # torn mid-payload
+        j2 = Journal(tmp_path / "t.wal", tag="t")
+        recs = j2.scan()
+        assert len(recs) == 3 and j2.truncated_bytes > 0
+        j2.close()
+        # the truncation is persistent: a third scan sees a clean file
+        j3 = Journal(tmp_path / "t.wal", tag="t")
+        assert len(j3.scan()) == 3 and j3.truncated_bytes == 0
+        j3.close()
+
+    def test_corrupt_crc_stops_replay(self, tmp_path):
+        j = Journal(tmp_path / "t.wal", tag="t")
+        j.scan()
+        for i in range(4):
+            j.append({"op": "x", "i": i})
+        j.close()
+        buf = bytearray((tmp_path / "t.wal").read_bytes())
+        # flip one payload byte in the third frame
+        off = 0
+        for _ in range(2):
+            length, _crc = _HDR.unpack_from(buf, off)
+            off += _HDR.size + length
+        buf[off + _HDR.size + 2] ^= 0xFF
+        (tmp_path / "t.wal").write_bytes(bytes(buf))
+        j2 = Journal(tmp_path / "t.wal", tag="t")
+        assert [r["i"] for r in j2.scan()] == [0, 1]   # frames 3+4 dropped
+        j2.close()
+
+    def test_reset_keeps_sequence(self, tmp_path):
+        j = Journal(tmp_path / "t.wal", tag="t")
+        j.scan()
+        j.append({"op": "x"})
+        j.append({"op": "x"})
+        j.reset()
+        assert j.records_since_reset == 0
+        assert j.append({"op": "x"}) == 3     # seq survives compaction
+        j.close()
+
+
+# -- ledger durability ---------------------------------------------------------
+
+class TestLedgerRecovery:
+    def test_restart_reconstructs_balances(self, tmp_path):
+        d = Durability(tmp_path)
+        led = d.open_ledger()
+        led.set_budget("a", 5.0)
+        led.top_up("a", 1.0)
+        led.hold("a", 2.0, rid="r1")
+        led.charge("a", 0.75, key="r1")
+        led.release("a", 2.0, rid="r1")
+        led.charge("b", 0.25, key="r2")
+        d.close(final_snapshot=False)          # recover from the WAL alone
+
+        d2 = Durability(tmp_path)
+        led2 = d2.open_ledger()
+        assert led2.remaining("a") == pytest.approx(6.0 - 0.75)
+        assert led2.spent("a") == pytest.approx(0.75)
+        assert led2.spent("b") == pytest.approx(0.25)
+        assert led2.recovery["replayed_records"] == 6
+        d2.close()
+
+    def test_exactly_once_settlement(self, tmp_path):
+        d = Durability(tmp_path)
+        led = d.open_ledger()
+        assert led.charge("u", 1.0, key="k1") is True
+        assert led.charge("u", 1.0, key="k1") is False   # duplicate skipped
+        assert led.spent("u") == pytest.approx(1.0)
+        d.close(final_snapshot=False)
+        d2 = Durability(tmp_path)
+        led2 = d2.open_ledger()
+        assert led2.spent("u") == pytest.approx(1.0)     # replayed once
+        assert led2.charge("u", 1.0, key="k1") is False  # key survives restart
+        assert led2.spent("u") == pytest.approx(1.0)
+        d2.close()
+
+    def test_stranded_hold_released_on_recovery(self, tmp_path):
+        d = Durability(tmp_path)
+        led = d.open_ledger()
+        led.set_budget("u", 1.0)
+        led.hold("u", 0.8, rid="dead")         # settle never lands: "crash"
+        d.close(final_snapshot=False)
+        d2 = Durability(tmp_path)
+        led2 = d2.open_ledger()
+        assert led2.recovery["recovered_holds"]["count"] == 1
+        assert "dead" in led2.recovery["recovered_holds"]["rids"]
+        assert led2._held.get("u", 0.0) == 0.0
+        assert led2.remaining("u") == pytest.approx(1.0)  # budget intact
+        d2.close()
+
+    def test_snapshot_compacts_and_recovery_uses_tail(self, tmp_path):
+        d = Durability(tmp_path, ledger_snapshot_every=10)
+        led = d.open_ledger()
+        for i in range(25):                    # crosses two snapshot marks
+            led.charge("u", 0.01, key=f"k{i}")
+        assert led.n_snapshots >= 2
+        assert led._journal.records_since_reset < 10
+        tail = led._journal.records_since_reset
+        d.close(final_snapshot=False)
+        d2 = Durability(tmp_path)
+        led2 = d2.open_ledger()
+        assert led2.spent("u") == pytest.approx(0.25)
+        # replay cost bounded by the tail, not the 25-record history
+        assert led2.recovery["replayed_records"] == tail
+        assert led2.recovery["snapshot_seq"] > 0
+        d2.close()
+
+    def test_dedup_window_survives_restart(self, tmp_path):
+        d = Durability(tmp_path)
+        led = d.open_ledger()
+        led.record_outcome("r9", {"text": "answer", "cost": 0.1})
+        assert led.settled("r9")
+        d.close()
+        d2 = Durability(tmp_path)
+        led2 = d2.open_ledger()
+        assert led2.outcome("r9") == {"text": "answer", "cost": 0.1}
+        d2.close()
+
+
+# -- bridge-level idempotent retries ------------------------------------------
+
+class TestIdempotentRetry:
+    def test_retry_replays_without_double_charge(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        q = workload.queries[0]
+        r1 = b.request(_req(q, rid="cli-1"))
+        spent = b.ledger.spent("du")
+        assert spent > 0 and r1.metadata.request_id == "cli-1"
+        assert not r1.metadata.idempotent_replay
+
+        r2 = b.request(_req(q, rid="cli-1"))
+        assert r2.metadata.idempotent_replay
+        assert r2.text == r1.text
+        assert r2.metadata.model_used == r1.metadata.model_used
+        assert b.ledger.spent("du") == pytest.approx(spent)  # no second bill
+        b.close()
+
+    def test_retry_survives_restart(self, tmp_path, workload):
+        with build_bridge(workload=workload, data_dir=str(tmp_path)) as b:
+            q = workload.queries[1]
+            r1 = b.request(_req(q, rid="cli-2"))
+            spent = b.ledger.spent("du")
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        r2 = b2.request(_req(q, rid="cli-2"))
+        assert r2.metadata.idempotent_replay and r2.text == r1.text
+        assert b2.ledger.spent("du") == pytest.approx(spent)
+        b2.close()
+
+    def test_batch_mixes_replays_and_fresh(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        qs = workload.queries[:3]
+        first = b.request(_req(qs[0], rid="m-0"))
+        out = b.request_batch([_req(qs[0], rid="m-0"),
+                               _req(qs[1], rid="m-1"),
+                               _req(qs[2], rid="m-2")])
+        assert out[0].metadata.idempotent_replay and out[0].text == first.text
+        assert not out[1].metadata.idempotent_replay
+        assert not out[2].metadata.idempotent_replay
+        assert [r.metadata.request_id for r in out] == ["m-0", "m-1", "m-2"]
+        b.close()
+
+    def test_stream_retry_replays_same_text(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        q = workload.queries[2]
+        text1 = "".join(c.text for c in b.request_stream(_req(q, rid="s-1")))
+        spent = b.ledger.spent("du")
+        chunks = list(b.request_stream(_req(q, rid="s-1")))
+        assert "".join(c.text for c in chunks) == text1
+        assert chunks[-1].final
+        assert chunks[-1].response.metadata.idempotent_replay
+        assert b.ledger.spent("du") == pytest.approx(spent)
+        b.close()
+
+    def test_auto_ids_are_unique_and_disclosed(self, workload):
+        b = build_bridge(workload=workload)
+        rs = [b.request(_req(q)) for q in workload.queries[:3]]
+        rids = [r.metadata.request_id for r in rs]
+        assert all(r.startswith("req_") for r in rids)
+        assert len(set(rids)) == 3
+        assert all(not r.metadata.idempotent_replay for r in rs)
+        b.close()
+
+    def test_failures_are_not_replayed(self, tmp_path, workload):
+        # a declined/timeout outcome must NOT enter the dedup window: the
+        # client's retry deserves a fresh execution, not the stored failure
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        q = workload.queries[0]
+        r1 = b.request(_req(q, rid="f-1", max_latency=1e-9))
+        assert r1.metadata.model_used in ("none", "timeout", "error")
+        r2 = b.request(_req(q, rid="f-1"))     # retry without the bad deadline
+        assert not r2.metadata.idempotent_replay
+        assert r2.metadata.model_used not in ("none", "timeout", "error")
+        b.close()
+
+
+# -- cache persistence ---------------------------------------------------------
+
+class TestCachePersistence:
+    def test_rows_and_exact_survive_restart(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        for i, q in enumerate(workload.queries[:6]):
+            b.cache.put(q.text + " grounding facts. " * 4,
+                        [(CachedType.CHUNK, q.text)], meta={"i": i},
+                        rid=f"p{i}")
+        b.cache.put_exact("probe-prompt", "probe-response", rid="pe")
+        rows = len(b.cache.store)
+        assert rows == 6
+        b.close()
+
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        assert len(b2.cache.store) == rows
+        assert b2.cache._exact["probe-prompt"] == "probe-response"
+        assert b2.cache.store.restored_rows == rows
+        st = b2.cache.store.index_stats()
+        assert st["restored_rows"] == rows and st["last_restore_s"] >= 0
+        rec = b2.cache.persist.recovery
+        assert rec["restored_rows"] == rows and rec["recovery_time_s"] < 30
+        b2.close()
+
+    def test_warm_restart_matches_hit_rate(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        for q in workload.queries[::2]:
+            b.cache.put(q.text + " background. " * 4,
+                        [(CachedType.CHUNK, q.text)], rid=f"w-{q.qid}")
+
+        def hits(bridge):
+            n = 0
+            for q in workload.queries[:12]:
+                r = bridge.request(ProxyRequest(
+                    prompt=q.text, user="wh", query=q, update_context=False,
+                    preference=Preference.COST_FIRST,
+                    constraints=Constraints(allow_cache=True)))
+                n += bool(r.metadata.cache_hit)
+            return n
+
+        warm0 = hits(b)
+        b.close()
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        assert hits(b2) == warm0               # restarted pod: same hit-rate
+        b2.close()
+        cold = build_bridge(workload=workload)
+        assert hits(cold) < warm0              # cold pod demonstrably worse
+        cold.close()
+
+    def test_put_rid_is_idempotent(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        q = workload.queries[0]
+        b.cache.put(q.text + " body", [(CachedType.CHUNK, q.text)], rid="dup")
+        rows = len(b.cache.store)
+        assert b.cache.put(q.text + " body", [(CachedType.CHUNK, q.text)],
+                           rid="dup") == []
+        assert len(b.cache.store) == rows
+        b.close()
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        assert b2.cache.put(q.text + " body", [(CachedType.CHUNK, q.text)],
+                            rid="dup") == []   # rid window survives restart
+        assert len(b2.cache.store) == rows
+        b2.close()
+
+    def test_snapshot_then_tail_replay(self, tmp_path, workload):
+        d = Durability(tmp_path, cache_snapshot_every=4)
+        b = build_bridge(workload=workload, durability=d)
+        for i, q in enumerate(workload.queries[:10]):
+            b.cache.put(q.text + " snap body", [(CachedType.CHUNK, q.text)],
+                        rid=f"s{i}")
+        assert d.cache_persist.n_snapshots >= 2
+        rows = len(b.cache.store)
+        d.flush()
+        d.close(final_snapshot=False)          # recovery = snapshot + tail
+
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        rec = b2.cache.persist.recovery
+        assert rec["rows"] == rows
+        assert 0 < rec["restored_rows"] < rows  # tail came from the journal
+        assert rec["replayed_records"] > 0
+        b2.close()
+
+
+# -- lifecycle: close / context manager / drain --------------------------------
+
+class TestLifecycle:
+    def test_close_joins_worker_threads(self, workload):
+        b = build_bridge(workload=workload)
+        q = workload.queries[0]
+        b.request(ProxyRequest(prompt=q.text, user="lc", query=q,
+                               preference=Preference.COST_FIRST,
+                               constraints=Constraints(allow_prefetch=True)))
+        b.close()
+        assert b._prefetch._thread is None     # no daemon-thread leak
+        b.close()                              # idempotent
+
+    def test_context_manager_closes(self, workload):
+        with build_bridge(workload=workload) as b:
+            assert b.request(_req(workload.queries[0])).text
+        assert b._prefetch._thread is None
+
+    def test_begin_drain_sheds_new_work(self, workload):
+        from repro.core.overload import LoadLevel, OverloadError
+        b = build_bridge(workload=workload)
+        b.begin_drain()
+        assert b.overload.level is LoadLevel.SHED
+        with pytest.raises(OverloadError) as ei:
+            b.overload.admit("any")
+        assert ei.value.retry_after > 0
+        b.close()
+
+    def test_close_writes_final_snapshot(self, tmp_path, workload):
+        b = build_bridge(workload=workload, data_dir=str(tmp_path))
+        b.request(_req(workload.queries[0], rid="fs-1"))
+        b.close()
+        assert (tmp_path / "ledger.snap.json").exists()
+        b2 = build_bridge(workload=workload, data_dir=str(tmp_path))
+        # snapshot absorbed the WAL: restart replays (nearly) nothing
+        assert b2.ledger.recovery["replayed_records"] == 0
+        b2.close()
+
+
+# -- HTTP front door: Idempotency-Key surface ---------------------------------
+
+@pytest.fixture(scope="module")
+def durable_server(tmp_path_factory):
+    from repro.launch.serve import make_server
+    root = tmp_path_factory.mktemp("serve-durable")
+    bridge = build_bridge(data_dir=str(root))
+    srv = make_server(bridge, port=0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    yield srv.server_address, bridge
+    srv.shutdown()
+    bridge.close()
+
+
+def _post(addr, payload, headers=None):
+    conn = http.client.HTTPConnection(*addr, timeout=30)
+    h = {"Content-Type": "application/json"}
+    h.update(headers or {})
+    conn.request("POST", "/v1/chat/completions", json.dumps(payload), h)
+    return conn.getresponse()
+
+
+class TestHTTPIdempotency:
+    MSG = [{"role": "user", "content": "durable http probe"}]
+
+    def test_request_id_echoed_on_success(self, durable_server):
+        addr, _ = durable_server
+        r = _post(addr, {"model": "auto", "user": "h1",
+                         "x_preference": "cost_first", "messages": self.MSG})
+        assert r.status == 200
+        rid = r.getheader("x-request-id")
+        assert rid and rid.startswith("req_")
+        body = json.loads(r.read())
+        assert body["x_llmbridge"]["request_id"] == rid
+
+    def test_client_key_echoed_and_deduped(self, durable_server):
+        addr, bridge = durable_server
+        hdr = {"Idempotency-Key": "client-key-77"}
+        r1 = _post(addr, {"model": "auto", "user": "h2",
+                          "x_preference": "cost_first",
+                          "messages": self.MSG}, headers=hdr)
+        assert r1.getheader("x-request-id") == "client-key-77"
+        b1 = json.loads(r1.read())
+        spent = bridge.ledger.spent("h2")
+        r2 = _post(addr, {"model": "auto", "user": "h2",
+                          "x_preference": "cost_first",
+                          "messages": self.MSG}, headers=hdr)
+        b2 = json.loads(r2.read())
+        assert b2["x_llmbridge"]["idempotent_replay"] is True
+        assert (b2["choices"][0]["message"]["content"]
+                == b1["choices"][0]["message"]["content"])
+        assert bridge.ledger.spent("h2") == pytest.approx(spent)
+
+    def test_request_id_echoed_on_400(self, durable_server):
+        addr, _ = durable_server
+        r = _post(addr, {"model": "auto", "messages": []},
+                  headers={"x-request-id": "bad-req-id"})
+        assert r.status == 400
+        assert r.getheader("x-request-id") == "bad-req-id"
+        r.read()
+
+    def test_request_id_echoed_on_sse(self, durable_server):
+        addr, _ = durable_server
+        r = _post(addr, {"model": "auto", "user": "h3", "stream": True,
+                         "x_preference": "cost_first", "messages": self.MSG},
+                  headers={"x-request-id": "sse-key-1"})
+        assert r.status == 200
+        assert r.getheader("x-request-id") == "sse-key-1"
+        assert b"[DONE]" in r.read()
+
+    def test_drain_sheds_503_with_retry_after(self, tmp_path):
+        from repro.launch.serve import make_server
+        bridge = build_bridge(data_dir=str(tmp_path / "drain"))
+        srv = make_server(bridge, port=0)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        try:
+            bridge.begin_drain()
+            r = _post(srv.server_address,
+                      {"model": "auto", "user": "h4",
+                       "messages": self.MSG})
+            assert r.status == 503
+            assert int(r.getheader("Retry-After")) >= 1
+            body = json.loads(r.read())
+            assert body["error"]["code"] == "load_shed"
+            assert r.getheader("x-request-id")
+        finally:
+            srv.shutdown()
+            bridge.close()

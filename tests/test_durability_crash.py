@@ -1,0 +1,145 @@
+"""Kill-anywhere recovery: parametrize over every named crash point, kill the
+simulated process there, restart from the surviving files, retry everything,
+and assert the end state is indistinguishable from a run that never crashed —
+no double-charge, no lost settle, no stranded holds, same cache rows."""
+import pytest
+
+from repro.core import (CACHE_CRASH_POINTS, LEDGER_CRASH_POINTS,
+                        PROXY_CRASH_POINTS, CachedType, Constraints,
+                        Durability, Preference, ProxyRequest, SimulatedCrash,
+                        Workload, WorkloadConfig, build_bridge)
+
+N_REQ = 6
+BUDGET = 1.0
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return Workload(WorkloadConfig(n_conversations=3, turns_per_conversation=6,
+                                   seed=17))
+
+
+def _req(q, i):
+    return ProxyRequest(prompt=q.text, user="cu", query=q,
+                        request_id=f"crash-{i}", update_context=False,
+                        preference=Preference.COST_FIRST,
+                        constraints=Constraints(allow_cache=False,
+                                                allow_prefetch=False))
+
+
+def _durability(root, **kw):
+    # small compaction thresholds so the snapshot crash points actually fire
+    kw.setdefault("ledger_snapshot_every", 12)
+    kw.setdefault("cache_snapshot_every", 4)
+    return Durability(root, **kw)
+
+
+def _run_all(bridge, workload):
+    """Send every request; returns (spent, texts). Raises on simulated kill."""
+    texts = []
+    for i, q in enumerate(workload.queries[:N_REQ]):
+        texts.append(bridge.request(_req(q, i)).text)
+    return bridge.ledger.spent("cu"), texts
+
+
+@pytest.fixture(scope="module")
+def baseline(workload, tmp_path_factory):
+    """The continuous run every crash/restart/retry must reproduce."""
+    d = _durability(tmp_path_factory.mktemp("baseline"))
+    b = build_bridge(workload=workload, durability=d)
+    b.ledger.set_budget("cu", BUDGET)
+    spent, texts = _run_all(b, workload)
+    assert spent > 0
+    b.close()
+    return spent, texts
+
+
+def _arm_at(point):
+    # op-level points fire every request: crash mid-run.  Snapshot points
+    # fire once per compaction: take the first.
+    return 1 if ".snapshot." in point else 3
+
+
+@pytest.mark.parametrize("point", LEDGER_CRASH_POINTS + PROXY_CRASH_POINTS)
+def test_financial_invariants_survive_kill(point, workload, tmp_path,
+                                           baseline):
+    base_spent, base_texts = baseline
+    d = _durability(tmp_path)
+    d.crash.arm(point, at=_arm_at(point))
+    b = build_bridge(workload=workload, durability=d)
+    crashed = False
+    try:
+        b.ledger.set_budget("cu", BUDGET)
+        _run_all(b, workload)
+    except SimulatedCrash:
+        crashed = True
+    assert crashed, f"{point} never fired in {N_REQ} requests"
+    # the process is dead: no close(), no final snapshot — the directory is
+    # exactly what kill -9 left behind
+
+    d2 = _durability(tmp_path)
+    b2 = build_bridge(workload=workload, durability=d2)
+    rec = b2.ledger.recovery
+    assert b2.ledger._held.get("cu", 0.0) == pytest.approx(0.0)  # no strands
+    # never overdrawn at any point, including mid-recovery
+    assert b2.ledger.spent("cu") <= BUDGET + 1e-9
+
+    # client retries EVERYTHING with the same idempotency keys
+    texts = []
+    for i, q in enumerate(workload.queries[:N_REQ]):
+        texts.append(b2.request(_req(q, i)).text)
+
+    assert b2.ledger.spent("cu") == pytest.approx(base_spent), \
+        f"{point}: retried spend diverged (recovery={rec})"
+    assert texts == base_texts
+    assert b2.ledger._held.get("cu", 0.0) == pytest.approx(0.0)
+    b2.close()
+
+    # and the settled state itself survives another clean restart
+    d3 = _durability(tmp_path)
+    led3 = d3.open_ledger()
+    assert led3.spent("cu") == pytest.approx(base_spent)
+    d3.close()
+
+
+# -- cache crash points --------------------------------------------------------
+
+def _put_all(cache, workload):
+    for i, q in enumerate(workload.queries[:N_REQ]):
+        cache.put(q.text + " crash-harness body. " * 3,
+                  [(CachedType.CHUNK, q.text)], meta={"i": i}, rid=f"cp-{i}")
+        cache.put_exact(f"exact-{i}", f"resp-{i}", rid=f"ce-{i}")
+
+
+@pytest.fixture(scope="module")
+def cache_baseline(workload, tmp_path_factory):
+    d = _durability(tmp_path_factory.mktemp("cache-baseline"))
+    b = build_bridge(workload=workload, durability=d)
+    _put_all(b.cache, workload)
+    rows, exact = len(b.cache.store), dict(b.cache._exact)
+    b.close()
+    return rows, exact
+
+
+@pytest.mark.parametrize("point", CACHE_CRASH_POINTS)
+def test_cache_state_survives_kill(point, workload, tmp_path, cache_baseline):
+    base_rows, base_exact = cache_baseline
+    d = _durability(tmp_path)
+    d.crash.arm(point, at=_arm_at(point))
+    b = build_bridge(workload=workload, durability=d)
+    crashed = False
+    try:
+        _put_all(b.cache, workload)
+    except SimulatedCrash:
+        crashed = True
+    assert crashed, f"{point} never fired in {N_REQ} puts"
+
+    d2 = _durability(tmp_path)
+    b2 = build_bridge(workload=workload, durability=d2)
+    _put_all(b2.cache, workload)          # rid-keyed: re-puts are no-ops
+    assert len(b2.cache.store) == base_rows
+    assert dict(b2.cache._exact) == base_exact
+    # restored rows answer queries: same hit behaviour as the clean run
+    hits = b2.cache.get(workload.queries[0].text)
+    assert hits and hits[0].payload.meta["i"] == 0
+    b2.close()

@@ -1,0 +1,185 @@
+"""Property tests for the durability layer (skipped at collection when
+hypothesis is absent — see conftest).
+
+The two contracts the WAL must honor under ANY crash/replay interleaving:
+
+* replay is idempotent — recovering from any byte-prefix of the journal,
+  once or twice, yields the same ledger state;
+* settlement is exactly-once and holds never overdraw — duplicate charge
+  keys post once, ``try_hold`` refuses what the budget cannot cover, and
+  both survive recovery from an arbitrary prefix.
+"""
+import tempfile
+import zlib
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Durability
+from repro.core.durability import _HDR
+
+USERS = ["u1", "u2"]
+KEYS = ["k1", "k2", "k3", "k4", "k5"]
+BUDGET = 5.0
+
+# one ledger mutation: (op, user, amount, key)
+OPS = st.tuples(
+    st.sampled_from(["budget", "topup", "hold", "release", "charge",
+                     "outcome"]),
+    st.sampled_from(USERS),
+    st.floats(0.0, 2.0, allow_nan=False, width=32),
+    st.sampled_from(KEYS),
+)
+
+
+def _apply_op(led, op):
+    kind, user, amount, key = op
+    if kind == "budget":
+        led.set_budget(user, amount)
+    elif kind == "topup":
+        led.top_up(user, amount)
+    elif kind == "hold":
+        led.hold(user, amount, rid=key)
+    elif kind == "release":
+        led.release(user, amount, rid=key)
+    elif kind == "charge":
+        led.charge(user, amount, key=f"{user}/{key}")
+    elif kind == "outcome":
+        led.record_outcome(key, {"text": f"t-{key}", "cost": amount})
+
+
+def _frame_offsets(path: Path):
+    """Byte offset after each intact frame (0 = empty prefix)."""
+    buf = path.read_bytes()
+    offs, off = [0], 0
+    while off + _HDR.size <= len(buf):
+        length, crc = _HDR.unpack_from(buf, off)
+        end = off + _HDR.size + length
+        if end > len(buf) or zlib.crc32(buf[off + _HDR.size:end]) != crc:
+            break
+        off = end
+        offs.append(off)
+    return offs
+
+
+def _recover_state(root):
+    d = Durability(root)
+    led = d.open_ledger()
+    state = (dict(led._budgets), dict(led._spent), dict(led._held),
+             sorted(led._applied), dict(led._outcomes))
+    d.close(final_snapshot=False)
+    return state
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(OPS, min_size=1, max_size=25))
+def test_replay_any_prefix_is_idempotent(ops):
+    """For EVERY prefix of the journal (any kill point, frame-aligned or
+    torn mid-frame): recovering once and recovering twice agree, and the
+    recovered spend matches replaying the surviving records by hand."""
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        d = Durability(root)
+        led = d.open_ledger()
+        for op in ops:
+            _apply_op(led, op)
+        d.close(final_snapshot=False)
+        wal = (root / "ledger.wal").read_bytes()
+        offs = _frame_offsets(root / "ledger.wal")
+
+        for i, off in enumerate(offs):
+            with tempfile.TemporaryDirectory() as tmp2:
+                r2 = Path(tmp2)
+                # crash state: the first i frames, plus torn garbage beyond
+                (r2 / "ledger.wal").write_bytes(wal[:off] + wal[off:off + 7])
+                once = _recover_state(r2)
+                twice = _recover_state(r2)
+                assert once == twice
+                # holds never survive recovery; spend is the record replay
+                _, spent, held, _, _ = once
+                assert held == {}
+                ref = {}
+                for op in ops[:i]:
+                    if op[0] == "charge":
+                        # first charge per key posts, duplicates do not
+                        k = f"{op[1]}/{op[3]}"
+                        if k not in ref.setdefault("_keys", set()):
+                            ref["_keys"].add(k)
+                            ref[op[1]] = ref.get(op[1], 0.0) + op[2]
+                ref.pop("_keys", None)
+                for u in USERS:
+                    assert spent.get(u, 0.0) == pytest.approx(ref.get(u, 0.0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seq=st.lists(
+    st.tuples(st.sampled_from(["try_hold", "charge", "settle"]),
+              st.floats(0.01, 2.0, allow_nan=False, width=32),
+              st.sampled_from(KEYS)),
+    min_size=1, max_size=30))
+def test_exactly_once_and_never_overdrawn(seq):
+    """Duplicate charge keys post exactly once; try_hold refuses exactly
+    when the reference model says the budget cannot cover it; the invariants
+    survive recovery from an arbitrary frame prefix."""
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        d = Durability(root)
+        led = d.open_ledger()
+        led.set_budget("u", BUDGET)
+        spent, held, applied = 0.0, 0.0, set()
+        for kind, amount, key in seq:
+            if kind == "try_hold":
+                ok = led.try_hold("u", amount, rid=key)
+                can = BUDGET - spent - held >= amount - 1e-9
+                assert ok == can
+                if ok:
+                    held += amount
+            elif kind == "charge":
+                posted = led.charge("u", amount, key=key)
+                assert posted == (key not in applied)
+                if posted:
+                    applied.add(key)
+                    spent += amount
+            else:  # settle: release what is held for this rid
+                led.release("u", amount, rid=key)
+                held -= amount
+            assert led.spent("u") == pytest.approx(spent)
+        d.close(final_snapshot=False)
+
+        # kill at an arbitrary frame boundary and recover: the replayed
+        # charges are a prefix subset, each posted exactly once
+        offs = _frame_offsets(root / "ledger.wal")
+        wal = (root / "ledger.wal").read_bytes()
+        with tempfile.TemporaryDirectory() as tmp2:
+            r2 = Path(tmp2)
+            (r2 / "ledger.wal").write_bytes(wal[:offs[len(offs) // 2]])
+            d2 = Durability(r2)
+            led2 = d2.open_ledger()
+            assert led2.spent("u") <= spent + 1e-9
+            assert led2._held == {}                 # stranded holds released
+            for key in sorted(led2._applied):
+                assert led2.charge("u", 1.0, key=key) is False   # still once
+            assert led2.spent("u") <= spent + 1e-9
+            d2.close(final_snapshot=False)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(OPS, min_size=5, max_size=60),
+       every=st.integers(4, 12))
+def test_recovery_with_compaction_is_idempotent(ops, every):
+    """With snapshots interleaved (compaction resets the WAL), recovery is
+    still a pure function of the directory: twice ≡ once, and the recovered
+    spend equals the live ledger's at close."""
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        d = Durability(root, ledger_snapshot_every=every)
+        led = d.open_ledger()
+        for op in ops:
+            _apply_op(led, op)
+        live_spent = dict(led._spent)
+        d.close(final_snapshot=False)
+        once = _recover_state(root)
+        twice = _recover_state(root)
+        assert once == twice
+        assert once[1] == pytest.approx(live_spent)
